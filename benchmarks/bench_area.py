@@ -1,0 +1,72 @@
+"""Fig-8 reproduction: area vs #profiles for the four scenarios (§4.1).
+
+Reports the hardware cost model (bit-comparator equivalents, % of a
+Virtex-4 LX200) per scenario × query count × path length, plus the
+measured TPU analogue (transition-table bytes) — see DESIGN.md §2 for why
+FPGA area maps to a model + bytes, not to a TPU-native metric.
+"""
+from __future__ import annotations
+
+from repro.core.area import SCENARIOS, area_report, engine_table_bytes
+from repro.core.dictionary import TagDictionary
+from repro.core.nfa import compile_queries
+from repro.data.generator import DTD, gen_profiles
+
+QUERY_COUNTS = (16, 64, 256, 1024)
+PATH_LENGTHS = (2, 4, 6)
+
+
+def run(query_counts=QUERY_COUNTS, path_lengths=PATH_LENGTHS, seed=0):
+    rows = []
+    for plen in path_lengths:
+        dtd = DTD.generate(n_tags=24, seed=seed)
+        for n in query_counts:
+            d = TagDictionary()
+            dtd.register(d)
+            qs = gen_profiles(dtd, n=n, length=plen, p_desc=0.3,
+                              p_wild=0.05, seed=seed + plen)
+            for sc in SCENARIOS:
+                rep = area_report(qs, d, sc)
+                rows.append({
+                    "bench": "fig8_area",
+                    "scenario": sc,
+                    "path_len": plen,
+                    "n_queries": n,
+                    "n_states": rep.n_states,
+                    "bit_cost": rep.bit_cost,
+                    "chip_pct": round(100 * rep.chip_fraction, 2),
+                })
+            nfa = compile_queries(qs, d, shared=True)
+            tb = engine_table_bytes(nfa)
+            rows.append({
+                "bench": "fig8_tpu_bytes",
+                "scenario": "levelwise/streaming",
+                "path_len": plen,
+                "n_queries": n,
+                "levelwise_tables_B": tb["levelwise_tables"],
+                "streaming_tables_B": tb["streaming_tables"],
+                "streaming_stack_B": tb["streaming_stack"],
+            })
+    return rows
+
+
+def summarize(rows):
+    """Headline: Unop → Com-P-CharDec improvement factor (paper: 5–7×)."""
+    out = []
+    for plen in PATH_LENGTHS:
+        for n in QUERY_COUNTS:
+            sel = {r["scenario"]: r for r in rows
+                   if r["bench"] == "fig8_area"
+                   and r["path_len"] == plen and r["n_queries"] == n}
+            if len(sel) == len(SCENARIOS):
+                f = sel["Unop"]["bit_cost"] / sel["Com-P-CharDec"]["bit_cost"]
+                out.append({"bench": "fig8_factor", "path_len": plen,
+                            "n_queries": n,
+                            "unop_over_comp_chardec": round(f, 2)})
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    for r in run() + summarize(run()):
+        print(json.dumps(r))

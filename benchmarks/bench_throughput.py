@@ -1,0 +1,95 @@
+"""Fig-9 reproduction: filtering throughput, hardware engines vs YFilter.
+
+The paper streams 1–8 MB documents against 16–1024 profiles and reports
+MB/s: the FPGA is ~100× the software YFilter and throughput degrades
+gently with profile count.  We reproduce the *experiment* on this
+container's CPU: the python YFilter baseline vs the JAX engines
+(levelwise batched / streaming scan / matmul-kernel path).  Absolute
+numbers are CPU-bound; the *shape* of the comparison (orders of magnitude
+over the scalar software path, slope vs #profiles) is the reproduced
+claim; EXPERIMENTS.md §Paper-Fig9 reports both and the §Roofline section
+projects TPU v5e throughput.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.dictionary import TagDictionary
+from repro.core.engines.levelwise import LevelwiseEngine, levelize_batch
+from repro.core.engines.streaming import StreamingEngine
+from repro.core.engines.yfilter import YFilterEngine
+from repro.core.events import event_stream_nbytes
+from repro.core.nfa import compile_queries
+from repro.data.generator import DTD, gen_corpus, gen_profiles
+
+TEXT_FILL = 8  # emulate element text content in the byte-size accounting
+
+
+def _mb(docs) -> float:
+    return sum(event_stream_nbytes(d, TEXT_FILL) for d in docs) / 1e6
+
+
+def _time(fn, repeat=3) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(query_counts=(16, 64, 256, 1024), path_lengths=(2, 4, 6),
+        n_docs=16, nodes_per_doc=400, seed=0, engines=("yfilter",
+                                                       "levelwise",
+                                                       "wavefront",
+                                                       "streaming")):
+    rows = []
+    for plen in path_lengths:
+        dtd = DTD.generate(n_tags=24, seed=seed)
+        docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=nodes_per_doc,
+                          seed=seed)
+        mb = _mb(docs)
+        for nq in query_counts:
+            d = TagDictionary()
+            dtd.register(d)
+            qs = gen_profiles(dtd, n=nq, length=plen, seed=seed + plen)
+            nfa = compile_queries(qs, d, shared=True)
+            row = {"bench": "fig9_throughput", "path_len": plen,
+                   "n_queries": nq, "doc_mb": round(mb, 3),
+                   "n_states": nfa.n_states}
+            if "yfilter" in engines:
+                eng_y = YFilterEngine(nfa)
+                t = _time(lambda: eng_y.filter_documents(docs), repeat=1)
+                row["yfilter_mb_s"] = round(mb / t, 3)
+            if "levelwise" in engines:
+                eng_l = LevelwiseEngine(nfa)
+                eng_l.filter_documents_batched(docs)  # compile warmup
+                t = _time(lambda: eng_l.filter_documents_batched(docs))
+                row["levelwise_mb_s"] = round(mb / t, 3)
+            if "wavefront" in engines:
+                from repro.core.engines.levelwise import WavefrontEngine
+                eng_w = WavefrontEngine(nfa, chunk=128)
+                eng_w.filter_documents_batched(docs)  # compile warmup
+                t = _time(lambda: eng_w.filter_documents_batched(docs))
+                row["wavefront_mb_s"] = round(mb / t, 3)
+            if "streaming" in engines:
+                eng_s = StreamingEngine(nfa, max_depth=32)
+                n = max(len(doc) for doc in docs)
+                kind = np.stack([doc.padded(n).kind for doc in docs])
+                tag = np.stack([doc.padded(n).tag_id for doc in docs])
+                eng_s.filter_documents_batched(kind, tag)  # warmup
+                t = _time(lambda: eng_s.filter_documents_batched(kind, tag))
+                row["streaming_mb_s"] = round(mb / t, 3)
+            if "yfilter" in engines and "levelwise" in engines:
+                row["speedup_levelwise_vs_yfilter"] = round(
+                    row["levelwise_mb_s"] / row["yfilter_mb_s"], 2)
+            rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    for r in run():
+        print(json.dumps(r))

@@ -1,0 +1,81 @@
+"""Roofline analysis from dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+This container cannot measure TPU wall time, so the three roofline terms
+are *derived* from the compiled dry-run artifacts that
+``launch/dryrun.py`` writes to ``artifacts/dryrun/*.json``:
+
+  compute_s    = HLO_FLOPs  / (chips × 197e12 FLOP/s)     (bf16 v5e)
+  memory_s     = HLO_bytes  / (chips × 819e9 B/s)         (HBM)
+  collective_s = coll_bytes / (chips × 50e9  B/s)         (per-link ICI)
+
+``coll_bytes`` is parsed from the HLO text: the summed operand bytes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+The dominant term is the bottleneck the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+
+
+def terms(flops: float, bytes_: float, coll_bytes: float, chips: int,
+          model_flops: float | None = None) -> dict:
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = bytes_ / (chips * HBM_BW)
+    coll_s = coll_bytes / (chips * ICI_BW)
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])
+    out = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "bottleneck": dom[0],
+        "bound_s": dom[1],
+    }
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flop_frac"] = model_flops / flops if flops else 0.0
+        # fraction of roofline: useful work at peak over the bound time
+        out["roofline_frac"] = (model_flops / (chips * PEAK_FLOPS)) / dom[1] \
+            if dom[1] > 0 else 0.0
+    return out
+
+
+def rows_from_artifacts(art_dir: str = ARTIFACT_DIR) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            a = json.load(f)
+        if a.get("status") != "ok":
+            rows.append({"bench": "roofline", "cell": a.get("cell"),
+                         "status": a.get("status"),
+                         "error": str(a.get("error"))[:200]})
+            continue
+        t = terms(a["flops"], a["bytes_accessed"], a["collective_bytes"],
+                  a["chips"], a.get("model_flops"))
+        rows.append({
+            "bench": "roofline",
+            "cell": a["cell"],
+            "mesh": a["mesh"],
+            "chips": a["chips"],
+            "flops": a["flops"],
+            "bytes": a["bytes_accessed"],
+            "coll_bytes": a["collective_bytes"],
+            "per_device_hbm_peak_B": a.get("per_device_hbm_peak"),
+            **{k: (round(v, 6) if isinstance(v, float) else v)
+               for k, v in t.items()},
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in rows_from_artifacts():
+        print(json.dumps(r))

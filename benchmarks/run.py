@@ -1,0 +1,64 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+
+Sections:
+  fig8   — area model, 4 scenarios (paper Fig 8)
+  fig9   — filtering throughput vs YFilter baseline (paper Fig 9)
+  twig   — twig-pattern filtering cost structure (paper §5 extension)
+  roofline — 3-term roofline per (arch × shape) from dry-run artifacts
+             (only if launch/dryrun.py results exist; see EXPERIMENTS.md)
+
+Output: JSON-lines to stdout (one row per measurement).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slower)")
+    ap.add_argument("--only", default=None,
+                    help="run a single section: fig8|fig9|roofline")
+    args = ap.parse_args()
+
+    sections = [args.only] if args.only else ["fig8", "fig9", "twig",
+                                              "roofline"]
+    rows = []
+
+    if "fig8" in sections:
+        from benchmarks import bench_area
+        r = bench_area.run()
+        rows += r + bench_area.summarize(r)
+
+    if "fig9" in sections:
+        from benchmarks import bench_throughput
+        if args.full:
+            rows += bench_throughput.run(n_docs=32, nodes_per_doc=2000)
+        else:
+            rows += bench_throughput.run(
+                query_counts=(16, 64, 256), path_lengths=(2, 4),
+                n_docs=8, nodes_per_doc=200)
+
+    if "twig" in sections:
+        from benchmarks import bench_twig
+        rows += bench_twig.run(n_docs=24 if args.full else 10,
+                               nodes_per_doc=300 if args.full else 120)
+
+    if "roofline" in sections:
+        from benchmarks import roofline
+        rows += roofline.rows_from_artifacts()
+
+    for r in rows:
+        print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

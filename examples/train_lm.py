@@ -1,0 +1,31 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps on
+the XML-filtered byte stream (pub-sub ingest → tokenize → train), with
+checkpoint/restart enabled.
+
+This is `repro.launch.train` parameterized to ~100M: qwen3-family reduced
+to d_model=512, 12 layers, byte vocab.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+    sys.argv = [
+        "train", "--arch", "qwen3-0.6b", "--reduced",
+        "--d-model", "512", "--layers", "12",
+        "--steps", str(args.steps), "--batch", "8", "--seq-len", "128",
+        "--data-filter", "--ckpt-dir", args.ckpt_dir,
+    ]
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Twig-pattern pub-sub — the paper's §5 future work, working.
+
+Twig profiles (tree-shaped patterns with branch predicates) are filtered
+with the paper's own sketched architecture: decompose into root-to-leaf
+paths → all paths share ONE prefix-tree NFA (so the twig trunk is
+evaluated once) → survivors verified exactly (false-positive
+elimination).  Reports the stage-2 work so the decomposition's
+false-positive rate — the cost the paper worried about — is visible.
+
+Run:  PYTHONPATH=src python examples/twig_filtering.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.dictionary import TagDictionary
+from repro.core.twig import TwigFilter, decompose, parse_twig
+from repro.data.generator import DTD, gen_corpus
+
+dtd = DTD.generate(n_tags=24, seed=3)
+d = TagDictionary()
+dtd.register(d)
+
+# twig subscriptions over the DTD's tag space
+rng = np.random.default_rng(0)
+names = dtd.tag_names
+twigs = []
+for i in range(48):
+    a, b, c = rng.choice(24, 3, replace=False)
+    kind = i % 3
+    if kind == 0:
+        twigs.append(f"{names[a]}[//{names[b]}][//{names[c]}]")
+    elif kind == 1:
+        twigs.append(f"{names[a]}[{names[b]}]//{names[c]}")
+    else:
+        twigs.append(f"{names[a]}//{names[b]}")   # linear control group
+
+n_paths = sum(len(decompose(parse_twig(t))) for t in twigs)
+docs = gen_corpus(dtd, n_docs=24, nodes_per_doc=300, seed=7)
+f = TwigFilter(twigs, d, engine="levelwise")
+print(f"{len(twigs)} twig profiles → {n_paths} decomposed paths → "
+      f"{f.nfa.n_states} shared NFA states")
+
+t0 = time.perf_counter()
+n_match = 0
+for doc in docs:
+    res = f.filter_document(doc)
+    n_match += int(res.matched.sum())
+dt = time.perf_counter() - t0
+checks, rejects = f.stats["stage2_checks"], f.stats["stage2_rejects"]
+print(f"{len(docs)} documents in {dt:.2f}s: {n_match} twig deliveries")
+print(f"stage-2 (join/verify): {checks} candidate checks, "
+      f"{rejects} false positives eliminated "
+      f"({100*rejects/max(checks,1):.0f}% of candidates — the paper's "
+      f"§5 concern, measured)")

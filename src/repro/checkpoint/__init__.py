@@ -1,0 +1,2 @@
+"""Sharded checkpointing with manifest, async writes, elastic restore."""
+from .store import CheckpointStore  # noqa: F401

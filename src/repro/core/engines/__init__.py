@@ -1,0 +1,22 @@
+"""Filtering engines.
+
+Five interchangeable implementations of the paper's filtering semantics:
+
+* :mod:`.oracle`     — recursive tree-walk ground truth (pure python, tests).
+* :mod:`.yfilter`    — event-driven software baseline (the paper's §4
+  comparison system, reimplemented; pure python "von Neumann" path).
+* :mod:`.streaming`  — paper-faithful JAX engine: ``lax.scan`` over the
+  event stream with a bounded stack of packed state bitmasks (the FPGA
+  datapath: every state advances each event, stack push/pop on open/close).
+* :mod:`.levelwise`  — TPU-native engine: the stack is virtualized into
+  precomputed (depth, parent) structure; the NFA advances level-by-level,
+  every node of a level in parallel, transitions as one-hot matmuls.
+* :mod:`.matscan`    — paper-literal regex semantics (§3.2) as per-event
+  0/1 transition matrices composed with ``associative_scan`` (MXU form).
+
+All engines consume :class:`repro.core.nfa.NFA` tables and
+:class:`repro.core.events.EventStream` documents and report, per query:
+``matched`` and the event index of the first match (the paper reports the
+match location, §4).
+"""
+from .result import FilterResult  # noqa: F401

@@ -1,0 +1,455 @@
+"""TPU-native levelwise engine.
+
+The FPGA streams one symbol per clock because its parallelism is *spatial*
+(all queries advance each clock).  A TPU's parallelism is *data* parallel,
+so we restructure the same NFA semantics:
+
+1. The document's structure — per-node ``(depth, parent)`` — is computed
+   up-front (prefix sums / one host pass), *virtualizing the stack away*:
+   the paper's TOS is simply "the parent node's active set".
+2. Nodes are bucketed by depth into a dense ``(max_depth, width)`` layout.
+3. The NFA advances **level by level**: every node of a level computes its
+   active-state vector from its parent's vector *in parallel* —
+   ``O(depth)`` sequential steps instead of ``O(events)``.
+
+Per level the transition is two small matmuls plus a mask (the Pallas
+kernel :mod:`repro.kernels.nfa_transition` implements exactly this):
+
+    tagmatch = onehot(tags) @ REQ + wild          # §3.4 pre-decoder on MXU
+    src      = parent_active @ P                  # parent-pointer gather
+    next     = (src * tagmatch + parent_active * selfloop) > 0
+
+The engine also has a gather/compare path (``use_matmul=False``) that maps
+to VPU ops — the "no pre-decoder" scenario; §Perf compares both.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..events import OPEN, EventStream
+from ..nfa import NFA, WILD_TAG, pad_states
+from .result import NO_MATCH, FilterResult
+
+
+# --------------------------------------------------------------------- prep
+@dataclass
+class LevelDoc:
+    """Depth-major dense bucketing of a document's OPEN events."""
+
+    tags: np.ndarray         # (D, Wmax) int32, -1 padding
+    parent_slot: np.ndarray  # (D, Wmax) int32 — slot in level d-1; Wmax ⇒ root
+    valid: np.ndarray        # (D, Wmax) bool
+    event_idx: np.ndarray    # (D, Wmax) int32 — original event position
+    n_events: int
+
+    @property
+    def depth(self) -> int:
+        return int(self.tags.shape[0])
+
+    @property
+    def width(self) -> int:
+        return int(self.tags.shape[1])
+
+    def padded(self, depth: int, width: int) -> "LevelDoc":
+        if depth < self.depth or width < self.width:
+            raise ValueError("cannot shrink")
+        tags = np.full((depth, width), -1, np.int32)
+        parent = np.full((depth, width), width, np.int32)
+        valid = np.zeros((depth, width), bool)
+        eidx = np.zeros((depth, width), np.int32)
+        d, w = self.depth, self.width
+        tags[:d, :w] = self.tags
+        # re-point root sentinel (old Wmax) to new sentinel (new width)
+        parent[:d, :w] = np.where(self.parent_slot == w, width, self.parent_slot)
+        valid[:d, :w] = self.valid
+        eidx[:d, :w] = self.event_idx
+        return LevelDoc(tags, parent, valid, eidx, self.n_events)
+
+
+def levelize(ev: EventStream) -> LevelDoc:
+    """Host-side structure pass (the 'tokenizer' of this engine).
+
+    One linear sweep — this is data preparation, the analogue of the
+    paper's host streaming the document into the board.
+    """
+    kind, tag = ev.kind, ev.tag_id
+    n = len(ev)
+    depth_of: list[list[int]] = []   # per level: node slots in doc order
+    tags_l: list[list[int]] = []
+    parent_l: list[list[int]] = []
+    eidx_l: list[list[int]] = []
+    stack: list[int] = []  # slot of each open ancestor within its level
+    for i in range(n):
+        k = kind[i]
+        if k == OPEN:
+            d = len(stack)  # 0-based level
+            while len(depth_of) <= d:
+                depth_of.append([])
+                tags_l.append([])
+                parent_l.append([])
+                eidx_l.append([])
+            slot = len(depth_of[d])
+            depth_of[d].append(slot)
+            tags_l[d].append(int(tag[i]))
+            parent_l[d].append(stack[-1] if stack else -1)
+            eidx_l[d].append(i)
+            stack.append(slot)
+        elif k == 1:  # CLOSE
+            if stack:
+                stack.pop()
+    d_max = max(1, len(depth_of))
+    w_max = max(1, max((len(x) for x in depth_of), default=1))
+    tags = np.full((d_max, w_max), -1, np.int32)
+    parent = np.full((d_max, w_max), w_max, np.int32)
+    valid = np.zeros((d_max, w_max), bool)
+    eidx = np.zeros((d_max, w_max), np.int32)
+    for d in range(len(depth_of)):
+        w = len(depth_of[d])
+        tags[d, :w] = tags_l[d]
+        # level 0 nodes point at the root sentinel row (index w_max)
+        parent[d, :w] = [p if p >= 0 else w_max for p in parent_l[d]]
+        valid[d, :w] = True
+        eidx[d, :w] = eidx_l[d]
+    return LevelDoc(tags, parent, valid, eidx, n)
+
+
+def levelize_batch(docs: list[EventStream]) -> LevelDoc:
+    """Pad a batch of documents to common (D, W); stacks along axis 0."""
+    ls = [levelize(d) for d in docs]
+    dm = max(l.depth for l in ls)
+    wm = max(l.width for l in ls)
+    ls = [l.padded(dm, wm) for l in ls]
+    return LevelDoc(
+        np.stack([l.tags for l in ls]),
+        np.stack([l.parent_slot for l in ls]),
+        np.stack([l.valid for l in ls]),
+        np.stack([l.event_idx for l in ls]),
+        max(l.n_events for l in ls),
+    )
+
+
+# ------------------------------------------------------------------- engine
+@dataclass(frozen=True)
+class LevelTables:
+    in_state: jax.Array    # (S,) int32
+    in_tag: jax.Array      # (S,) int32
+    selfloop: jax.Array    # (S,) f32 0/1
+    init: jax.Array        # (S,) f32 0/1
+    accept_state: jax.Array  # (Q,) int32
+    req: jax.Array         # (T, S) f32 one-hot tag→state (pre-decoder table)
+    wild: jax.Array        # (S,) f32
+    parent_1h: jax.Array   # (S, S) f32 parent-pointer matrix
+    n_states: int
+    n_tags: int
+
+
+def build_tables(nfa: NFA, lane: int = 128) -> LevelTables:
+    nfa = pad_states(nfa, lane)
+    t = nfa.tables
+    return LevelTables(
+        in_state=jnp.asarray(t.in_state),
+        in_tag=jnp.asarray(t.in_tag),
+        selfloop=jnp.asarray(t.selfloop.astype(np.float32)),
+        init=jnp.asarray(t.init.astype(np.float32)),
+        accept_state=jnp.asarray(t.accept_state),
+        req=jnp.asarray(nfa.req_matrix()),
+        wild=jnp.asarray(nfa.wild_vector()),
+        parent_1h=jnp.asarray(nfa.parent_onehot()),
+        n_states=t.in_state.shape[0],
+        n_tags=nfa.n_tags,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "n_tags",
+                                             "use_matmul", "use_kernel"))
+def _run_level(tags, parent_slot, valid, event_idx,
+               in_state, in_tag, selfloop, init, accept_state, req, wild,
+               parent_1h, *, n_states: int, n_tags: int,
+               use_matmul: bool, use_kernel: bool):
+    d_max, w_max = tags.shape
+    n_q = accept_state.shape[0]
+
+    def level(carry, xs):
+        prev, matched, first = carry     # prev: (Wmax+1, S) f32 (row Wmax=root)
+        tg, psel, vld, eidx = xs
+        parent_rows = jnp.take(prev, psel, axis=0)       # (W, S)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            nxt = kops.nfa_transition(parent_rows, tg, req, wild, parent_1h,
+                                      selfloop)
+        elif use_matmul:
+            onehot = jax.nn.one_hot(tg, n_tags, dtype=jnp.float32)  # (W, T)
+            tagmatch = onehot @ req + wild[None, :]                 # (W, S)
+            src = parent_rows @ parent_1h                           # (W, S)
+            nxt = jnp.minimum(src * tagmatch + parent_rows * selfloop[None, :],
+                              1.0)
+        else:
+            tagmatch = ((in_tag[None, :] == tg[:, None])
+                        | (in_tag == WILD_TAG)[None, :]).astype(jnp.float32)
+            src = jnp.take(parent_rows, in_state, axis=1)
+            nxt = jnp.minimum(src * tagmatch + parent_rows * selfloop[None, :],
+                              1.0)
+        nxt = nxt * vld[:, None].astype(jnp.float32)
+        acc = jnp.take(nxt, accept_state, axis=1) > 0    # (W, Q)
+        acc = acc & vld[:, None]
+        ev_for_q = jnp.where(acc, eidx[:, None], NO_MATCH)
+        first = jnp.minimum(first, ev_for_q.min(axis=0))
+        matched = matched | acc.any(axis=0)
+        prev_next = jnp.concatenate([nxt, init[None, :]], axis=0)
+        return (prev_next, matched, first), None
+
+    prev0 = jnp.concatenate(
+        [jnp.zeros((w_max, n_states), jnp.float32), init[None, :]], axis=0)
+    carry0 = (prev0, jnp.zeros(n_q, bool), jnp.full(n_q, NO_MATCH, jnp.int32))
+    (prev, matched, first), _ = jax.lax.scan(
+        level, carry0, (tags, parent_slot, valid, event_idx))
+    return matched, first
+
+
+# ------------------------------------------------------ wavefront engine
+@dataclass
+class ChunkDoc:
+    """Chunked wavefront layout: levels split into fixed-width chunks.
+
+    Rectangular (D, Wmax) bucketing wastes work when level widths are
+    skewed (measured 5–10× padding on ToXGene-like corpora — see
+    EXPERIMENTS.md §Perf-filter).  Here each level is split into chunks
+    of width C; chunk i owns rows [i·C, (i+1)·C) of a flat node buffer
+    and parents are *global* padded indices into that buffer, so the
+    engine runs Σ⌈w_d/C⌉ dense steps with ≤C padding per level.
+    """
+
+    tags: np.ndarray         # (n_chunks, C) int32, -1 pad
+    parent_idx: np.ndarray   # (n_chunks, C) int32 — global padded index;
+    #                           buffer_len ⇒ virtual root row
+    valid: np.ndarray        # (n_chunks, C) bool
+    event_idx: np.ndarray    # (n_chunks, C) int32
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.tags.shape[0])
+
+    @property
+    def chunk(self) -> int:
+        return int(self.tags.shape[1])
+
+
+def chunkize(ev: EventStream, chunk: int = 128) -> ChunkDoc:
+    ld = levelize(ev)
+    d_max, w_max = ld.tags.shape
+    # chunks per level and level→base-chunk mapping
+    widths = ld.valid.sum(axis=1)
+    n_per = [max(1, int(-(-w // chunk))) for w in widths]
+    base = np.concatenate([[0], np.cumsum(n_per)[:-1]])
+    n_chunks = int(sum(n_per))
+    buf_len = n_chunks * chunk
+
+    def gpos(d: int, slot: np.ndarray) -> np.ndarray:
+        return ((base[d] + slot // chunk) * chunk + slot % chunk).astype(
+            np.int32)
+
+    tags = np.full((n_chunks, chunk), -1, np.int32)
+    parent = np.full((n_chunks, chunk), buf_len, np.int32)
+    valid = np.zeros((n_chunks, chunk), bool)
+    eidx = np.zeros((n_chunks, chunk), np.int32)
+    for d in range(d_max):
+        w = int(widths[d])
+        if w == 0:
+            continue
+        slots = np.arange(w)
+        g = gpos(d, slots)
+        ci, cj = g // chunk, g % chunk
+        tags[ci, cj] = ld.tags[d, :w]
+        p = ld.parent_slot[d, :w]
+        parent[ci, cj] = np.where(p == w_max, buf_len,
+                                  gpos(d - 1, np.clip(p, 0, None)))
+        valid[ci, cj] = True
+        eidx[ci, cj] = ld.event_idx[d, :w]
+    return ChunkDoc(tags, parent, valid, eidx)
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "n_tags"))
+def _run_wavefront(tags, parent_idx, valid, event_idx,
+                   in_state, in_tag, selfloop, init, accept_state,
+                   *, n_states: int, n_tags: int):
+    """Boolean-state wavefront (§Perf-filter iteration 2: 0/1 state lanes
+    as bool — 4× less buffer traffic than f32; the MXU/kernel path keeps
+    f32 for matmul form, this is the VPU/CPU path)."""
+    n_chunks, c = tags.shape
+    n_q = accept_state.shape[0]
+    buf_len = n_chunks * c
+    selfloop_b = selfloop > 0
+    init_b = init > 0
+    buf0 = jnp.zeros((buf_len + 1, n_states), bool)
+    buf0 = buf0.at[buf_len].set(init_b)
+
+    def step(carry, xs):
+        buf, matched, first = carry
+        i, tg, pidx, vld, eidx = xs
+        parent_rows = jnp.take(buf, pidx, axis=0)          # (C, S) bool
+        tagmatch = ((in_tag[None, :] == tg[:, None])
+                    | (in_tag == WILD_TAG)[None, :])
+        src = jnp.take(parent_rows, in_state, axis=1)
+        nxt = (src & tagmatch) | (parent_rows & selfloop_b[None, :])
+        nxt = nxt & vld[:, None]
+        buf = jax.lax.dynamic_update_slice(buf, nxt, (i * c, 0))
+        acc = jnp.take(nxt, accept_state, axis=1) & vld[:, None]
+        first = jnp.minimum(
+            first, jnp.where(acc, eidx[:, None], NO_MATCH).min(axis=0))
+        matched = matched | acc.any(axis=0)
+        return (buf, matched, first), None
+
+    carry0 = (buf0, jnp.zeros(n_q, bool), jnp.full(n_q, NO_MATCH, jnp.int32))
+    (buf, matched, first), _ = jax.lax.scan(
+        step, carry0,
+        (jnp.arange(n_chunks, dtype=jnp.int32), tags, parent_idx, valid,
+         event_idx))
+    return matched, first
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "n_tags"))
+def _run_wavefront_kernel(tags, parent_idx, valid, event_idx,
+                          selfloop, init, accept_state, req, wild,
+                          parent_1h, *, n_states: int, n_tags: int):
+    """Wavefront with the Pallas transition kernel (MXU path, f32).
+
+    Same chunk structure as :func:`_run_wavefront`; the per-chunk
+    transition is the `nfa_transition` kernel (one-hot tag matmul +
+    parent-pointer matmul), i.e. the TPU production configuration."""
+    from repro.kernels import ops as kops
+    n_chunks, c = tags.shape
+    n_q = accept_state.shape[0]
+    buf_len = n_chunks * c
+    buf0 = jnp.zeros((buf_len + 1, n_states), jnp.float32)
+    buf0 = buf0.at[buf_len].set(init)
+
+    def step(carry, xs):
+        buf, matched, first = carry
+        i, tg, pidx, vld, eidx = xs
+        parent_rows = jnp.take(buf, pidx, axis=0)          # (C, S)
+        tg_masked = jnp.where(vld, tg, -1)
+        nxt = kops.nfa_transition(parent_rows, tg_masked, req, wild,
+                                  parent_1h, selfloop)
+        buf = jax.lax.dynamic_update_slice(buf, nxt, (i * c, 0))
+        acc = (jnp.take(nxt, accept_state, axis=1) > 0) & vld[:, None]
+        first = jnp.minimum(
+            first, jnp.where(acc, eidx[:, None], NO_MATCH).min(axis=0))
+        matched = matched | acc.any(axis=0)
+        return (buf, matched, first), None
+
+    carry0 = (buf0, jnp.zeros(n_q, bool), jnp.full(n_q, NO_MATCH, jnp.int32))
+    (buf, matched, first), _ = jax.lax.scan(
+        step, carry0,
+        (jnp.arange(n_chunks, dtype=jnp.int32), tags, parent_idx, valid,
+         event_idx))
+    return matched, first
+
+
+class WavefrontEngine:
+    """Chunked-wavefront levelwise engine (§Perf-filter iteration 1)."""
+
+    def __init__(self, nfa: NFA, chunk: int = 128,
+                 use_kernel: bool = False) -> None:
+        self.tables = build_tables(nfa)
+        self.n_queries = nfa.n_queries
+        self.chunk = chunk
+        self.use_kernel = use_kernel
+
+    def _call(self, cd_tags, cd_parent, cd_valid, cd_eidx):
+        t = self.tables
+        if self.use_kernel:
+            return _run_wavefront_kernel(
+                jnp.asarray(cd_tags), jnp.asarray(cd_parent),
+                jnp.asarray(cd_valid), jnp.asarray(cd_eidx),
+                t.selfloop, t.init, t.accept_state, t.req, t.wild,
+                t.parent_1h, n_states=t.n_states, n_tags=t.n_tags)
+        return _run_wavefront(
+            jnp.asarray(cd_tags), jnp.asarray(cd_parent),
+            jnp.asarray(cd_valid), jnp.asarray(cd_eidx),
+            t.in_state, t.in_tag, t.selfloop, t.init, t.accept_state,
+            n_states=t.n_states, n_tags=t.n_tags)
+
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        cd = chunkize(ev, self.chunk)
+        matched, first = self._call(cd.tags, cd.parent_idx, cd.valid,
+                                    cd.event_idx)
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
+        cds = [chunkize(d, self.chunk) for d in docs]
+        nc = max(c.n_chunks for c in cds)
+
+        def pad(c: ChunkDoc) -> ChunkDoc:
+            extra = nc - c.n_chunks
+            if extra == 0:
+                # re-point root rows: buffer length differs per doc only
+                # through n_chunks; keep as-is
+                return c
+            ck = c.chunk
+            # grow: valid=False chunks at the end; parent root sentinel
+            # must point at the NEW buffer end (nc*ck)
+            old_len = c.n_chunks * ck
+            parent = np.where(c.parent_idx == old_len, nc * ck,
+                              c.parent_idx)
+            return ChunkDoc(
+                np.concatenate([c.tags, np.full((extra, ck), -1, np.int32)]),
+                np.concatenate([parent,
+                                np.full((extra, ck), nc * ck, np.int32)]),
+                np.concatenate([c.valid, np.zeros((extra, ck), bool)]),
+                np.concatenate([c.event_idx,
+                                np.zeros((extra, ck), np.int32)]),
+            )
+
+        cds = [pad(c) for c in cds]
+        # fix root sentinel for docs that already had nc chunks
+        fixed = []
+        for c in cds:
+            parent = np.where(c.parent_idx >= nc * c.chunk, nc * c.chunk,
+                              c.parent_idx)
+            fixed.append(ChunkDoc(c.tags, parent, c.valid, c.event_idx))
+        fn = jax.vmap(self._call, in_axes=(0, 0, 0, 0))
+        matched, first = fn(
+            np.stack([c.tags for c in fixed]),
+            np.stack([c.parent_idx for c in fixed]),
+            np.stack([c.valid for c in fixed]),
+            np.stack([c.event_idx for c in fixed]))
+        matched, first = np.asarray(matched), np.asarray(first)
+        return [FilterResult(matched[i], first[i]) for i in range(len(docs))]
+
+
+class LevelwiseEngine:
+    def __init__(self, nfa: NFA, use_matmul: bool = True,
+                 use_kernel: bool = False) -> None:
+        self.tables = build_tables(nfa)
+        self.n_queries = nfa.n_queries
+        self.use_matmul = use_matmul
+        self.use_kernel = use_kernel
+
+    def _call(self, ld_tags, ld_parent, ld_valid, ld_eidx):
+        t = self.tables
+        return _run_level(
+            jnp.asarray(ld_tags), jnp.asarray(ld_parent),
+            jnp.asarray(ld_valid), jnp.asarray(ld_eidx),
+            t.in_state, t.in_tag, t.selfloop, t.init, t.accept_state,
+            t.req, t.wild, t.parent_1h,
+            n_states=t.n_states, n_tags=t.n_tags,
+            use_matmul=self.use_matmul, use_kernel=self.use_kernel)
+
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        ld = levelize(ev)
+        matched, first = self._call(ld.tags, ld.parent_slot, ld.valid,
+                                    ld.event_idx)
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
+        ld = levelize_batch(docs)
+        t = self.tables
+        fn = jax.vmap(self._call, in_axes=(0, 0, 0, 0))
+        matched, first = fn(ld.tags, ld.parent_slot, ld.valid, ld.event_idx)
+        matched, first = np.asarray(matched), np.asarray(first)
+        return [FilterResult(matched[i], first[i]) for i in range(len(docs))]

@@ -1,0 +1,133 @@
+"""Paper-literal regex semantics as associative matrix-product scans.
+
+§3.2 compiles ``a0//b0`` to the regex ``<a0>[\\w\\s]+[<\\c\\d>]*<b0>`` with
+an automatic *negation block* on ``</a0>``: progress made under an element
+is killed when that element closes.  This flat-stream semantics is exactly
+a regular language over the *event* alphabet, so each event is a small 0/1
+transition matrix and a whole document is the ordered product of its event
+matrices — which ``jax.lax.associative_scan`` evaluates in O(log n) depth
+with batched matmuls (the MXU replaces the FPGA's spatial pipeline).
+
+Scope (same as the paper's regex-only group, Fig 5 left): profiles whose
+non-leading axes are all ``//`` and with concrete tags.  The negation-block
+semantics is *approximate* on documents where a tag occurs again inside
+itself (the close of the inner occurrence kills outer progress) — the
+paper's hardware has the same behaviour; tests pin both the agreement on
+the exact document class and the known divergence.
+
+Prefix products also give the *first matching event* for free — the
+priority-encoder output of Fig 5.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dictionary import TagDictionary
+from ..events import CLOSE, OPEN, EventStream
+from ..nfa import WILD_TAG
+from ..xpath import CHILD, DESC, Query
+from .result import NO_MATCH, FilterResult
+
+
+class MatscanUnsupported(ValueError):
+    pass
+
+
+def _check_supported(q: Query) -> None:
+    if any(st.axis == CHILD for st in q.steps[1:]):
+        raise MatscanUnsupported(
+            f"{q.raw!r}: parent-child axis needs the stack group (Fig 5 right)")
+    if q.steps[0].axis == CHILD:
+        raise MatscanUnsupported(f"{q.raw!r}: root-anchored profile")
+    if any(st.tag == "*" for st in q.steps):
+        raise MatscanUnsupported(f"{q.raw!r}: wildcard tag test")
+
+
+class MatscanEngine:
+    """Batched per-query (k+1)×(k+1) transition-matrix scans."""
+
+    def __init__(self, queries: list[Query], dictionary: TagDictionary) -> None:
+        for q in queries:
+            _check_supported(q)
+        self.n_queries = len(queries)
+        self.kmax = max(q.length for q in queries)
+        km = self.kmax
+        # step_tags[q, i] = tag id of step i (or -1 past the end)
+        step_tags = np.full((len(queries), km), -1, np.int32)
+        for qi, q in enumerate(queries):
+            for i, st in enumerate(q.steps):
+                step_tags[qi, i] = dictionary.add(st.tag)
+        self.step_tags = jnp.asarray(step_tags)
+        # accept index per query = its own length
+        self.accept_idx = jnp.asarray(
+            np.array([q.length for q in queries], np.int32))
+
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def _matrices(self, kind: jax.Array, tag: jax.Array) -> jax.Array:
+        """(N,) events → (N, Q, k+1, k+1) int8 transition matrices."""
+        n = kind.shape[0]
+        q, km = self.step_tags.shape
+        eye = jnp.eye(km + 1, dtype=jnp.int8)
+        # OPEN: I + advance i→i+1 where step i+1's tag equals the event tag
+        adv = (self.step_tags[None, :, :] == tag[:, None, None])  # (N, Q, km)
+        open_m = jnp.zeros((n, q, km + 1, km + 1), jnp.int8)
+        idx = jnp.arange(km)
+        open_m = open_m.at[:, :, idx, idx + 1].set(adv.astype(jnp.int8))
+        open_m = open_m + eye
+        # CLOSE </t>: negation block — progress at or beyond the first step
+        # matching t collapses back to just before it.
+        occurs = (self.step_tags[None, :, :] == tag[:, None, None])
+        # first step index j (1-based) with tag t, km+1 if none
+        jpos = jnp.where(occurs, idx[None, None, :] + 1, km + 1).min(axis=-1)
+        rows = jnp.arange(km + 1)
+        # target[i] = i if i < j else j-1
+        tgt = jnp.where(rows[None, None, :] < jpos[:, :, None],
+                        rows[None, None, :], jpos[:, :, None] - 1)
+        close_m = jax.nn.one_hot(tgt, km + 1, dtype=jnp.int8)  # (N,Q,km+1,km+1)
+        is_open = (kind == OPEN)[:, None, None, None]
+        is_close = (kind == CLOSE)[:, None, None, None]
+        return jnp.where(is_open, open_m,
+                         jnp.where(is_close, close_m, eye[None, None]))
+
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def _scan(self, kind: jax.Array, tag: jax.Array):
+        mats = self._matrices(kind, tag).astype(jnp.int32)
+
+        def compose(a, b):
+            # ordered product: prefix(a) then b, saturated boolean semiring
+            return jnp.minimum(jnp.einsum("...ij,...jk->...ik", a, b), 1)
+
+        prefix = jax.lax.associative_scan(compose, mats, axis=0)
+        # v0 = e_0 ⇒ reached states = prefix[:, :, 0, :]
+        reach = prefix[:, :, 0, :]                       # (N, Q, km+1)
+        acc = jnp.take_along_axis(
+            reach, self.accept_idx[None, :, None], axis=-1)[..., 0]  # (N, Q)
+        hit = acc > 0
+        matched = hit.any(axis=0)
+        first = jnp.where(hit, jnp.arange(kind.shape[0])[:, None],
+                          NO_MATCH).min(axis=0)
+        return matched, first
+
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        matched, first = self._scan(jnp.asarray(ev.kind.astype(np.int32)),
+                                    jnp.asarray(ev.tag_id))
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+
+def exact_class(ev: EventStream) -> bool:
+    """True iff no tag re-occurs inside an open element with the same tag —
+    the document class where the paper's negation-block regex semantics is
+    exact w.r.t. tree semantics."""
+    stack: list[int] = []
+    for k, t in zip(ev.kind, ev.tag_id):
+        if k == OPEN:
+            if int(t) in stack:
+                return False
+            stack.append(int(t))
+        elif k == CLOSE and stack:
+            stack.pop()
+    return True

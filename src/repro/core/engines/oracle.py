@@ -1,0 +1,67 @@
+"""Ground-truth oracle: direct recursive XPath evaluation on the tree.
+
+Completely independent of the NFA construction — it checks the XPath
+semantics (axis chains with `/`, `//`, `*`) by dynamic programming over
+each root-to-node path.  Used only by tests and tiny demos.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..dictionary import TagDictionary
+from ..events import OPEN, EventStream
+from ..nfa import NFA, WILD_TAG
+from ..xpath import CHILD, Query, WILDCARD
+from .result import NO_MATCH, FilterResult
+
+
+def _resolve_steps(q: Query, dictionary: TagDictionary) -> list[tuple[int, int]]:
+    out = []
+    for st in q.steps:
+        tid = WILD_TAG if st.tag == WILDCARD else dictionary.tag_to_id.get(st.tag, -1)
+        out.append((st.axis, tid))
+    return out
+
+
+def _path_matches(path: list[int], steps: list[tuple[int, int]]) -> bool:
+    """steps match the full path with the last step at the last node."""
+    k, d = len(steps), len(path)
+    # g[i][j]: steps[:i] matches a chain ending exactly at path depth j
+    g = [[False] * (d + 1) for _ in range(k + 1)]
+    g[0][0] = True
+    for i in range(1, k + 1):
+        axis, tid = steps[i - 1]
+        anyprev = [False] * (d + 1)  # anyprev[j] = OR of g[i-1][0..j-1]
+        acc = False
+        for j in range(d + 1):
+            anyprev[j] = acc
+            acc = acc or g[i - 1][j]
+        for j in range(1, d + 1):
+            if tid != WILD_TAG and path[j - 1] != tid:
+                continue
+            g[i][j] = g[i - 1][j - 1] if axis == CHILD else anyprev[j]
+    return g[k][d]
+
+
+def filter_document(nfa: NFA, ev: EventStream,
+                    dictionary: TagDictionary) -> FilterResult:
+    """Evaluate every profile against the document, recursively."""
+    queries = [_resolve_steps(q, dictionary) for q in nfa.queries]
+    matched = np.zeros(len(queries), dtype=bool)
+    first = np.full(len(queries), NO_MATCH, dtype=np.int32)
+
+    path: list[int] = []
+    for i in range(len(ev)):
+        k = int(ev.kind[i])
+        if k == OPEN:
+            path.append(int(ev.tag_id[i]))
+            for qi, steps in enumerate(queries):
+                if matched[qi]:
+                    continue
+                if _path_matches(path, steps):
+                    matched[qi] = True
+                    first[qi] = i
+        elif k == 1:  # CLOSE
+            if path:
+                path.pop()
+    return FilterResult(matched, first)

@@ -1,0 +1,39 @@
+"""Common result container for all engines."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+NO_MATCH = np.iinfo(np.int32).max
+
+
+@dataclass
+class FilterResult:
+    """Per-query outcome of filtering one document.
+
+    ``matched[q]`` — document satisfies profile q.
+    ``first_event[q]`` — event index of the first accepting OPEN event
+    (the paper's "location of the match inside the document structure"),
+    ``NO_MATCH`` when unmatched.  Engines that cannot report locations
+    (matscan prefix products report them; oracle does) set it to
+    ``NO_MATCH`` for unmatched queries only.
+    """
+
+    matched: np.ndarray      # (Q,) bool
+    first_event: np.ndarray  # (Q,) int32
+
+    def __post_init__(self) -> None:
+        self.matched = np.asarray(self.matched, dtype=bool)
+        self.first_event = np.asarray(self.first_event, dtype=np.int32)
+
+    def matching_queries(self) -> np.ndarray:
+        return np.nonzero(self.matched)[0]
+
+    def __eq__(self, other: object) -> bool:  # pragma: no cover
+        if not isinstance(other, FilterResult):
+            return NotImplemented
+        return bool(
+            (self.matched == other.matched).all()
+            and (self.first_event == other.first_event).all()
+        )

@@ -1,0 +1,153 @@
+"""Paper-faithful JAX streaming engine.
+
+Direct datapath analogue of the FPGA design (Fig 4/5): every NFA state is
+one "hardware" lane; each event advances *all* lanes simultaneously; a
+bounded on-chip stack of packed 32-bit state bitmasks realizes the paper's
+tag stack (push on open, pop on close); the TOS-match is the read of the
+stack top that feeds the transition.
+
+The document is consumed with one ``lax.scan`` step per event — the TPU
+analogue of the paper's one-symbol-per-clock pipeline (we step per *event*
+rather than per byte; the byte→event pre-decode is its own parallel kernel,
+:mod:`repro.kernels.predecode`, mirroring the paper's §3.4 pre-decoder).
+
+State bitmasks are packed ``uint32`` words (the FPGA keeps one FF per
+state; we keep one bit), so the scan carry is ``(max_depth+2, S/32)`` words
+per document — small enough for VMEM at thousands of queries.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..events import CLOSE, OPEN, EventStream
+from ..nfa import NFA, WILD_TAG
+from .result import NO_MATCH, FilterResult
+
+
+@dataclass(frozen=True)
+class StreamingTables:
+    """Device-resident NFA tables (padded to 32-lane words)."""
+
+    in_state: jax.Array   # (S,) int32
+    in_tag: jax.Array     # (S,) int32
+    selfloop: jax.Array   # (S,) int32 0/1
+    init_words: jax.Array  # (W,) uint32
+    accept_state: jax.Array  # (Q,) int32
+    n_states: int
+    max_depth: int
+
+    @property
+    def n_words(self) -> int:
+        return self.n_states // 32
+
+
+def _pack_words(bits: jax.Array) -> jax.Array:
+    """(..., S) int32 0/1 → (..., S/32) uint32."""
+    s = bits.shape[-1]
+    lanes = bits.reshape(bits.shape[:-1] + (s // 32, 32)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (lanes * weights).sum(axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_words(words: jax.Array) -> jax.Array:
+    """(..., W) uint32 → (..., W*32) int32 0/1."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,)).astype(jnp.int32)
+
+
+def build_tables(nfa: NFA, max_depth: int) -> StreamingTables:
+    from ..nfa import pad_states
+
+    nfa = pad_states(nfa, 32)
+    t = nfa.tables
+    init_words = np.asarray(
+        jax.device_get(_pack_words(jnp.asarray(t.init.astype(np.int32))))
+    )
+    return StreamingTables(
+        in_state=jnp.asarray(t.in_state),
+        in_tag=jnp.asarray(t.in_tag),
+        selfloop=jnp.asarray(t.selfloop.astype(np.int32)),
+        init_words=jnp.asarray(init_words),
+        accept_state=jnp.asarray(t.accept_state),
+        n_states=t.in_state.shape[0],
+        max_depth=max_depth,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_states", "max_depth"))
+def _run(kind, tag, in_state, in_tag, selfloop, init_words, accept_state,
+         *, n_states: int, max_depth: int):
+    n_ev = kind.shape[0]
+    n_q = accept_state.shape[0]
+    n_w = n_states // 32
+    stack0 = jnp.zeros((max_depth + 2, n_w), dtype=jnp.uint32)
+    stack0 = stack0.at[0].set(init_words)
+
+    def step(carry, xs):
+        stack, depth, matched, first = carry
+        k, t, i = xs
+        is_open = k == OPEN
+        is_close = k == CLOSE
+        row = jax.lax.dynamic_index_in_dim(stack, depth, keepdims=False)
+        bits = _unpack_words(row)                       # (S,) int32 — the FFs
+        tagmatch = ((in_tag == t) | (in_tag == WILD_TAG)).astype(jnp.int32)
+        src = jnp.take(bits, in_state, axis=0)          # previous-block wire
+        nxt = (src & tagmatch) | (selfloop & bits)      # all lanes, one "clock"
+        words = _pack_words(nxt)
+        # push on open (write at depth+1), no-op otherwise
+        widx = jnp.clip(depth + 1, 0, max_depth + 1)
+        old = jax.lax.dynamic_index_in_dim(stack, widx, keepdims=False)
+        new_row = jnp.where(is_open, words, old)
+        stack = jax.lax.dynamic_update_index_in_dim(stack, new_row, widx, 0)
+        depth = depth + jnp.where(is_open, 1, jnp.where(is_close, -1, 0))
+        depth = jnp.clip(depth, 0, max_depth + 1)
+        # accept lanes → priority-encoder analogue
+        acc = jnp.take(nxt, accept_state, axis=0).astype(bool) & is_open
+        newly = acc & (~matched)
+        first = jnp.where(newly, i, first)
+        matched = matched | acc
+        return (stack, depth, matched, first), None
+
+    carry0 = (stack0, jnp.int32(0),
+              jnp.zeros(n_q, dtype=bool), jnp.full(n_q, NO_MATCH, jnp.int32))
+    (stack, depth, matched, first), _ = jax.lax.scan(
+        step, carry0, (kind, tag, jnp.arange(n_ev, dtype=jnp.int32)))
+    return matched, first
+
+
+class StreamingEngine:
+    """Public API: compile once, filter many documents."""
+
+    def __init__(self, nfa: NFA, max_depth: int = 64) -> None:
+        self.tables = build_tables(nfa, max_depth)
+        self.n_queries = nfa.n_queries
+
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        t = self.tables
+        matched, first = _run(
+            jnp.asarray(ev.kind.astype(np.int32)),
+            jnp.asarray(ev.tag_id),
+            t.in_state, t.in_tag, t.selfloop, t.init_words, t.accept_state,
+            n_states=t.n_states, max_depth=t.max_depth)
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_documents_batched(self, kind: np.ndarray,
+                                 tag: np.ndarray) -> FilterResult:
+        """(B, N) batched documents (padded) → stacked results via vmap."""
+        t = self.tables
+        fn = jax.vmap(
+            functools.partial(
+                _run, in_state=t.in_state, in_tag=t.in_tag,
+                selfloop=t.selfloop, init_words=t.init_words,
+                accept_state=t.accept_state,
+                n_states=t.n_states, max_depth=t.max_depth),
+            in_axes=(0, 0))
+        matched, first = fn(jnp.asarray(kind.astype(np.int32)),
+                            jnp.asarray(tag))
+        return FilterResult(np.asarray(matched), np.asarray(first))

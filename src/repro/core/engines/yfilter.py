@@ -1,0 +1,84 @@
+"""YFilter-style software baseline (the paper's §4 comparison system).
+
+Event-driven NFA execution on the CPU, the way YFilter [11] does it: a
+runtime stack of active-state sets, advanced per SAX event.  Pure python
+and intentionally "von Neumann" — this is the baseline the FPGA (and our
+TPU engines) are measured against in the Fig-9 reproduction.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+
+from ..events import CLOSE, OPEN, EventStream
+from ..nfa import NFA, WILD_TAG
+from .result import NO_MATCH, FilterResult
+
+
+class YFilterEngine:
+    """Precompiled adjacency-list execution of the shared NFA."""
+
+    def __init__(self, nfa: NFA) -> None:
+        t = nfa.tables
+        self.n_queries = nfa.n_queries
+        # by_src_tag[u][tag] -> list of target states; wildcard edges separate
+        by_src_tag: dict[int, dict[int, list[int]]] = defaultdict(dict)
+        by_src_wild: dict[int, list[int]] = defaultdict(list)
+        for s in range(1, t.in_state.shape[0]):
+            u = int(t.in_state[s])
+            tag = int(t.in_tag[s])
+            if tag == WILD_TAG:
+                by_src_wild[u].append(s)
+            elif tag >= 0:
+                by_src_tag[u].setdefault(tag, []).append(s)
+        self.by_src_tag = dict(by_src_tag)
+        self.by_src_wild = dict(by_src_wild)
+        self.selfloop = frozenset(np.nonzero(t.selfloop)[0].tolist())
+        self.init = frozenset(np.nonzero(t.init)[0].tolist())
+        accept_of_state: dict[int, list[int]] = defaultdict(list)
+        for q, s in enumerate(t.accept_state.tolist()):
+            accept_of_state[s].append(q)
+        self.accept_of_state = dict(accept_of_state)
+
+    # ------------------------------------------------------------------ run
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        matched = np.zeros(self.n_queries, dtype=bool)
+        first = np.full(self.n_queries, NO_MATCH, dtype=np.int32)
+        stack: list[frozenset[int]] = [self.init]
+        kinds = ev.kind
+        tags = ev.tag_id
+        by_tag = self.by_src_tag
+        by_wild = self.by_src_wild
+        loops = self.selfloop
+        accepts = self.accept_of_state
+        for i in range(len(ev)):
+            k = kinds[i]
+            if k == OPEN:
+                tag = int(tags[i])
+                cur = stack[-1]
+                nxt = set()
+                for u in cur:
+                    d = by_tag.get(u)
+                    if d is not None:
+                        nxt.update(d.get(tag, ()))
+                    w = by_wild.get(u)
+                    if w is not None:
+                        nxt.update(w)
+                    if u in loops:
+                        nxt.add(u)
+                for s in nxt:
+                    qs = accepts.get(s)
+                    if qs:
+                        for q in qs:
+                            if not matched[q]:
+                                matched[q] = True
+                                first[q] = i
+                stack.append(frozenset(nxt))
+            elif k == CLOSE:
+                if len(stack) > 1:
+                    stack.pop()
+        return FilterResult(matched, first)
+
+    def filter_documents(self, docs: list[EventStream]) -> list[FilterResult]:
+        return [self.filter_document(d) for d in docs]

@@ -1,0 +1,214 @@
+"""Document event streams and the fixed-width byte codec.
+
+A document is represented as a balanced sequence of *events*:
+
+  * ``OPEN``  — an element starts (carries the dictionary tag id)
+  * ``CLOSE`` — the most recent open element ends
+  * ``PAD``   — no-op filler so batched documents share a static length
+
+This is exactly the view the paper's hardware sees after its tag-filter
+block: the SAX-level structure of the document with tags already
+dictionary-replaced (§3.1).  Text content does not influence structural
+XPath matching, so the codec optionally interleaves filler text bytes (to
+exercise the byte-level decoder) but the event stream drops it.
+
+The byte format is the paper's: open tags are 4 bytes ``<xy>`` and close
+tags 5 bytes ``</xy>`` where ``x``/``y`` come from the 64-symbol alphabet in
+:mod:`repro.core.dictionary`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .dictionary import (
+    CLOSE_NBYTES,
+    GT,
+    LT,
+    OPEN_NBYTES,
+    SLASH,
+    TagDictionary,
+)
+
+OPEN, CLOSE, PAD = 0, 1, 2
+
+
+@dataclass
+class EventStream:
+    """Structure-of-arrays event stream for one document."""
+
+    kind: np.ndarray     # (N,) int8 — OPEN / CLOSE / PAD
+    tag_id: np.ndarray   # (N,) int32 — dictionary id for OPEN/CLOSE, -1 for PAD
+
+    def __post_init__(self) -> None:
+        self.kind = np.asarray(self.kind, dtype=np.int8)
+        self.tag_id = np.asarray(self.tag_id, dtype=np.int32)
+        assert self.kind.shape == self.tag_id.shape
+
+    def __len__(self) -> int:
+        return int(self.kind.shape[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return int((self.kind == OPEN).sum())
+
+    # ------------------------------------------------------------ building
+    @classmethod
+    def from_pairs(cls, pairs) -> "EventStream":
+        """pairs: iterable of (kind, tag_id)."""
+        ks, ts = [], []
+        for k, t in pairs:
+            ks.append(k)
+            ts.append(t)
+        return cls(np.array(ks, dtype=np.int8), np.array(ts, dtype=np.int32))
+
+    def padded(self, n: int) -> "EventStream":
+        if n < len(self):
+            raise ValueError(f"cannot pad {len(self)} events into {n}")
+        k = np.full(n, PAD, dtype=np.int8)
+        t = np.full(n, -1, dtype=np.int32)
+        k[: len(self)] = self.kind
+        t[: len(self)] = self.tag_id
+        return EventStream(k, t)
+
+    # ---------------------------------------------------------- validation
+    def check_balanced(self) -> None:
+        depth = 0
+        stack: list[int] = []
+        for k, t in zip(self.kind, self.tag_id):
+            if k == OPEN:
+                stack.append(int(t))
+                depth += 1
+            elif k == CLOSE:
+                if not stack or stack[-1] != int(t):
+                    raise ValueError("unbalanced or mismatched close tag")
+                stack.pop()
+                depth -= 1
+        if stack:
+            raise ValueError(f"{len(stack)} unclosed elements")
+
+    def max_depth(self) -> int:
+        delta = np.where(self.kind == OPEN, 1, np.where(self.kind == CLOSE, -1, 0))
+        if len(delta) == 0:
+            return 0
+        return int(np.cumsum(delta).max(initial=0))
+
+    # ------------------------------------------------------------ structure
+    def structure(self) -> tuple[np.ndarray, np.ndarray]:
+        """Per-event (depth, parent_event_index).
+
+        ``depth[i]`` — for OPEN events, the node's depth (top-level = 1);
+        for CLOSE/PAD, the depth after the event (unused by engines).
+        ``parent[i]`` — for OPEN events, the event index of the parent OPEN,
+        or -1 for top-level nodes.  CLOSE/PAD get -1.
+
+        This is the host-side oracle for the jax implementations in
+        :mod:`repro.core.engines.levelwise`.
+        """
+        n = len(self)
+        depth = np.zeros(n, dtype=np.int32)
+        parent = np.full(n, -1, dtype=np.int32)
+        stack: list[int] = []
+        for i in range(n):
+            k = self.kind[i]
+            if k == OPEN:
+                parent[i] = stack[-1] if stack else -1
+                stack.append(i)
+                depth[i] = len(stack)
+            elif k == CLOSE:
+                if stack:
+                    stack.pop()
+                depth[i] = len(stack)
+            else:
+                depth[i] = len(stack)
+        return depth, parent
+
+
+# ----------------------------------------------------------------- tree view
+@dataclass
+class Node:
+    tag_id: int
+    children: list["Node"]
+
+
+def to_trees(ev: EventStream) -> list[Node]:
+    """Event stream → forest of nodes (oracle engine input)."""
+    roots: list[Node] = []
+    stack: list[Node] = []
+    for k, t in zip(ev.kind, ev.tag_id):
+        if k == OPEN:
+            node = Node(int(t), [])
+            (stack[-1].children if stack else roots).append(node)
+            stack.append(node)
+        elif k == CLOSE:
+            stack.pop()
+    return roots
+
+
+def from_trees(roots: list[Node]) -> EventStream:
+    pairs: list[tuple[int, int]] = []
+
+    def walk(n: Node) -> None:
+        pairs.append((OPEN, n.tag_id))
+        for c in n.children:
+            walk(c)
+        pairs.append((CLOSE, n.tag_id))
+
+    for r in roots:
+        walk(r)
+    return EventStream.from_pairs(pairs)
+
+
+# ----------------------------------------------------------------- byte codec
+def encode_bytes(ev: EventStream, text_fill: int = 0) -> bytes:
+    """Event stream → paper-format byte stream.
+
+    ``text_fill`` inserts that many filler text bytes (``'x'``) after each
+    open tag, emulating element text content (consumed by the paper's
+    ``[\\w\\s]+`` regex blocks, structurally irrelevant).
+    """
+    out = bytearray()
+    for k, t in zip(ev.kind, ev.tag_id):
+        if k == OPEN:
+            out += b"<" + TagDictionary.symbols_of(int(t)).encode() + b">"
+            out += b"x" * text_fill
+        elif k == CLOSE:
+            out += b"</" + TagDictionary.symbols_of(int(t)).encode() + b">"
+    return bytes(out)
+
+
+def decode_bytes(buf: bytes, sym_table: np.ndarray) -> EventStream:
+    """Byte stream → event stream (host reference for the predecode kernel).
+
+    Vectorised with numpy the same way the Pallas kernel does it on-device:
+    classify each byte position, then decode the two symbol bytes that follow
+    each ``<`` / ``</`` marker.  Fixed-length tags (the paper's dictionary
+    replacement) are what make this embarrassingly parallel.
+    """
+    b = np.frombuffer(buf, dtype=np.uint8)
+    n = b.shape[0]
+    if n == 0:
+        return EventStream(np.zeros(0, np.int8), np.zeros(0, np.int32))
+    is_lt = b == LT
+    nxt = np.concatenate([b[1:], np.zeros(1, np.uint8)])
+    is_close = is_lt & (nxt == SLASH)
+    is_open = is_lt & ~is_close
+    # symbol positions: open '<' at i → symbols at i+1, i+2 ; close at i+2, i+3
+    idx = np.arange(n)
+    s0 = np.where(is_close, idx + 2, idx + 1)
+    s1 = s0 + 1
+    s0 = np.clip(s0, 0, n - 1)
+    s1 = np.clip(s1, 0, n - 1)
+    v0 = sym_table[b[s0]]
+    v1 = sym_table[b[s1]]
+    tag = (v0 << 6) | v1
+    keep = is_open | is_close
+    kind = np.where(is_close[keep], CLOSE, OPEN).astype(np.int8)
+    return EventStream(kind, tag[keep].astype(np.int32))
+
+
+def event_stream_nbytes(ev: EventStream, text_fill: int = 0) -> int:
+    n_open = int((ev.kind == OPEN).sum())
+    n_close = int((ev.kind == CLOSE).sum())
+    return n_open * (OPEN_NBYTES + text_fill) + n_close * CLOSE_NBYTES

@@ -1,0 +1,247 @@
+"""Query IR → NFA with single-parent trie structure (§3.2–3.3 of the paper).
+
+The paper implements each XPath profile as a chain of hardware blocks
+(Fig 3/4): per-tag matchers, "waiting" blocks (``[<\\c\\d>]*``) for the
+ancestor-descendant axis, and a shared document stack for parent-child
+checks.  YFilter's software equivalent is an NFA whose states form a
+prefix-shared trie.
+
+This module compiles parsed :class:`repro.core.xpath.Query` objects into a
+*vector-friendly* NFA representation designed so that the whole active-set
+transition is three dense vector ops (gather, compare, mask) — the TPU
+analogue of the FPGA advancing every matcher block in one clock:
+
+    active_v[s] = (A[in_state[s]] & tagmatch[s](t))  |  (selfloop[s] & A[s])
+
+where ``A`` is the active set in the *parent context* (the paper's
+top-of-stack) and ``t`` is the tag of the node being opened.
+
+State kinds
+-----------
+* ``root`` (state 0) — active only in the document-root context.
+* ``match`` (M) — one per location step; its in-edge carries the step's
+  tag test.  The paper's per-tag comparator block.
+* ``loop`` (L) — one per ancestor-descendant step; copies the in-edge of
+  the step's *source* state and self-loops, which realises the ε-closure
+  of YFilter's ``//`` construction without ε-edges:
+
+      active[L] = (A[in(src)] & match(src-edge)) | A[L]
+                =  active[src] | A[L]
+
+  i.e. L switches on exactly when src does and stays on for the whole
+  subtree — the paper's ``[<\\c\\d>]*`` waiting block, with the negation
+  block on ``</src>`` realised *exactly* (not approximately) because the
+  parent-context stack restores A on close.
+
+Parent-child steps need no extra state: the in-edge from the parent's M
+state only fires when that M is in the parent context — the TOS-match of
+Fig 4 is implicit in the stack discipline.
+
+Sharing (§3.3): :func:`compile_queries` with ``shared=True`` dedups states
+by ``(source, axis, tag)`` so common prefixes are single blocks (Com-P
+scenario); ``shared=False`` builds disjoint chains per query (Unop).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from .dictionary import TagDictionary
+from .xpath import CHILD, DESC, Query, WILDCARD
+
+# sentinel tag ids used in in_tag
+WILD_TAG = -2   # matches every tag (the '*' node test)
+NEVER_TAG = -3  # matches no tag (root, init-only loop states)
+
+K_ROOT, K_MATCH, K_LOOP = 0, 1, 2
+
+
+class NFATables(NamedTuple):
+    """Dense vector form of the NFA — everything the engines need."""
+
+    in_state: np.ndarray      # (S,) int32 — single parent state
+    in_tag: np.ndarray        # (S,) int32 — tag id, WILD_TAG or NEVER_TAG
+    selfloop: np.ndarray      # (S,) bool  — ancestor-descendant waiting states
+    init: np.ndarray          # (S,) bool  — active in the root context
+    accept_state: np.ndarray  # (Q,) int32 — accept state per query
+    kind: np.ndarray          # (S,) int8  — K_ROOT / K_MATCH / K_LOOP
+
+    @property
+    def n_states(self) -> int:
+        return int(self.in_state.shape[0])
+
+    @property
+    def n_queries(self) -> int:
+        return int(self.accept_state.shape[0])
+
+
+@dataclass
+class NFA:
+    tables: NFATables
+    queries: tuple[Query, ...]
+    shared: bool
+    n_tags: int  # size of the tag-id space (dictionary size)
+
+    @property
+    def n_states(self) -> int:
+        return self.tables.n_states
+
+    @property
+    def n_queries(self) -> int:
+        return self.tables.n_queries
+
+    # ------------------------------------------------------- dense matrices
+    def req_matrix(self, dtype=np.float32) -> np.ndarray:
+        """(T, S) 0/1 matrix: REQ[t, s] = 1 iff in_tag[s] == t.
+
+        ``onehot(tag) @ REQ`` is the per-state tag-match vector — the MXU
+        form of the paper's character pre-decoder (§3.4): the one-hot
+        decode happens once per symbol and every matcher consumes 1 bit.
+        """
+        t = self.tables
+        req = np.zeros((self.n_tags, t.in_state.shape[0]), dtype=dtype)
+        concrete = t.in_tag >= 0
+        req[t.in_tag[concrete], np.nonzero(concrete)[0]] = 1
+        return req
+
+    def wild_vector(self, dtype=np.float32) -> np.ndarray:
+        """(S,) 0/1: states whose in-edge matches any tag."""
+        return (self.tables.in_tag == WILD_TAG).astype(dtype)
+
+    def parent_onehot(self, dtype=np.float32) -> np.ndarray:
+        """(S, S) 0/1 matrix P with P[in_state[s], s] = 1.
+
+        ``A @ P`` gathers each state's parent activity — the MXU form of
+        the wire from the previous matcher block on the FPGA.
+        """
+        t = self.tables
+        s = t.in_state.shape[0]
+        p = np.zeros((s, s), dtype=dtype)
+        p[t.in_state, np.arange(s)] = 1
+        return p
+
+    def accept_matrix(self, dtype=np.float32) -> np.ndarray:
+        """(S, Q) 0/1: ACC[s, q] = 1 iff s is query q's accept state."""
+        t = self.tables
+        acc = np.zeros((self.n_states, self.n_queries), dtype=dtype)
+        acc[t.accept_state, np.arange(self.n_queries)] = 1
+        return acc
+
+    # ------------------------------------------------ reference transition
+    def initial_active(self) -> np.ndarray:
+        return self.tables.init.copy()
+
+    def step_active(self, parent_active: np.ndarray, tag: int) -> np.ndarray:
+        """One OPEN-tag transition (numpy reference used by tests/engines)."""
+        t = self.tables
+        tagmatch = (t.in_tag == tag) | (t.in_tag == WILD_TAG)
+        src = parent_active[t.in_state]
+        return (src & tagmatch) | (t.selfloop & parent_active)
+
+
+class _Builder:
+    def __init__(self) -> None:
+        self.in_state: list[int] = [0]
+        self.in_tag: list[int] = [NEVER_TAG]
+        self.selfloop: list[bool] = [False]
+        self.init: list[bool] = [True]
+        self.kind: list[int] = [K_ROOT]
+        self._memo: dict[tuple, int] = {}
+
+    def _new(self, in_state: int, in_tag: int, selfloop: bool, init: bool,
+             kind: int) -> int:
+        sid = len(self.in_state)
+        self.in_state.append(in_state)
+        self.in_tag.append(in_tag)
+        self.selfloop.append(selfloop)
+        self.init.append(init)
+        self.kind.append(kind)
+        return sid
+
+    def step(self, cur: int, axis: int, tag_id: int, shared: bool) -> int:
+        """Extend the trie from state ``cur`` with one location step."""
+        if axis == CHILD:
+            key = (cur, CHILD, tag_id)
+            if shared and key in self._memo:
+                return self._memo[key]
+            m = self._new(cur, tag_id, False, False, K_MATCH)
+            if shared:
+                self._memo[key] = m
+            return m
+        # DESC: waiting/loop state L + match state M
+        lkey = (cur, "loop")
+        if shared and lkey in self._memo:
+            loop = self._memo[lkey]
+        else:
+            # L copies cur's in-edge → switches on exactly when cur does,
+            # self-loop keeps it on for the whole subtree of cur.
+            loop = self._new(self.in_state[cur], self.in_tag[cur],
+                             True, self.init[cur], K_LOOP)
+            # if cur itself self-loops (never happens for M/root sources,
+            # defensive), preserve reachability
+            if shared:
+                self._memo[lkey] = loop
+        mkey = (loop, DESC, tag_id)
+        if shared and mkey in self._memo:
+            return self._memo[mkey]
+        m = self._new(loop, tag_id, False, False, K_MATCH)
+        if shared:
+            self._memo[mkey] = m
+        return m
+
+
+def compile_queries(
+    queries: Sequence[Query],
+    dictionary: TagDictionary,
+    *,
+    shared: bool = True,
+) -> NFA:
+    """Compile parsed profiles to the vector NFA.
+
+    Tag names in the queries are resolved through ``dictionary`` (adding
+    them if absent — profiles are known ahead of time in pub-sub, §1).
+    ``shared=True`` is the paper's common-prefix optimization (§3.3).
+    """
+    b = _Builder()
+    accepts: list[int] = []
+    for q in queries:
+        cur = 0
+        for st in q.steps:
+            tag_id = WILD_TAG if st.tag == WILDCARD else dictionary.add(st.tag)
+            cur = b.step(cur, st.axis, tag_id, shared)
+        accepts.append(cur)
+    tables = NFATables(
+        in_state=np.asarray(b.in_state, dtype=np.int32),
+        in_tag=np.asarray(b.in_tag, dtype=np.int32),
+        selfloop=np.asarray(b.selfloop, dtype=bool),
+        init=np.asarray(b.init, dtype=bool),
+        accept_state=np.asarray(accepts, dtype=np.int32),
+        kind=np.asarray(b.kind, dtype=np.int8),
+    )
+    return NFA(tables=tables, queries=tuple(queries), shared=shared,
+               n_tags=max(len(dictionary), 1))
+
+
+def pad_states(nfa: NFA, multiple: int = 128) -> NFA:
+    """Pad the state space to a lane-aligned multiple (TPU tiling).
+
+    Padding states are inert: parent = self? No — parent 0 with NEVER tag
+    and no selfloop, never active.
+    """
+    t = nfa.tables
+    s = t.in_state.shape[0]
+    padded = -s % multiple
+    if padded == 0:
+        return nfa
+    tables = NFATables(
+        in_state=np.concatenate([t.in_state, np.zeros(padded, np.int32)]),
+        in_tag=np.concatenate([t.in_tag, np.full(padded, NEVER_TAG, np.int32)]),
+        selfloop=np.concatenate([t.selfloop, np.zeros(padded, bool)]),
+        init=np.concatenate([t.init, np.zeros(padded, bool)]),
+        accept_state=t.accept_state,
+        kind=np.concatenate([t.kind, np.full(padded, K_MATCH, np.int8)]),
+    )
+    return NFA(tables=tables, queries=nfa.queries, shared=nfa.shared,
+               n_tags=nfa.n_tags)

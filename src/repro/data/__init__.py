@@ -1,0 +1,4 @@
+"""Data plane: synthetic XML workload generation (ToXGene-like, §4),
+profile generation (YFilter PathGenerator-like), the pub-sub filter stage,
+and the LM token pipeline."""
+from .generator import DTD, gen_document, gen_profiles  # noqa: F401

@@ -1,0 +1,116 @@
+"""Pub-sub content routing as a data-pipeline stage.
+
+This is where the paper's contribution is a *first-class feature* of the
+framework: a stream of XML documents is matched against standing profiles
+(subscriptions) and routed — exactly the paper's pub-sub filtering — as a
+stage in front of the training/serving data pipeline:
+
+* training: documents are filtered by topic profiles and routed to
+  data-parallel shards (``launch/train.py --data-filter``);
+* serving: requests carrying XML payloads are routed to model replicas by
+  subscription (``launch/serve.py``).
+
+The stage batches documents and runs the levelwise TPU engine by default;
+``engine='yfilter'`` selects the software baseline (useful for the Fig-9
+comparison in situ).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, Sequence
+
+import numpy as np
+
+from ..core.dictionary import TagDictionary
+from ..core.engines.levelwise import LevelwiseEngine
+from ..core.engines.streaming import StreamingEngine
+from ..core.engines.yfilter import YFilterEngine
+from ..core.events import EventStream, event_stream_nbytes
+from ..core.nfa import NFA, compile_queries
+from ..core.xpath import Query, parse
+
+
+@dataclass
+class RoutedDocument:
+    doc_index: int
+    matched_profiles: np.ndarray       # (n_matched,) int32 profile indices
+    shard: int                         # destination data shard
+    nbytes: int
+
+
+@dataclass
+class FilterStage:
+    """Standing-profile filter + router.
+
+    ``shard_of_profile[q]`` maps each subscription to a destination shard
+    (defaults to round-robin).  A document goes to every shard that has at
+    least one matching subscription; unmatched documents are dropped
+    (classic pub-sub) or sent to shard 0 with ``keep_unmatched=True``.
+    """
+
+    profiles: Sequence[Query]
+    dictionary: TagDictionary
+    n_shards: int = 1
+    engine: str = "levelwise"
+    keep_unmatched: bool = False
+    batch_size: int = 32
+    shard_of_profile: np.ndarray = field(default=None)  # type: ignore
+
+    def __post_init__(self) -> None:
+        if isinstance(self.profiles[0], str):
+            self.profiles = [parse(p) for p in self.profiles]
+        self.nfa: NFA = compile_queries(list(self.profiles), self.dictionary,
+                                        shared=True)
+        if self.shard_of_profile is None:
+            self.shard_of_profile = (
+                np.arange(len(self.profiles)) % self.n_shards).astype(np.int32)
+        if self.engine == "levelwise":
+            self._eng = LevelwiseEngine(self.nfa)
+        elif self.engine == "streaming":
+            self._eng = StreamingEngine(self.nfa)
+        elif self.engine == "yfilter":
+            self._eng = YFilterEngine(self.nfa)
+        else:
+            raise ValueError(self.engine)
+
+    # ----------------------------------------------------------------- run
+    def _filter_batch(self, docs: list[EventStream]):
+        if self.engine == "levelwise":
+            return self._eng.filter_documents_batched(docs)
+        return [self._eng.filter_document(d) for d in docs]
+
+    def route(self, docs: Iterable[EventStream]) -> Iterator[list[RoutedDocument]]:
+        """Yield routed batches; each doc may fan out to several shards."""
+        batch: list[EventStream] = []
+        base = 0
+        for doc in docs:
+            batch.append(doc)
+            if len(batch) == self.batch_size:
+                yield self._route_batch(batch, base)
+                base += len(batch)
+                batch = []
+        if batch:
+            yield self._route_batch(batch, base)
+
+    def _route_batch(self, docs: list[EventStream],
+                     base: int) -> list[RoutedDocument]:
+        results = self._filter_batch(docs)
+        out: list[RoutedDocument] = []
+        for i, (doc, res) in enumerate(zip(docs, results)):
+            qids = res.matching_queries()
+            nb = event_stream_nbytes(doc)
+            if len(qids) == 0:
+                if self.keep_unmatched:
+                    out.append(RoutedDocument(base + i, qids, 0, nb))
+                continue
+            for shard in np.unique(self.shard_of_profile[qids]):
+                mine = qids[self.shard_of_profile[qids] == shard]
+                out.append(RoutedDocument(base + i, mine, int(shard), nb))
+        return out
+
+    # ------------------------------------------------------------- metrics
+    def selectivity(self, docs: list[EventStream]) -> float:
+        """Fraction of (doc, profile) pairs that match — workload stat."""
+        results = self._filter_batch(docs)
+        m = np.stack([r.matched for r in results])
+        return float(m.mean())

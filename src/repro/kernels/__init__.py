@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the filtering hot spots.
+
+* :mod:`.predecode`      -- byte->event character pre-decode (paper 3.4)
+* :mod:`.nfa_transition` -- levelwise NFA transition (2 matmuls + mask)
+* :mod:`.stream_filter`  -- FPGA-analogue streaming filter, VMEM stack
+* :mod:`.ops`            -- jit'd public wrappers (+ interpret switch)
+* :mod:`.ref`            -- pure-jnp oracles (tests assert allclose)
+"""

@@ -1,0 +1,85 @@
+"""State-block partitioner for the streaming filter kernel.
+
+The paper (§3.3) sorts the regexes alphabetically, clusters them into
+common-prefix trees, and lays each cluster out as an independent hardware
+region.  We do the same: queries are sorted, greedily packed into blocks of
+≤BLK NFA states (each block compiled as its own shared prefix trie, so
+parent pointers never cross a block), and the per-block tables are stacked
+into the (G, BLK, ...) arrays the kernel consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from ..core.dictionary import TagDictionary
+from ..core.nfa import NFA, WILD_TAG, compile_queries, pad_states
+from ..core.xpath import Query
+
+
+@dataclass
+class BlockTables:
+    in_tag: np.ndarray      # (G, BLK) int32
+    wild: np.ndarray        # (G, BLK) f32
+    selfloop: np.ndarray    # (G, BLK) f32
+    init: np.ndarray        # (G, BLK) f32
+    parent_1h: np.ndarray   # (G, BLK, BLK) f32
+    accept_block: np.ndarray  # (Q,) int32 — block of each query's accept
+    accept_local: np.ndarray  # (Q,) int32 — local state index
+    query_order: np.ndarray   # (Q,) int32 — original index of sorted query q
+    blk: int
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.in_tag.shape[0])
+
+
+def partition(queries: Sequence[Query], dictionary: TagDictionary,
+              blk: int = 256) -> BlockTables:
+    order = sorted(range(len(queries)), key=lambda i: str(queries[i]))
+    groups: list[list[int]] = []
+    cur: list[int] = []
+    for qi in order:
+        trial = cur + [qi]
+        nfa = compile_queries([queries[i] for i in trial], dictionary,
+                              shared=True)
+        if nfa.n_states > blk and cur:
+            groups.append(cur)
+            cur = [qi]
+        else:
+            cur = trial
+    if cur:
+        groups.append(cur)
+
+    g = len(groups)
+    in_tag = np.full((g, blk), -3, np.int32)   # NEVER
+    wild = np.zeros((g, blk), np.float32)
+    selfloop = np.zeros((g, blk), np.float32)
+    init = np.zeros((g, blk), np.float32)
+    p1h = np.zeros((g, blk, blk), np.float32)
+    accept_block = np.zeros(len(queries), np.int32)
+    accept_local = np.zeros(len(queries), np.int32)
+    for gi, grp in enumerate(groups):
+        nfa = compile_queries([queries[i] for i in grp], dictionary,
+                              shared=True)
+        if nfa.n_states > blk:
+            raise ValueError(
+                f"single query group exceeds block size {blk}: "
+                f"{nfa.n_states} states")
+        t = nfa.tables
+        s = nfa.n_states
+        in_tag[gi, :s] = t.in_tag
+        wild[gi, :s] = (t.in_tag == WILD_TAG).astype(np.float32)
+        selfloop[gi, :s] = t.selfloop
+        init[gi, :s] = t.init
+        p1h[gi, t.in_state, np.arange(s)] = 1.0
+        # zero out the padding columns' parent edges (they stay inert via
+        # NEVER tags anyway) and the root self-edge contribution
+        for qq, acc in zip(grp, t.accept_state):
+            accept_block[qq] = gi
+            accept_local[qq] = acc
+    return BlockTables(in_tag, wild, selfloop, init, p1h,
+                       accept_block, accept_local,
+                       np.asarray(order, np.int32), blk)

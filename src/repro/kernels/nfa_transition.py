@@ -1,0 +1,77 @@
+"""Pallas kernel: levelwise NFA transition (the filtering hot loop).
+
+One document level advances all W nodes × S states at once:
+
+    src      = parent_rows @ P          -- parent-pointer gather on the MXU
+    tagmatch = onehot(tags) @ REQ + wild -- §3.4 pre-decoder as a matmul
+    next     = min(src*tagmatch + parent_rows*selfloop, 1) * valid
+
+Tiling: grid (W/bw, S/bs).  Each program reads a (bw, S) strip of
+parent_rows (full reduction dim for the P matmul — the NFA trie's parent
+pointers may cross column tiles) and produces a (bw, bs) output tile.
+VMEM working set per program ≈ bw·S + S·bs + T·bs floats; block sizes are
+chosen so it stays under ~4 MB at S up to 8192 states.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(parent_ref, onehot_ref, req_ref, wild_ref, p1h_ref, self_ref,
+            valid_ref, out_ref, *, bs: int):
+    j = pl.program_id(1)
+    parent_full = parent_ref[...]                        # (bw, S)
+    src = jnp.dot(parent_full, p1h_ref[...],
+                  preferred_element_type=jnp.float32)    # (bw, bs)
+    tagmatch = jnp.dot(onehot_ref[...], req_ref[...],
+                       preferred_element_type=jnp.float32) + wild_ref[...]
+    parent_sub = jax.lax.dynamic_slice(
+        parent_full, (0, j * bs), (parent_full.shape[0], bs))
+    nxt = jnp.minimum(src * tagmatch + parent_sub * self_ref[...], 1.0)
+    out_ref[...] = nxt * valid_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "bs", "interpret"))
+def nfa_transition_pallas(parent_rows: jax.Array, tags: jax.Array,
+                          req: jax.Array, wild: jax.Array,
+                          parent_1h: jax.Array, selfloop: jax.Array,
+                          *, bw: int = 128, bs: int = 512,
+                          interpret: bool = True) -> jax.Array:
+    """See :func:`repro.kernels.ref.nfa_transition` for semantics."""
+    w, s = parent_rows.shape
+    t = req.shape[0]
+    bw = min(bw, max(8, w))
+    bs = min(bs, s)
+    w_pad, s_pad = -w % bw, -s % bs
+    if s_pad:
+        raise ValueError(f"n_states {s} must be a multiple of bs {bs}")
+    onehot = jax.nn.one_hot(tags, t, dtype=jnp.float32)
+    valid = (tags >= 0).astype(jnp.float32)[:, None]
+    if w_pad:
+        parent_rows = jnp.pad(parent_rows, ((0, w_pad), (0, 0)))
+        onehot = jnp.pad(onehot, ((0, w_pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, w_pad), (0, 0)))
+    wp = parent_rows.shape[0]
+    grid = (wp // bw, s // bs)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bw, s), lambda i, j: (i, 0)),    # parent strip
+            pl.BlockSpec((bw, t), lambda i, j: (i, 0)),    # onehot tags
+            pl.BlockSpec((t, bs), lambda i, j: (0, j)),    # REQ tile
+            pl.BlockSpec((1, bs), lambda i, j: (0, j)),    # wild
+            pl.BlockSpec((s, bs), lambda i, j: (0, j)),    # parent one-hot
+            pl.BlockSpec((1, bs), lambda i, j: (0, j)),    # selfloop
+            pl.BlockSpec((bw, 1), lambda i, j: (i, 0)),    # valid col
+        ],
+        out_specs=pl.BlockSpec((bw, bs), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((wp, s), jnp.float32),
+        interpret=interpret,
+    )(parent_rows, onehot, req, wild[None, :], parent_1h,
+      selfloop[None, :], valid)
+    return out[:w]

@@ -1,0 +1,87 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels are written for TPU and validated in interpret mode, per the
+hardware-adaptation notes in DESIGN.md).  On a real TPU backend set
+``REPRO_PALLAS_INTERPRET=0`` (or rely on the auto-detect) to run compiled.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.dictionary import TagDictionary
+from ..core.engines.result import NO_MATCH, FilterResult
+from ..core.events import EventStream
+from ..core.xpath import Query
+from . import blocks as blocks_mod
+from . import ref
+from .nfa_transition import nfa_transition_pallas
+from .predecode import predecode_pallas
+from .stream_filter import stream_filter_pallas
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def predecode(bytes_: jax.Array) -> tuple[jax.Array, jax.Array]:
+    return predecode_pallas(jnp.asarray(bytes_),
+                            interpret=_interpret_default())
+
+
+def nfa_transition(parent_rows, tags, req, wild, parent_1h, selfloop,
+                   **kw):
+    kw.setdefault("interpret", _interpret_default())
+    # pick bs dividing S (states are padded to 128 lanes)
+    s = parent_rows.shape[-1]
+    kw.setdefault("bs", min(512, s) if s % min(512, s) == 0 else 128)
+    return nfa_transition_pallas(parent_rows, tags, req, wild, parent_1h,
+                                 selfloop, **kw)
+
+
+def decode_document(buf: bytes, dictionary: TagDictionary) -> EventStream:
+    """Byte stream → EventStream via the predecode kernel + compaction."""
+    arr = jnp.asarray(np.frombuffer(buf, dtype=np.uint8))
+    kind, tag = predecode(arr)
+    kind, tag = np.asarray(kind), np.asarray(tag)
+    keep = kind != ref.PAD
+    return EventStream(kind[keep].astype(np.int8), tag[keep])
+
+
+class StreamFilterKernelEngine:
+    """End-to-end engine on the stream_filter kernel (Fig 5 layout).
+
+    Queries are packed into parent-closed state blocks; all blocks advance
+    over the event stream inside one pallas_call; accept states map back
+    to query ids (the output priority encoder).
+    """
+
+    def __init__(self, queries: list[Query], dictionary: TagDictionary,
+                 blk: int = 256, max_depth: int = 48) -> None:
+        self.tables = blocks_mod.partition(queries, dictionary, blk=blk)
+        self.max_depth = max_depth
+        t = self.tables
+        self._dev = dict(
+            in_tag=jnp.asarray(t.in_tag), wild=jnp.asarray(t.wild),
+            selfloop=jnp.asarray(t.selfloop), init=jnp.asarray(t.init),
+            parent_1h=jnp.asarray(t.parent_1h))
+        self.n_queries = len(t.accept_block)
+
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        ever, first = stream_filter_pallas(
+            jnp.asarray(ev.kind.astype(np.int32)), jnp.asarray(ev.tag_id),
+            self._dev["in_tag"], self._dev["wild"], self._dev["selfloop"],
+            self._dev["init"], self._dev["parent_1h"],
+            max_depth=self.max_depth, interpret=_interpret_default())
+        ever, first = np.asarray(ever), np.asarray(first)
+        t = self.tables
+        matched = ever[t.accept_block, t.accept_local] > 0
+        fe = first[t.accept_block, t.accept_local]
+        return FilterResult(matched, np.where(matched, fe, NO_MATCH))

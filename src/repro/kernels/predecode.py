@@ -1,0 +1,76 @@
+"""Pallas kernel: byte-stream character pre-decode (§3.4).
+
+The paper's pre-decoder turns each incoming byte into 256 one-hot lines so
+every matcher consumes 1 bit.  On a TPU the equivalent is decoding *all*
+byte positions in parallel into (kind, tag_id) pairs — possible only
+because the dictionary replacement (§3.1) makes tags fixed-length, so each
+position can be classified without scanning.  Pure VPU arithmetic: no
+gathers, no tables.
+
+The wrapper pre-shifts the byte stream by 1..3 positions so each grid
+block is self-contained (the halo is materialized, not read across
+blocks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LANE = 128
+
+
+def _symbol_value(b: jax.Array) -> jax.Array:
+    v = jnp.full_like(b, -1)
+    v = jnp.where((b >= 97) & (b <= 122), b - 97, v)
+    v = jnp.where((b >= 65) & (b <= 90), b - 65 + 26, v)
+    v = jnp.where((b >= 48) & (b <= 57), b - 48 + 52, v)
+    v = jnp.where(b == 95, 62, v)
+    v = jnp.where(b == 46, 63, v)
+    return v
+
+
+def _kernel(b_ref, b1_ref, b2_ref, b3_ref, kind_ref, tag_ref):
+    b = b_ref[...]
+    b1, b2, b3 = b1_ref[...], b2_ref[...], b3_ref[...]
+    is_lt = b == 60
+    is_close = is_lt & (b1 == 47)
+    is_open = is_lt & ~is_close
+    s0 = jnp.where(is_close, b2, b1)
+    s1 = jnp.where(is_close, b3, b2)
+    v0, v1 = _symbol_value(s0), _symbol_value(s1)
+    ok = (v0 >= 0) & (v1 >= 0)
+    kind = jnp.where(is_open & ok, ref.OPEN,
+                     jnp.where(is_close & ok, ref.CLOSE, ref.PAD))
+    kind_ref[...] = kind.astype(jnp.int32)
+    tag_ref[...] = jnp.where(kind != ref.PAD, v0 * 64 + v1, -1).astype(jnp.int32)
+
+
+def predecode_pallas(bytes_: jax.Array, *, block_rows: int = 8,
+                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(N,) uint8 → ((N,) kind int32, (N,) tag int32)."""
+    n = bytes_.shape[0]
+    b = bytes_.astype(jnp.int32)
+
+    def shift(k):
+        return jnp.concatenate([b[k:], jnp.zeros((min(k, n),), jnp.int32)])
+
+    rows = block_rows
+    width = rows * LANE
+    n_pad = -n % width
+    arrs = [jnp.pad(x, (0, n_pad)).reshape(-1, LANE)
+            for x in (b, shift(1), shift(2), shift(3))]
+    n_rows = arrs[0].shape[0]
+    grid = (n_rows // rows,)
+    spec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    kind, tag = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((n_rows, LANE), jnp.int32)] * 2,
+        interpret=interpret,
+    )(*arrs)
+    return kind.reshape(-1)[:n], tag.reshape(-1)[:n]

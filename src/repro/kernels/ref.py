@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# event kinds (match repro.core.events)
+OPEN, CLOSE, PAD = 0, 1, 2
+
+# byte constants
+_LT, _SLASH = 60, 47
+
+
+def symbol_value(b: jax.Array) -> jax.Array:
+    """Byte → 64-symbol alphabet value (a-zA-Z0-9_.), -1 otherwise.
+
+    Pure arithmetic (no table gather) — the form the TPU kernel uses.
+    """
+    b = b.astype(jnp.int32)
+    v = jnp.full_like(b, -1)
+    v = jnp.where((b >= 97) & (b <= 122), b - 97, v)        # a-z → 0..25
+    v = jnp.where((b >= 65) & (b <= 90), b - 65 + 26, v)    # A-Z → 26..51
+    v = jnp.where((b >= 48) & (b <= 57), b - 48 + 52, v)    # 0-9 → 52..61
+    v = jnp.where(b == 95, 62, v)                           # '_'
+    v = jnp.where(b == 46, 63, v)                           # '.'
+    return v
+
+
+def predecode(bytes_: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(N,) uint8 → per-position (kind, tag_id); kind=PAD where no tag opens.
+
+    The §3.4 character pre-decoder adapted to the TPU: every byte position
+    is classified *in parallel* (fixed-length dictionary tags make this
+    possible); stream compaction to an event list happens outside.
+    """
+    b = bytes_.astype(jnp.int32)
+    n = b.shape[0]
+
+    def shift(k):
+        return jnp.concatenate([b[k:], jnp.zeros((min(k, n),), jnp.int32)])
+
+    b1, b2, b3 = shift(1), shift(2), shift(3)
+    is_lt = b == _LT
+    is_close = is_lt & (b1 == _SLASH)
+    is_open = is_lt & ~is_close
+    s0 = jnp.where(is_close, b2, b1)
+    s1 = jnp.where(is_close, b3, b2)
+    v0, v1 = symbol_value(s0), symbol_value(s1)
+    ok = (v0 >= 0) & (v1 >= 0)
+    kind = jnp.where(is_open & ok, OPEN,
+                     jnp.where(is_close & ok, CLOSE, PAD)).astype(jnp.int32)
+    tag = jnp.where(kind != PAD, v0 * 64 + v1, -1).astype(jnp.int32)
+    return kind, tag
+
+
+def nfa_transition(parent_rows: jax.Array, tags: jax.Array, req: jax.Array,
+                   wild: jax.Array, parent_1h: jax.Array,
+                   selfloop: jax.Array) -> jax.Array:
+    """Levelwise NFA transition (one document level, W nodes, S states).
+
+    parent_rows (W, S) f32 0/1 — active sets of each node's parent
+    tags        (W,)   int32  — tag id per node (-1 ⇒ padding row)
+    req         (T, S) f32    — one-hot tag→state match table
+    wild        (S,)   f32    — wildcard-edge states
+    parent_1h   (S, S) f32    — P[in_state[s], s] = 1
+    selfloop    (S,)   f32
+    returns     (W, S) f32 0/1
+    """
+    n_tags = req.shape[0]
+    onehot = jax.nn.one_hot(tags, n_tags, dtype=jnp.float32)
+    tagmatch = onehot @ req + wild[None, :]
+    src = parent_rows @ parent_1h
+    nxt = jnp.minimum(src * tagmatch + parent_rows * selfloop[None, :], 1.0)
+    return nxt * (tags >= 0)[:, None].astype(jnp.float32)
+
+
+def stream_filter(kind: jax.Array, tag: jax.Array, in_tag: jax.Array,
+                  wild: jax.Array, selfloop: jax.Array, init: jax.Array,
+                  parent_1h: jax.Array, max_depth: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """One state-block of the FPGA-analogue streaming filter.
+
+    kind/tag  (N,) int32 — the event stream (shared by all blocks, §3.2)
+    in_tag    (BLK,) int32, wild/selfloop/init (BLK,) f32
+    parent_1h (BLK, BLK) f32 — block-local parent matrix
+    returns   (ever_active (BLK,) f32, first_active (BLK,) int32) — per
+    state; accept-state → query mapping is applied by the caller (the
+    paper's priority encoder).
+    """
+    n = kind.shape[0]
+    blk = in_tag.shape[0]
+    no_match = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+    def step(carry, xs):
+        stack, depth, ever, first = carry
+        k, t, i = xs
+        is_open = k == OPEN
+        is_close = k == CLOSE
+        row = jax.lax.dynamic_index_in_dim(stack, depth, keepdims=False)
+        tagmatch = (in_tag == t).astype(jnp.float32) + wild
+        src = row @ parent_1h
+        nxt = jnp.minimum(src * tagmatch + row * selfloop, 1.0)
+        widx = jnp.clip(depth + 1, 0, max_depth + 1)
+        old = jax.lax.dynamic_index_in_dim(stack, widx, keepdims=False)
+        stack = jax.lax.dynamic_update_index_in_dim(
+            stack, jnp.where(is_open, nxt, old), widx, 0)
+        depth = jnp.clip(depth + jnp.where(is_open, 1,
+                                           jnp.where(is_close, -1, 0)),
+                         0, max_depth + 1)
+        active = jnp.where(is_open, nxt, jnp.zeros_like(nxt))
+        newly = (active > 0) & (ever == 0)
+        first = jnp.where(newly, i, first)
+        ever = jnp.maximum(ever, active)
+        return (stack, depth, ever, first), None
+
+    stack0 = jnp.zeros((max_depth + 2, blk), jnp.float32).at[0].set(init)
+    carry0 = (stack0, jnp.int32(0), jnp.zeros(blk, jnp.float32),
+              jnp.full(blk, no_match, jnp.int32))
+    (stack, depth, ever, first), _ = jax.lax.scan(
+        step, carry0, (kind, tag, jnp.arange(n, dtype=jnp.int32)))
+    return ever, first

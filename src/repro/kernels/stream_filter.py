@@ -1,0 +1,116 @@
+"""Pallas kernel: FPGA-analogue streaming filter with a VMEM stack.
+
+The closest TPU realization of the paper's architecture (Fig 5): state
+blocks (one per "hardware region") advance in lock-step over the shared
+event stream; each block keeps the document stack in **VMEM** — the
+on-chip memory playing the role of the FPGA's block RAM stack (§3.2).
+
+* The event stream lives in SMEM (scalar-fetched once per event — the
+  "8-bit streaming XML interface" of Fig 3).
+* Each grid program owns one block of ≤BLK states, *closed under parent
+  pointers* (the partitioner in :mod:`repro.kernels.blocks` mirrors the
+  paper's §3.3 sort-and-cluster flow), so blocks never communicate —
+  exactly the property that lets the paper tile thousands of queries.
+* The per-event transition is a (1, BLK) × (BLK, BLK) matmul (parent
+  gather) plus VPU selects — one MXU issue per event per block.
+
+Outputs per state: ever-active flag and first-active event index; the
+caller maps accept states to queries (priority encoder).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+NO_MATCH = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(kind_ref, tag_ref, in_tag_ref, wild_ref, self_ref, init_ref,
+            p1h_ref, ever_ref, first_ref, stack_ref, *, n_events: int,
+            max_depth: int):
+    blk = in_tag_ref.shape[1]
+    stack_ref[...] = jnp.zeros_like(stack_ref)
+    stack_ref[0, :] = init_ref[0, :]
+    in_tag = in_tag_ref[0, :]
+    wild = wild_ref[0, :]
+    selfloop = self_ref[0, :]
+    p1h = p1h_ref[0]
+
+    def body(i, carry):
+        depth, ever, first = carry
+        k = kind_ref[i]
+        t = tag_ref[i]
+        is_open = k == ref.OPEN
+        is_close = k == ref.CLOSE
+        row = stack_ref[pl.dslice(depth, 1), :]                       # (1,BLK)
+        tagmatch = (in_tag == t).astype(jnp.float32) + wild
+        src = jnp.dot(row, p1h, preferred_element_type=jnp.float32)
+        nxt = jnp.minimum(src * tagmatch[None, :] + row * selfloop[None, :],
+                          1.0)
+        widx = jnp.clip(depth + 1, 0, max_depth + 1)
+        old = stack_ref[pl.dslice(widx, 1), :]
+        stack_ref[pl.dslice(widx, 1), :] = jnp.where(is_open, nxt, old)
+        depth = jnp.clip(
+            depth + jnp.where(is_open, 1, jnp.where(is_close, -1, 0)),
+            0, max_depth + 1)
+        active = jnp.where(is_open, nxt[0], jnp.zeros((blk,), jnp.float32))
+        newly = (active > 0) & (ever == 0)
+        first = jnp.where(newly, i, first)
+        ever = jnp.maximum(ever, active)
+        return depth, ever, first
+
+    depth, ever, first = jax.lax.fori_loop(
+        0, n_events,
+        body,
+        (jnp.int32(0), jnp.zeros((blk,), jnp.float32),
+         jnp.full((blk,), NO_MATCH, jnp.int32)))
+    ever_ref[0, :] = ever
+    first_ref[0, :] = first
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_depth", "interpret"))
+def stream_filter_pallas(kind: jax.Array, tag: jax.Array,
+                         in_tag: jax.Array, wild: jax.Array,
+                         selfloop: jax.Array, init: jax.Array,
+                         parent_1h: jax.Array, *, max_depth: int = 48,
+                         interpret: bool = True
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Run all state blocks over one document.
+
+    kind/tag: (N,) int32.  Block tables: in_tag (G, BLK) int32;
+    wild/selfloop/init (G, BLK) f32; parent_1h (G, BLK, BLK) f32.
+    Returns ever (G, BLK) f32, first (G, BLK) int32.
+    """
+    g, blk = in_tag.shape
+    n = kind.shape[0]
+    ever, first = pl.pallas_call(
+        functools.partial(_kernel, n_events=n, max_depth=max_depth),
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # kind
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # tag
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # in_tag
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # wild
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # selfloop
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # init
+            pl.BlockSpec((1, blk, blk), lambda i: (i, 0, 0)),  # parent 1h
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, blk), jnp.float32),
+            jax.ShapeDtypeStruct((g, blk), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((max_depth + 2, blk), jnp.float32)],
+        interpret=interpret,
+    )(kind, tag, in_tag, wild, selfloop, init, parent_1h)
+    return ever, first

@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks the device count on first init.
+# Placeholder CPU devices let jax.make_mesh build the production meshes
+# (16×16 single-pod, 2×16×16 multi-pod) for lowering + compilation only —
+# nothing is ever allocated (ShapeDtypeStruct stand-ins everywhere).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the full-size config (bf16, padded heads, remat, grad-accum),
+  2. constructs abstract params / optimizer state / caches / batch
+     (``jax.eval_shape`` — no allocation),
+  3. jits the real train/prefill/decode step with explicit in/out
+     shardings from :mod:`repro.sharding.rules`,
+  4. ``.lower().compile()`` on the production mesh,
+  5. prints ``memory_analysis()`` / ``cost_analysis()`` and writes a JSON
+     artifact with trip-count-aware FLOPs / traffic / collective wire
+     bytes (``hlo_analysis``) for §Roofline.
+
+Usage::
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multipod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.cells import (Cell, batch_struct, decode_tokens_struct,
+                                dryrun_config, enumerate_cells, model_flops,
+                                serve_batch_struct)
+from repro.launch.hlo_analysis import analyze_text
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as T
+from repro.models.config import SHAPES
+from repro.sharding import mesh_context
+from repro.sharding import rules as R
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import make_train_step
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(opt_name: str, params_shape, pspecs, mesh):
+    """Optimizer-state specs mirroring the param specs (ZeRO via FSDP)."""
+    pleaves = jax.tree.leaves(params_shape)
+    sleaves = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(pleaves) == len(sleaves)
+    if opt_name == "adamw":
+        return {"m": list(sleaves), "v": list(sleaves)}
+    stats = []
+    for p, s in zip(pleaves, sleaves):
+        t = tuple(s) + (None,) * (len(p.shape) - len(tuple(s)))
+        if len(p.shape) >= 2:
+            stats.append({"vr": P(*t[:-1]), "vc": P(*(t[:-2] + t[-1:]))})
+        else:
+            stats.append({"v": P(*t)})
+    return {"stats": stats}
+
+
+def build_cell(cell: Cell, mesh):
+    """Returns (jitted_fn, abstract_args) for the cell's step."""
+    cfg = dryrun_config(cell.arch)
+    shape = cell.shape
+    params_shape = jax.eval_shape(
+        lambda: T.init_model(cfg, jax.random.PRNGKey(0)))
+    pspecs = R.param_specs(cfg, params_shape, mesh)
+    psh = _named(mesh, pspecs)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        osh = _named(mesh, opt_state_specs(cfg.optimizer, params_shape,
+                                           pspecs, mesh))
+        batch = batch_struct(cfg, shape)
+        bsh = _named(mesh, R.batch_specs(cfg, batch, mesh))
+        step = make_train_step(cfg, opt)
+        fn = jax.jit(step,
+                     in_shardings=(psh, osh, bsh, repl),
+                     out_shardings=(psh, osh, None),
+                     donate_argnums=(0, 1))
+        args = (params_shape, opt_shape, batch,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return cfg, fn, args
+
+    max_len = shape.seq_len
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, max_len,
+                             dtype=jnp.bfloat16))
+    csh = _named(mesh, R.cache_specs(cfg, cache_shape, mesh))
+
+    if shape.kind == "prefill":
+        batch = serve_batch_struct(cfg, shape)
+        bsh = _named(mesh, R.batch_specs(cfg, batch, mesh))
+
+        def prefill_fn(params, b, caches):
+            return T.prefill(cfg, params, b, caches)
+
+        fn = jax.jit(prefill_fn, in_shardings=(psh, bsh, csh),
+                     out_shardings=(None, csh), donate_argnums=(2,))
+        return cfg, fn, (params_shape, batch, cache_shape)
+
+    # decode: one new token against a full cache
+    tokens = decode_tokens_struct(shape)
+    tsh = _named(mesh, R.batch_specs(cfg, {"tokens": tokens},
+                                     mesh))["tokens"]
+
+    def decode_fn(params, tok, caches, pos):
+        return T.decode_step(cfg, params, tok, caches, pos)
+
+    fn = jax.jit(decode_fn, in_shardings=(psh, tsh, csh, repl),
+                 out_shardings=(None, csh), donate_argnums=(2,))
+    args = (params_shape, tokens, cache_shape,
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return cfg, fn, args
+
+
+def run_cell(cell: Cell, *, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = 512 if multi_pod else 256
+    art = {"cell": cell.name, "arch": cell.arch, "shape": cell.shape.name,
+           "mesh": mesh_name, "chips": chips}
+    if not cell.runnable:
+        art["status"] = "skip"
+        art["error"] = cell.skip_reason
+        return art
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh_context(mesh):
+            cfg, fn, args = build_cell(cell, mesh)
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print(f"[{cell.name} @ {mesh_name}] memory_analysis:", mem)
+        print(f"[{cell.name} @ {mesh_name}] cost_analysis flops:",
+              cost.get("flops"), "bytes:", cost.get("bytes accessed"))
+        txt = compiled.as_text()
+        if save_hlo:
+            with open(os.path.join(out_dir, cell.name + "." + mesh_name
+                                   + ".hlo.txt"), "w") as f:
+                f.write(txt)
+        ana = analyze_text(txt)
+        per_dev_hbm = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                       + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+        art.update({
+            "status": "ok",
+            "compile_s": round(time.time() - t0, 1),
+            "flops": ana["flops_per_device"] * chips,
+            "bytes_accessed": ana["traffic_bytes_per_device"] * chips,
+            "collective_bytes": ana["collective_bytes_per_device"] * chips,
+            "collective_breakdown": ana["collective_breakdown"],
+            "xla_cost_flops_per_dev": cost.get("flops"),
+            "memory_analysis": {
+                "argument_B": mem.argument_size_in_bytes,
+                "output_B": mem.output_size_in_bytes,
+                "temp_B": mem.temp_size_in_bytes,
+                "alias_B": mem.alias_size_in_bytes,
+            },
+            "per_device_hbm_peak": per_dev_hbm,
+            "fits_hbm_16g": bool(per_dev_hbm <= HBM_PER_CHIP),
+            "model_flops": model_flops(dryrun_config(cell.arch),
+                                       cell.shape),
+            "hlo_chars": len(txt),
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        art["status"] = "error"
+        art["error"] = f"{type(e).__name__}: {e}"
+        art["traceback"] = traceback.format_exc()[-4000:]
+        art["compile_s"] = round(time.time() - t0, 1)
+    return art
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = enumerate_cells()
+    if not args.all:
+        cells = [c for c in cells
+                 if (args.arch is None or c.arch == args.arch)
+                 and (args.shape is None or c.shape.name == args.shape)]
+    ok = True
+    for cell in cells:
+        art = run_cell(cell, multi_pod=args.multipod, out_dir=args.out,
+                       save_hlo=args.save_hlo)
+        mesh_name = art["mesh"]
+        path = os.path.join(args.out, f"{cell.name}.{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(art, f, indent=1)
+        status = art["status"]
+        extra = (f" compile={art.get('compile_s')}s"
+                 f" hbm/dev={art.get('per_device_hbm_peak', 0)/2**30:.2f}GiB"
+                 if status == "ok" else f" ({art.get('error', '')[:120]})")
+        print(f"[dryrun] {cell.name} @ {mesh_name}: {status}{extra}",
+              flush=True)
+        ok &= status in ("ok", "skip")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh definition.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (the dry-run sets the placeholder device count
+before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips/pod; multi-pod adds a leading 2-pod axis.
+
+    Axes: "data" carries DP+FSDP, "model" carries TP/EP, "pod" composes
+    with "data" for hierarchical data parallelism (gradient reduction over
+    ICI within a pod, DCN across pods).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Debug mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

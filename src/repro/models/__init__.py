@@ -1,0 +1,9 @@
+"""Assigned-architecture model zoo (pure JAX, scan-over-layers).
+
+Families: dense GQA transformers, MLA, MoE (token-choice top-k with
+sort-based dispatch), Mamba2/SSD, hybrid (Zamba2), encoder-decoder
+(Whisper backbone), VLM (InternVL backbone).  Modality frontends are
+stubs per the assignment: ``input_specs`` provides precomputed
+frame/patch embeddings.
+"""
+from .config import ModelConfig, SHAPES, ShapeSpec  # noqa: F401

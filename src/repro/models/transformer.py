@@ -1,0 +1,639 @@
+"""Model assembly for every family in the zoo.
+
+All forward passes share one entry point:
+
+    params            = init_model(cfg, key)
+    loss, metrics     = train_loss(cfg, params, batch)
+    logits, cache     = prefill(cfg, params, batch, cache)
+    logits, cache     = decode_step(cfg, params, tokens, cache, cache_pos)
+
+Layers are stacked (leading ``n_layers`` axis) and applied with
+``lax.scan`` so the HLO stays small at 60+ layers; ``cfg.remat`` wraps the
+scanned body in ``jax.checkpoint`` (only layer-boundary activations are
+kept live — the remat policy the §Perf notes discuss).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import constrain
+from .config import ModelConfig
+from . import layers as L
+
+Params = dict[str, Any]
+
+# Remat note: saving post-TP-reduction outputs (tagged "post_collective"
+# in layers.py) to skip backward re-all-reduces was tried and REVERTED:
+# collective term −10–15%, but the saved (B,L,D) tensors per layer cost
+# +20–70 GiB/dev under grad accumulation — net loss.  The tags remain for
+# future selective policies (e.g. save only every k-th layer).  See
+# EXPERIMENTS.md §Perf iteration R1.
+_REMAT_POLICY = jax.checkpoint_policies.save_only_these_names(
+    "post_collective")
+
+
+# ---------------------------------------------------------------- helpers
+def _stack_init(fn, key, n: int) -> Params:
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    """On-the-fly sinusoidal embedding for arbitrary positions (b, l)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, None, :]
+    ang = positions.astype(jnp.float32)[..., None] / (10000 ** (dim / d))
+    out = jnp.zeros(positions.shape + (d,), jnp.float32)
+    out = out.at[..., 0::2].set(jnp.sin(ang))
+    out = out.at[..., 1::2].set(jnp.cos(ang))
+    return out
+
+
+def _embed(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embed"], tokens, axis=0).astype(
+        L.dtype_of(cfg))
+
+
+def _unembed(cfg: ModelConfig, params: Params, x: jax.Array) -> jax.Array:
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bld,vd->blv", x, w)
+    logits = constrain(logits, ("dp", None, "model"))
+    if cfg.vocab_eff != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_eff) >= cfg.vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_ce_from_hidden(cfg: ModelConfig, params: Params, h: jax.Array,
+                           labels: jax.Array,
+                           mask: jax.Array | None = None):
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    The unembed matmul + logsumexp run per sequence chunk under a
+    checkpointed scan — peak memory O(B·chunk·V) instead of O(B·S·V),
+    which is what keeps the 150k-vocab configs inside HBM at seq 4k–32k.
+    """
+    b, s, d = h.shape
+    chunk = cfg.ce_chunk
+    if not chunk or s % chunk != 0 or s <= chunk:
+        logits = _unembed(cfg, params, h)
+        return cross_entropy(logits, labels, mask)
+    nc = s // chunk
+    hs = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    if mask is None:
+        ms = jnp.ones((nc, b, chunk), jnp.float32)
+    else:
+        ms = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0).astype(
+            jnp.float32)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hc, lc, mc = xs
+        logits = _unembed(cfg, params, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ------------------------------------------------------- decoder layer(s)
+def _init_decoder_layer(cfg: ModelConfig, ffn: str, d_ff: int):
+    def init(key):
+        ks = jax.random.split(key, 4)
+        dt = L.pdtype_of(cfg)
+        p = {"ln1": L.init_norm(cfg.d_model, dt),
+             "ln2": L.init_norm(cfg.d_model, dt)}
+        if cfg.mla:
+            p["attn"] = L.init_mla(cfg, ks[0])
+        else:
+            p["attn"] = L.init_attention(cfg, ks[0])
+        if ffn == "moe":
+            p["moe"] = L.init_moe(cfg, ks[1])
+        else:
+            p["mlp"] = L.init_mlp(cfg, ks[1], d_ff=d_ff, gelu=cfg.mlp_gelu)
+        return p
+    return init
+
+
+def _decoder_layer(cfg: ModelConfig, lp: Params, x: jax.Array, *,
+                   positions, cache, cache_pos, ffn: str):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla:
+        a, new_cache = L.mla_attention(cfg, lp["attn"], h,
+                                       positions=positions, cache=cache,
+                                       cache_pos=cache_pos)
+    else:
+        a, new_cache = L.attention(cfg, lp["attn"], h, positions=positions,
+                                   causal=True, cache=cache,
+                                   cache_pos=cache_pos)
+    x = x + a
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    f = L.moe(cfg, lp["moe"], h2) if ffn == "moe" \
+        else L.mlp(cfg, lp["mlp"], h2, gelu=cfg.mlp_gelu)
+    x = x + f
+    x = constrain(x, ("dp", None, None))
+    return x, new_cache
+
+
+def _scan_stack(cfg: ModelConfig, stacked: Params, x: jax.Array, *,
+                positions, caches, cache_pos, ffn: str):
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        lp, c = xs if has_cache else (xs, None)
+        y, nc = _decoder_layer(cfg, lp, carry, positions=positions,
+                               cache=c, cache_pos=cache_pos, ffn=ffn)
+        return y, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (stacked, caches) if has_cache else stacked
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, (new_caches if has_cache else None)
+
+
+# ===================================================== dense / moe / vlm
+def _init_decoder_lm(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = L.pdtype_of(cfg)
+    p: Params = {
+        "embed": L._dense_init(ks[0], (cfg.vocab_eff, cfg.d_model), dt,
+                               scale=0.02),
+        "final_norm": L.init_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._dense_init(ks[1], (cfg.vocab_eff, cfg.d_model),
+                                     dt, scale=0.02)
+    n_main = cfg.n_layers - cfg.dense_prefix
+    if cfg.dense_prefix:
+        p["prefix_layers"] = _stack_init(
+            _init_decoder_layer(cfg, "mlp", cfg.dense_d_ff or cfg.d_ff),
+            ks[2], cfg.dense_prefix)
+    ffn = "moe" if cfg.n_experts else "mlp"
+    p["layers"] = _stack_init(_init_decoder_layer(cfg, ffn, cfg.d_ff),
+                              ks[3], n_main)
+    if cfg.family == "vlm":
+        p["patch_proj"] = L._dense_init(ks[4], (cfg.d_model, cfg.d_model), dt)
+    if cfg.mtp:
+        p["mtp"] = {
+            "proj": L._dense_init(ks[5], (2 * cfg.d_model, cfg.d_model), dt),
+            "norm": L.init_norm(cfg.d_model, dt),
+            "layer": _init_decoder_layer(cfg, "mlp",
+                                         cfg.dense_d_ff or cfg.d_ff)(ks[6]),
+            "final_norm": L.init_norm(cfg.d_model, dt),
+        }
+    return p
+
+
+def _decoder_lm_apply(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                      *, patches=None, caches=None, cache_pos=None,
+                      return_hidden: bool = False):
+    x = _embed(cfg, params, tokens)
+    if cfg.family == "vlm" and patches is not None:
+        pe = patches.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+    b, l, _ = x.shape
+    if cache_pos is not None and tokens.shape[1] == 1:
+        positions = jnp.full((b, 1), cache_pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    x = constrain(x, ("dp", None, None))
+    new_caches: Params = {}
+    if cfg.dense_prefix:
+        c = caches.get("prefix") if caches else None
+        x, nc = _scan_stack(cfg, params["prefix_layers"], x,
+                            positions=positions, caches=c,
+                            cache_pos=cache_pos, ffn="mlp")
+        new_caches["prefix"] = nc
+    ffn = "moe" if cfg.n_experts else "mlp"
+    c = caches.get("main") if caches else None
+    x, nc = _scan_stack(cfg, params["layers"], x, positions=positions,
+                        caches=c, cache_pos=cache_pos, ffn=ffn)
+    new_caches["main"] = nc
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, (new_caches if caches else None)
+    logits = _unembed(cfg, params, h)
+    return logits, (new_caches if caches else None)
+
+
+# ================================================================ ssm lm
+def _init_ssm_lm(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = L.pdtype_of(cfg)
+
+    def init_layer(k):
+        return {"ln": L.init_norm(cfg.d_model, dt),
+                "mamba": L.init_mamba2(cfg, k)}
+
+    p: Params = {
+        "embed": L._dense_init(ks[0], (cfg.vocab_eff, cfg.d_model), dt,
+                               scale=0.02),
+        "layers": _stack_init(init_layer, ks[1], cfg.n_layers),
+        "final_norm": L.init_norm(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._dense_init(ks[2], (cfg.vocab_eff, cfg.d_model),
+                                     dt, scale=0.02)
+    return p
+
+
+def _ssm_layer(cfg, lp, x, cache, cache_pos):
+    h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+    y, nc = L.mamba2(cfg, lp["mamba"], h, cache=cache, cache_pos=cache_pos)
+    return x + y, nc
+
+
+def _ssm_lm_apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+                  caches=None, cache_pos=None, return_hidden: bool = False):
+    x = _embed(cfg, params, tokens)
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        lp, c = xs if has_cache else (xs, None)
+        y, nc = _ssm_layer(cfg, lp, carry, c, cache_pos)
+        return y, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["layers"], caches["main"]) if has_cache else params["layers"]
+    x, nc = jax.lax.scan(body, x, xs)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return h, ({"main": nc} if has_cache else None)
+    logits = _unembed(cfg, params, h)
+    return logits, ({"main": nc} if has_cache else None)
+
+
+# ============================================================= hybrid lm
+def _n_attn_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_period
+
+
+def _init_hybrid_lm(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 6)
+    dt = L.pdtype_of(cfg)
+
+    def init_layer(k):
+        return {"ln": L.init_norm(cfg.d_model, dt),
+                "mamba": L.init_mamba2(cfg, k)}
+
+    p: Params = {
+        "embed": L._dense_init(ks[0], (cfg.vocab_eff, cfg.d_model), dt,
+                               scale=0.02),
+        "layers": _stack_init(init_layer, ks[1], cfg.n_layers),
+        # the *shared* attention block (Zamba2): one set of weights,
+        # invoked every `hybrid_period` layers
+        "shared_attn": {"ln": L.init_norm(cfg.d_model, dt),
+                        "attn": L.init_attention(cfg, ks[2]),
+                        "ln2": L.init_norm(cfg.d_model, dt),
+                        "mlp": L.init_mlp(cfg, ks[3])},
+        "final_norm": L.init_norm(cfg.d_model, dt),
+        "unembed": L._dense_init(ks[4], (cfg.vocab_eff, cfg.d_model), dt,
+                                 scale=0.02),
+    }
+    return p
+
+
+def _shared_attn_block(cfg, sp, x, positions, cache, cache_pos):
+    h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
+    a, nc = L.attention(cfg, sp["attn"], h, positions=positions,
+                        causal=True, cache=cache, cache_pos=cache_pos)
+    x = x + a
+    h2 = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = x + L.mlp(cfg, sp["mlp"], h2)
+    return x, nc
+
+
+def _hybrid_lm_apply(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                     *, caches=None, cache_pos=None,
+                     return_hidden: bool = False):
+    x = _embed(cfg, params, tokens)
+    b, l, _ = x.shape
+    if cache_pos is not None and l == 1:
+        positions = jnp.full((b, 1), cache_pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    period = cfg.hybrid_period
+    n_inv = _n_attn_invocations(cfg)
+    has_cache = caches is not None
+    sp = params["shared_attn"]
+
+    attn_caches = caches["attn"] if has_cache else None  # stacked (n_inv,...)
+
+    def body(carry, xs):
+        x, attn_c = carry
+        (lp, mc), idx = xs if has_cache else ((xs[0], None), xs[1])
+        x, new_mc = _ssm_layer(cfg, lp, x, mc, cache_pos)
+        is_attn = (idx % period) == (period - 1)
+        inv = jnp.minimum(idx // period, n_inv - 1)
+
+        def with_attn(operand):
+            x, attn_c = operand
+            if has_cache:
+                c_l = jax.tree.map(
+                    lambda t: jax.lax.dynamic_index_in_dim(t, inv, 0,
+                                                           keepdims=False),
+                    attn_c)
+            else:
+                c_l = None
+            y, nc = _shared_attn_block(cfg, sp, x, positions, c_l, cache_pos)
+            if has_cache:
+                attn_c = jax.tree.map(
+                    lambda t, u: jax.lax.dynamic_update_index_in_dim(
+                        t, u.astype(t.dtype), inv, 0),
+                    attn_c, nc)
+            return y, attn_c
+
+        x, attn_c = jax.lax.cond(is_attn, with_attn, lambda o: o,
+                                 (x, attn_c))
+        return (x, attn_c), new_mc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    xs = ((params["layers"], caches["main"]), idxs) if has_cache \
+        else (params["layers"], idxs)
+    (x, attn_caches), new_mamba = jax.lax.scan(body, (x, attn_caches), xs)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    nc = {"main": new_mamba, "attn": attn_caches} if has_cache else None
+    if return_hidden:
+        return h, nc
+    logits = _unembed(cfg, params, h)
+    return logits, nc
+
+
+# ================================================================ encdec
+def _init_encdec(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = L.pdtype_of(cfg)
+
+    def init_enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": L.init_norm(cfg.d_model, dt),
+                "attn": L.init_attention(cfg, k1),
+                "ln2": L.init_norm(cfg.d_model, dt),
+                "mlp": L.init_mlp(cfg, k2, gelu=True)}
+
+    def init_dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": L.init_norm(cfg.d_model, dt),
+                "self_attn": L.init_attention(cfg, k1),
+                "ln_x": L.init_norm(cfg.d_model, dt),
+                "cross_attn": L.init_attention(cfg, k2, cross=True),
+                "ln2": L.init_norm(cfg.d_model, dt),
+                "mlp": L.init_mlp(cfg, k3, gelu=True)}
+
+    return {
+        "embed": L._dense_init(ks[0], (cfg.vocab_eff, cfg.d_model), dt,
+                               scale=0.02),
+        "enc_layers": _stack_init(init_enc_layer, ks[1], cfg.n_enc_layers),
+        "enc_norm": L.init_norm(cfg.d_model, dt),
+        "dec_layers": _stack_init(init_dec_layer, ks[2], cfg.n_layers),
+        "final_norm": L.init_norm(cfg.d_model, dt),
+        "unembed": L._dense_init(ks[3], (cfg.vocab_eff, cfg.d_model), dt,
+                                 scale=0.02),
+    }
+
+
+def _encode(cfg: ModelConfig, params: Params, frames: jax.Array):
+    """Encoder over precomputed frame embeddings (conv frontend stub)."""
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), (b, t))
+    x = frames.astype(L.dtype_of(cfg)) + _sinusoid(
+        positions, cfg.d_model).astype(L.dtype_of(cfg))
+
+    def body(carry, lp):
+        h = L.rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        a, _ = L.attention(cfg, lp["attn"], h, positions=positions,
+                           causal=False)
+        x = carry + a
+        h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        return x + L.mlp(cfg, lp["mlp"], h2, gelu=True), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_layer(cfg, lp, x, enc_out, positions, cache, cache_pos):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    self_c = cache.get("self") if cache else None
+    a, new_self = L.attention(cfg, lp["self_attn"], h, positions=positions,
+                              causal=True, cache=self_c,
+                              cache_pos=cache_pos)
+    x = x + a
+    hx = L.rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    cross_c = cache.get("cross") if cache else None
+    ca, new_cross = L.attention(cfg, lp["cross_attn"], hx,
+                                positions=positions, causal=False,
+                                kv_x=enc_out, cache=cross_c,
+                                cache_pos=cache_pos)
+    x = x + ca
+    h2 = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.mlp(cfg, lp["mlp"], h2, gelu=True)
+    nc = {"self": new_self, "cross": new_cross} if cache else None
+    return x, nc
+
+
+def _encdec_apply(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+                  frames=None, enc_out=None, caches=None, cache_pos=None,
+                  return_hidden: bool = False):
+    if enc_out is None and frames is not None:
+        enc_out = _encode(cfg, params, frames)
+    b, l = tokens.shape
+    x = _embed(cfg, params, tokens)
+    if cache_pos is not None and l == 1:
+        positions = jnp.full((b, 1), cache_pos, jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        lp, c = xs if has_cache else (xs, None)
+        y, nc = _dec_layer(cfg, lp, carry, enc_out, positions, c, cache_pos)
+        return y, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["dec_layers"], caches["dec"]) if has_cache \
+        else params["dec_layers"]
+    x, nc = jax.lax.scan(body, x, xs)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out_c = {"dec": nc, "enc_out": enc_out} if has_cache else None
+    if return_hidden:
+        return h, out_c
+    logits = _unembed(cfg, params, h)
+    return logits, out_c
+
+
+# ============================================================== public API
+def init_model(cfg: ModelConfig, key) -> Params:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _init_decoder_lm(cfg, key)
+    if cfg.family == "ssm":
+        return _init_ssm_lm(cfg, key)
+    if cfg.family == "hybrid":
+        return _init_hybrid_lm(cfg, key)
+    if cfg.family == "encdec":
+        return _init_encdec(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def forward_logits(cfg: ModelConfig, params: Params, batch: dict,
+                   caches=None, cache_pos=None, return_hidden: bool = False):
+    """Train/prefill/decode logits (cache passthrough when given)."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _decoder_lm_apply(cfg, params, batch["tokens"],
+                                 patches=batch.get("patches"),
+                                 caches=caches, cache_pos=cache_pos,
+                                 return_hidden=return_hidden)
+    if cfg.family == "ssm":
+        return _ssm_lm_apply(cfg, params, batch["tokens"], caches=caches,
+                             cache_pos=cache_pos,
+                             return_hidden=return_hidden)
+    if cfg.family == "hybrid":
+        return _hybrid_lm_apply(cfg, params, batch["tokens"], caches=caches,
+                                cache_pos=cache_pos,
+                                return_hidden=return_hidden)
+    if cfg.family == "encdec":
+        return _encdec_apply(cfg, params, batch["tokens"],
+                             frames=batch.get("frames"),
+                             enc_out=(caches or {}).get("enc_out"),
+                             caches=caches, cache_pos=cache_pos,
+                             return_hidden=return_hidden)
+    raise ValueError(cfg.family)
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch: dict):
+    """Next-token loss (+ MTP auxiliary when configured).
+
+    Computed from the final hidden states through the chunked-CE path so
+    (B, S, vocab) logits are never materialized whole."""
+    h, _ = forward_logits(cfg, params, batch, return_hidden=True)
+    if cfg.family == "vlm":
+        n_p = batch["patches"].shape[1]
+        h_tok = h[:, n_p:, :]
+    else:
+        h_tok = h
+    loss = chunked_ce_from_hidden(cfg, params, h_tok, batch["labels"],
+                                  batch.get("loss_mask"))
+    metrics = {"loss": loss}
+    if cfg.mtp:
+        mp = params["mtp"]
+        emb_next = _embed(cfg, params, batch["labels"])
+        cat = jnp.concatenate(
+            [L.rms_norm(h, mp["norm"], cfg.norm_eps), emb_next], axis=-1)
+        x2 = cat @ mp["proj"]
+        b, l, _ = x2.shape
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+        x2, _ = _decoder_layer(cfg, mp["layer"], x2, positions=positions,
+                               cache=None, cache_pos=None, ffn="mlp")
+        h2 = L.rms_norm(x2, mp["final_norm"], cfg.norm_eps)
+        # position t predicts token t+2: pair h2[:, t] with labels[:, t+1];
+        # pad + mask the last slot so the chunked CE keeps full length
+        bsz, s = batch["labels"].shape
+        labels_mtp = jnp.concatenate(
+            [batch["labels"][:, 1:], batch["labels"][:, -1:]], axis=1)
+        mask_mtp = jnp.concatenate(
+            [jnp.ones((bsz, s - 1), jnp.float32),
+             jnp.zeros((bsz, 1), jnp.float32)], axis=1)
+        mtp_loss = chunked_ce_from_hidden(cfg, params, h2, labels_mtp,
+                                          mask_mtp)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+        metrics["loss"] = loss
+    return loss, metrics
+
+
+# ------------------------------------------------------------ KV caches
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, enc_len: int | None = None) -> Params:
+    """Cache pytree matching forward_logits(caches=...) layout."""
+    kv, dh = cfg.n_kv_eff, cfg.d_head
+
+    def attn_cache(n_layers, length):
+        return {"k": jnp.zeros((n_layers, batch, length, kv, dh), dtype),
+                "v": jnp.zeros((n_layers, batch, length, kv, dh), dtype)}
+
+    def mla_cache(n_layers, length):
+        return {"c_kv": jnp.zeros((n_layers, batch, length,
+                                   cfg.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((n_layers, batch, length,
+                                     cfg.qk_rope_dim), dtype)}
+
+    def ssm_cache(n_layers):
+        return {
+            "conv_x": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1,
+                                 cfg.d_inner), dtype),
+            "conv_bc": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1,
+                                  2 * cfg.ssm_groups * cfg.ssm_state), dtype),
+            "ssd": jnp.zeros((n_layers, batch, cfg.ssm_heads,
+                              cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        total = max_len + (cfg.frontend_len if cfg.family == "vlm" else 0)
+        n_main = cfg.n_layers - cfg.dense_prefix
+        per = mla_cache if cfg.mla else attn_cache
+        caches: Params = {"main": per(n_main, total)}
+        if cfg.dense_prefix:
+            caches["prefix"] = per(cfg.dense_prefix, total)
+        return caches
+    if cfg.family == "ssm":
+        return {"main": ssm_cache(cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_inv = _n_attn_invocations(cfg)
+        return {"main": ssm_cache(cfg.n_layers),
+                "attn": attn_cache(n_inv, max_len)}
+    if cfg.family == "encdec":
+        el = enc_len or cfg.frontend_len
+        return {"dec": {"self": attn_cache(cfg.n_layers, max_len),
+                        "cross": attn_cache(cfg.n_layers, el)},
+                "enc_out": jnp.zeros((batch, el, cfg.d_model), dtype)}
+    raise ValueError(cfg.family)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: dict, caches: Params):
+    """Process the full prompt, return (last-position logits, caches)."""
+    if cfg.family == "encdec":
+        enc_out = _encode(cfg, params, batch["frames"])
+        # precompute cross k/v per layer? stored as enc_out; cross attn
+        # recomputes k/v from enc_out per step (compute/TPU tradeoff —
+        # see DESIGN.md serving notes)
+        caches = dict(caches)
+        caches["enc_out"] = enc_out
+    logits, caches = forward_logits(cfg, params, batch, caches=caches,
+                                    cache_pos=None)
+    return logits[:, -1:, :], caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                caches: Params, cache_pos):
+    """One-token decode with a populated cache at position cache_pos."""
+    logits, caches = forward_logits(cfg, params, {"tokens": tokens},
+                                    caches=caches, cache_pos=cache_pos)
+    return logits, caches

@@ -1,0 +1,2 @@
+"""Serving: prefill/decode steps, batched engine, request routing."""
+from .engine import ServeEngine  # noqa: F401

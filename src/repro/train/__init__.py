@@ -1,0 +1,4 @@
+"""Training substrate: optimizers, train step (grad-accum + remat),
+gradient compression, fault-tolerant loop."""
+from .optimizer import make_optimizer  # noqa: F401
+from .train_step import make_train_step  # noqa: F401

@@ -1,0 +1,66 @@
+"""int8 gradient compression with error feedback (pure-DP mode).
+
+At 1000+ nodes the cross-pod (DCN) gradient all-reduce dominates; int8
+quantization with per-tensor scale cuts it 4× vs fp32 accumulators.
+Residual quantization error is carried in an error-feedback buffer so the
+*expected* update is unbiased (Seide et al. / EF-SGD).
+
+This transform operates on the gradient pytree *before* the optimizer.
+In replicated-DP deployments the quantize→psum→dequantize runs inside
+``shard_map`` over the DP axes (``compressed_psum``); under FSDP the
+reduction is XLA-managed, so only the quantize/dequantize (with error
+feedback) is applied — still exercising the numerics path end to end.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_error_feedback_compressor():
+    """Returns (init_state_fn, compress_fn) for the train step."""
+
+    def init(params):
+        return {"ef": [jnp.zeros(p.shape, jnp.float32)
+                       for p in jax.tree.leaves(params)]}
+
+    def compress(grads, opt_state):
+        leaves, treedef = jax.tree.flatten(grads)
+        efs = opt_state["compression"]["ef"]
+        out, new_ef = [], []
+        for g, e in zip(leaves, efs):
+            g32 = g.astype(jnp.float32) + e
+            q, scale = quantize_int8(g32)
+            deq = dequantize_int8(q, scale)
+            new_ef.append(g32 - deq)
+            out.append(deq)
+        opt_state = dict(opt_state)
+        opt_state["compression"] = {"ef": new_ef}
+        return treedef.unflatten(out), opt_state
+
+    return init, compress
+
+
+def compressed_psum(g: jax.Array, axis_name: str) -> jax.Array:
+    """int8 all-reduce (inside shard_map): quantize → psum int32 → scale.
+
+    The per-shard scales are maxed across the axis so the int32 sum is
+    exact in the shared scale.
+    """
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    scale = jax.lax.pmax(scale, axis_name)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,86 @@
+"""The train step: grad accumulation, fp32 grad accumulators, optional
+int8-compressed data-parallel gradient reduction.
+
+Gradient flow under pjit: the batch is sharded over DP and params over
+(FSDP "data" × TP "model"), so XLA emits reduce-scatters for the gradient
+reduction automatically — overlapped with the backward scan.  Gradient
+*accumulation* (``cfg.grad_accum``) runs as a ``lax.scan`` over
+microbatches with an fp32 accumulator, which bounds activation memory for
+the 100B+ configs (memory budget in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from ..models.config import ModelConfig
+from .optimizer import Optimizer, global_norm
+
+
+def _split_micro(batch: dict, ga: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % ga == 0, (b, ga)
+        return x.reshape((ga, b // ga) + x.shape[1:])
+    return {k: r(v) for k, v in batch.items()}
+
+
+def grads_and_metrics(cfg: ModelConfig, params: Any, batch: dict):
+    """Accumulated fp32 grads + mean loss over microbatches."""
+    ga = max(cfg.grad_accum, 1)
+
+    def loss_fn(p, mb):
+        loss, metrics = T.train_loss(cfg, p, mb)
+        return loss, metrics
+
+    if ga == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return grads, metrics
+
+    micro = _split_micro(batch, ga)
+    acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def body(acc, mb):
+        (loss, metrics), g = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        acc = jax.tree.map(
+            lambda a, gi: a + (gi.astype(jnp.float32) / ga).astype(acc_dt),
+            acc, g)
+        return acc, metrics
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+    grads, metrics = jax.lax.scan(body, zeros, micro)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    metrics = jax.tree.map(lambda m: m.mean(), metrics)
+    return grads, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    compress: Callable | None = None):
+    """Returns step(params, opt_state, batch, step_idx) → (p, s, metrics).
+
+    ``compress``: optional gradient-compression transform (see
+    train/compression.py) applied between grad computation and the
+    optimizer — used in pure-DP replicated mode.
+    """
+
+    def step(params, opt_state, batch, step_idx):
+        grads, metrics = grads_and_metrics(cfg, params, batch)
+        if compress is not None:
+            grads, opt_state = compress(grads, opt_state)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        new_params, new_opt = opt.update(grads, opt_state, params, step_idx)
+        # carry non-optimizer state (e.g. compression error feedback)
+        for k, v in opt_state.items():
+            if k not in new_opt:
+                new_opt[k] = v
+        return new_params, new_opt, metrics
+
+    return step

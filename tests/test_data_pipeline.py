@@ -1,0 +1,69 @@
+"""Filter stage routing + token pipeline determinism."""
+import numpy as np
+
+from repro.core.dictionary import TagDictionary
+from repro.core.engines.yfilter import YFilterEngine
+from repro.core.nfa import compile_queries
+from repro.data.filter_stage import FilterStage
+from repro.data.generator import DTD, gen_corpus, gen_profiles
+from repro.data.tokens import TokenPipeline, XMLBytePipeline
+
+
+class TestFilterStage:
+    def _setup(self, engine):
+        dtd = DTD.generate(n_tags=16, seed=1)
+        d = TagDictionary()
+        dtd.register(d)
+        profiles = gen_profiles(dtd, n=24, length=3, seed=1)
+        docs = gen_corpus(dtd, n_docs=10, nodes_per_doc=80, seed=1)
+        stage = FilterStage(profiles, d, n_shards=4, engine=engine,
+                            batch_size=4)
+        return stage, docs, profiles, d
+
+    def test_routing_consistent_across_engines(self):
+        routes = {}
+        for engine in ("levelwise", "yfilter", "streaming"):
+            stage, docs, _, _ = self._setup(engine)
+            got = [r for batch in stage.route(docs) for r in batch]
+            routes[engine] = {(r.doc_index, r.shard):
+                              tuple(r.matched_profiles) for r in got}
+        assert routes["levelwise"] == routes["yfilter"] == routes["streaming"]
+
+    def test_routing_matches_ground_truth(self):
+        stage, docs, profiles, d = self._setup("yfilter")
+        nfa = compile_queries(profiles, d)
+        eng = YFilterEngine(nfa)
+        got = [r for batch in stage.route(docs) for r in batch]
+        for r in got:
+            res = eng.filter_document(docs[r.doc_index])
+            want = set(np.nonzero(res.matched)[0])
+            assert set(r.matched_profiles) <= want
+            for q in r.matched_profiles:
+                assert stage.shard_of_profile[q] == r.shard
+
+    def test_selectivity(self):
+        stage, docs, _, _ = self._setup("levelwise")
+        s = stage.selectivity(docs)
+        assert 0.0 <= s <= 1.0
+
+
+class TestTokenPipelines:
+    def test_deterministic_and_shard_disjoint(self):
+        p0 = TokenPipeline(vocab=100, batch=2, seq_len=16, seed=7, shard=0)
+        p0b = TokenPipeline(vocab=100, batch=2, seq_len=16, seed=7, shard=0)
+        p1 = TokenPipeline(vocab=100, batch=2, seq_len=16, seed=7, shard=1)
+        a, b, c = p0.batch_at(3), p0b.batch_at(3), p1.batch_at(3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        assert not np.array_equal(a["tokens"], c["tokens"])
+        # next-token alignment
+        np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+    def test_xml_byte_pipeline(self):
+        dtd = DTD.generate(n_tags=8, seed=2)
+        docs = gen_corpus(dtd, n_docs=4, nodes_per_doc=50, seed=2)
+        p = XMLBytePipeline(docs, batch=2, seq_len=32)
+        b = p.batch_at(0)
+        assert b["tokens"].shape == (2, 32)
+        assert b["tokens"].max() < 256
+        np.testing.assert_array_equal(p.batch_at(1)["tokens"],
+                                      p.batch_at(1)["tokens"])

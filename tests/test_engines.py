@@ -1,0 +1,223 @@
+"""Engine equivalence: oracle == yfilter == streaming == levelwise.
+
+The core correctness claim of the reproduction — every engine implements
+the same XPath filtering semantics, from the pure-python ground truth to
+the TPU-shaped levelwise matmul engine.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dictionary import TagDictionary
+from repro.core.engines import FilterResult
+from repro.core.engines.levelwise import LevelwiseEngine
+from repro.core.engines.oracle import filter_document as oracle_filter
+from repro.core.engines.streaming import StreamingEngine
+from repro.core.engines.yfilter import YFilterEngine
+from repro.core.events import CLOSE, OPEN, EventStream
+from repro.core.nfa import compile_queries
+from repro.core.xpath import parse
+from repro.data.generator import DTD, gen_document, gen_profiles
+
+
+def ev_from_nested(spec) -> EventStream:
+    """spec: nested lists of (tag, [children])."""
+    ks, ts = [], []
+
+    def walk(node):
+        tag, kids = node
+        ks.append(OPEN)
+        ts.append(tag)
+        for k in kids:
+            walk(k)
+        ks.append(CLOSE)
+        ts.append(tag)
+
+    for n in spec:
+        walk(n)
+    return EventStream(np.array(ks, np.int8), np.array(ts, np.int32))
+
+
+def run_all_engines(profiles, ev, dictionary, shared=True):
+    from repro.core.engines.levelwise import WavefrontEngine
+    queries = [parse(p) if isinstance(p, str) else p for p in profiles]
+    nfa = compile_queries(queries, dictionary, shared=shared)
+    res = {
+        "oracle": oracle_filter(nfa, ev, dictionary),
+        "yfilter": YFilterEngine(nfa).filter_document(ev),
+        "streaming": StreamingEngine(nfa, max_depth=32).filter_document(ev),
+        "levelwise": LevelwiseEngine(nfa, use_matmul=True).filter_document(ev),
+        "levelwise_cmp": LevelwiseEngine(nfa, use_matmul=False).filter_document(ev),
+        "wavefront": WavefrontEngine(nfa, chunk=16).filter_document(ev),
+    }
+    return res
+
+
+def assert_all_equal(res: dict[str, FilterResult]):
+    ref = res["oracle"]
+    for name, r in res.items():
+        np.testing.assert_array_equal(
+            r.matched, ref.matched, err_msg=f"{name} matched != oracle")
+        np.testing.assert_array_equal(
+            r.first_event, ref.first_event, err_msg=f"{name} location != oracle")
+
+
+# --------------------------------------------------------- directed cases
+def fresh_dict(n=30):
+    return TagDictionary.build([f"t{i}" for i in range(n)])
+
+
+class TestDirectedSemantics:
+    def test_ancestor_descendant(self):
+        d = fresh_dict()
+        #  t0 > t1 > t2 ; t3
+        ev = ev_from_nested([(0, [(1, [(2, [])])]), (3, [])])
+        res = run_all_engines(["t0//t2", "t0//t3", "t3", "//t1//t2"], ev, d)
+        assert list(res["oracle"].matched) == [True, False, True, True]
+        assert_all_equal(res)
+
+    def test_parent_child_needs_consecutive_levels(self):
+        d = fresh_dict()
+        # t0 > t1 > t2 — t0/t2 must NOT match (t2 is grandchild)
+        ev = ev_from_nested([(0, [(1, [(2, [])])])])
+        res = run_all_engines(["t0/t2", "t0/t1", "t1/t2", "t0/t1/t2"], ev, d)
+        assert list(res["oracle"].matched) == [False, True, True, True]
+        assert_all_equal(res)
+
+    def test_descendant_must_be_inside(self):
+        d = fresh_dict()
+        # <t0></t0><t1></t1>: t0//t1 must NOT match (t1 is sibling)
+        ev = ev_from_nested([(0, []), (1, [])])
+        res = run_all_engines(["t0//t1", "t0/t1"], ev, d)
+        assert list(res["oracle"].matched) == [False, False]
+        assert_all_equal(res)
+
+    def test_root_anchoring(self):
+        d = fresh_dict()
+        # /t1 anchored: t1 exists only nested → no match
+        ev = ev_from_nested([(0, [(1, [])])])
+        res = run_all_engines(["/t1", "/t0", "/t0/t1"], ev, d)
+        assert list(res["oracle"].matched) == [False, True, True]
+        assert_all_equal(res)
+
+    def test_wildcards(self):
+        d = fresh_dict()
+        ev = ev_from_nested([(0, [(1, [(2, [])])])])
+        res = run_all_engines(["//*", "t0/*/t2", "//*/t1", "t0//*"], ev, d)
+        assert list(res["oracle"].matched) == [True, True, True, True]
+        assert_all_equal(res)
+
+    def test_recursive_tags(self):
+        d = fresh_dict()
+        # t0 > t0 > t1 — tests the nested-same-tag case where the paper's
+        # flat regex is approximate but the stack engines are exact
+        ev = ev_from_nested([(0, [(0, [(1, [])]), (2, [])])])
+        res = run_all_engines(["t0/t0", "t0/t0/t1", "t0//t1", "t1/t0"], ev, d)
+        assert list(res["oracle"].matched) == [True, True, True, False]
+        assert_all_equal(res)
+
+    def test_match_location_is_first(self):
+        d = fresh_dict()
+        # two matches of t0//t1; first is event 1
+        ev = ev_from_nested([(0, [(1, []), (1, [])])])
+        res = run_all_engines(["t0//t1"], ev, d)
+        assert res["oracle"].first_event[0] == 1
+        assert_all_equal(res)
+
+    def test_unshared_equals_shared(self):
+        d = fresh_dict()
+        ev = ev_from_nested([(0, [(1, [(2, [])]), (3, [])])])
+        profiles = ["t0//t2", "t0//t3", "t0/t1/t2", "t0/t1", "t0//t1//t2"]
+        r_shared = run_all_engines(profiles, ev, d, shared=True)
+        r_unshared = run_all_engines(profiles, ev, d, shared=False)
+        assert_all_equal(r_shared)
+        assert_all_equal(r_unshared)
+        np.testing.assert_array_equal(r_shared["oracle"].matched,
+                                      r_unshared["oracle"].matched)
+
+    def test_deep_chain(self):
+        d = fresh_dict()
+        spec = (9, [])
+        for t in range(8, -1, -1):
+            spec = (t, [spec])
+        ev = ev_from_nested([spec])
+        res = run_all_engines(
+            ["t0/t1/t2/t3/t4/t5/t6/t7/t8/t9", "t0//t9", "t0//t4/t5//t9",
+             "t9/t0"], ev, d)
+        assert list(res["oracle"].matched) == [True, True, True, False]
+        assert_all_equal(res)
+
+
+# ------------------------------------------------------- randomized sweep
+class TestRandomizedEquivalence:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_generated_workload(self, seed):
+        dtd = DTD.generate(n_tags=16, seed=seed)
+        d = TagDictionary()
+        dtd.register(d)
+        profiles = gen_profiles(dtd, n=24, length=3 + seed % 3,
+                                p_desc=0.4, p_wild=0.15, seed=seed)
+        ev = gen_document(dtd, target_nodes=120, seed=seed)
+        res = run_all_engines(profiles, ev, d)
+        assert_all_equal(res)
+
+    @settings(max_examples=25, deadline=None)
+    @given(data=st.data())
+    def test_property_random_trees(self, data):
+        n_tags = data.draw(st.integers(2, 6))
+        d = TagDictionary.build([f"t{i}" for i in range(n_tags)])
+
+        def tree(depth):
+            return st.tuples(
+                st.integers(0, n_tags - 1),
+                st.lists(tree(depth - 1), max_size=3) if depth > 0
+                else st.just([]))
+
+        spec = data.draw(st.lists(tree(3), min_size=1, max_size=3))
+        ev = ev_from_nested(spec)
+        profiles = []
+        for _ in range(data.draw(st.integers(1, 6))):
+            k = data.draw(st.integers(1, 3))
+            parts = []
+            for i in range(k):
+                axis = data.draw(st.sampled_from(["/", "//"]))
+                tag = data.draw(st.sampled_from(
+                    [f"t{j}" for j in range(n_tags)] + ["*"]))
+                parts.append(axis + tag)
+            profiles.append("".join(parts))
+        res = run_all_engines(profiles, ev, d)
+        assert_all_equal(res)
+
+
+class TestBatchedPaths:
+    def test_streaming_batched_matches_single(self):
+        dtd = DTD.generate(n_tags=12, seed=3)
+        d = TagDictionary()
+        dtd.register(d)
+        profiles = gen_profiles(dtd, n=16, length=3, seed=3)
+        docs = [gen_document(dtd, target_nodes=60, seed=i) for i in range(4)]
+        nfa = compile_queries(profiles, d)
+        eng = StreamingEngine(nfa, max_depth=32)
+        singles = [eng.filter_document(doc) for doc in docs]
+        n = max(len(doc) for doc in docs)
+        kind = np.stack([doc.padded(n).kind for doc in docs])
+        tag = np.stack([doc.padded(n).tag_id for doc in docs])
+        batched = eng.filter_documents_batched(kind, tag)
+        for i, s in enumerate(singles):
+            np.testing.assert_array_equal(batched.matched[i], s.matched)
+            np.testing.assert_array_equal(batched.first_event[i], s.first_event)
+
+    def test_levelwise_batched_matches_single(self):
+        dtd = DTD.generate(n_tags=12, seed=4)
+        d = TagDictionary()
+        dtd.register(d)
+        profiles = gen_profiles(dtd, n=16, length=4, seed=4)
+        docs = [gen_document(dtd, target_nodes=60, seed=10 + i) for i in range(4)]
+        nfa = compile_queries(profiles, d)
+        eng = LevelwiseEngine(nfa)
+        singles = [eng.filter_document(doc) for doc in docs]
+        batched = eng.filter_documents_batched(docs)
+        for s, b in zip(singles, batched):
+            np.testing.assert_array_equal(b.matched, s.matched)
+            np.testing.assert_array_equal(b.first_event, s.first_event)

@@ -1,0 +1,158 @@
+"""Pallas kernels vs pure-jnp ref oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dictionary import TagDictionary
+from repro.core.engines.oracle import filter_document as oracle_filter
+from repro.core.engines.levelwise import LevelwiseEngine
+from repro.core.events import encode_bytes
+from repro.core.nfa import compile_queries, pad_states
+from repro.kernels import ops, ref
+from repro.kernels.blocks import partition
+from repro.kernels.nfa_transition import nfa_transition_pallas
+from repro.kernels.predecode import predecode_pallas
+from repro.kernels.stream_filter import stream_filter_pallas
+from repro.data.generator import DTD, gen_document, gen_profiles
+
+from test_engines import ev_from_nested, fresh_dict
+
+
+class TestPredecodeKernel:
+    @pytest.mark.parametrize("n_tags,text_fill", [(5, 0), (64, 3), (200, 9)])
+    def test_matches_ref_and_codec(self, n_tags, text_fill):
+        d = TagDictionary.build([f"t{i}" for i in range(n_tags)])
+        rng = np.random.default_rng(n_tags)
+        ids = rng.integers(0, n_tags, size=50)
+        ks, ts = [], []
+        for i in ids:
+            ks += [0, 1]
+            ts += [i, i]
+        from repro.core.events import EventStream
+        ev = EventStream(np.array(ks, np.int8), np.array(ts, np.int32))
+        buf = encode_bytes(ev, text_fill=text_fill)
+        arr = jnp.asarray(np.frombuffer(buf, np.uint8))
+        k_ref, t_ref = ref.predecode(arr)
+        k_pal, t_pal = predecode_pallas(arr, interpret=True)
+        np.testing.assert_array_equal(np.asarray(k_pal), np.asarray(k_ref))
+        np.testing.assert_array_equal(np.asarray(t_pal), np.asarray(t_ref))
+        back = ops.decode_document(buf, d)
+        np.testing.assert_array_equal(back.kind, ev.kind)
+        np.testing.assert_array_equal(back.tag_id, ev.tag_id)
+
+    @pytest.mark.parametrize("n", [1, 127, 128, 1025, 4096])
+    def test_shape_sweep_random_bytes(self, n):
+        rng = np.random.default_rng(n)
+        arr = jnp.asarray(rng.integers(0, 256, size=n, dtype=np.uint8))
+        k_ref, t_ref = ref.predecode(arr)
+        k_pal, t_pal = predecode_pallas(arr, interpret=True)
+        np.testing.assert_array_equal(np.asarray(k_pal), np.asarray(k_ref))
+        np.testing.assert_array_equal(np.asarray(t_pal), np.asarray(t_ref))
+
+
+class TestNfaTransitionKernel:
+    @pytest.mark.parametrize("w,s_mult,n_q", [(4, 1, 8), (16, 2, 24),
+                                              (130, 4, 64)])
+    def test_matches_ref(self, w, s_mult, n_q):
+        dtd = DTD.generate(n_tags=16, seed=w)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=n_q, length=4, seed=w)
+        nfa = pad_states(compile_queries(qs, d), 128 * s_mult)
+        rng = np.random.default_rng(w)
+        s = nfa.n_states
+        parent = jnp.asarray(
+            (rng.random((w, s)) < 0.2).astype(np.float32))
+        tags = jnp.asarray(rng.integers(-1, nfa.n_tags, size=w).astype(np.int32))
+        req = jnp.asarray(nfa.req_matrix())
+        wild = jnp.asarray(nfa.wild_vector())
+        p1h = jnp.asarray(nfa.parent_onehot())
+        sl = jnp.asarray(nfa.tables.selfloop.astype(np.float32))
+        want = ref.nfa_transition(parent, tags, req, wild, p1h, sl)
+        for bw, bs in [(8, 128), (128, 128), (16, s)]:
+            got = nfa_transition_pallas(parent, tags, req, wild, p1h, sl,
+                                        bw=bw, bs=bs, interpret=True)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       err_msg=f"bw={bw} bs={bs}")
+
+    def test_levelwise_engine_kernel_path(self):
+        dtd = DTD.generate(n_tags=14, seed=9)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=32, length=4, seed=9)
+        ev = gen_document(dtd, target_nodes=100, seed=9)
+        nfa = compile_queries(qs, d)
+        want = oracle_filter(nfa, ev, d)
+        eng = LevelwiseEngine(nfa, use_kernel=True)
+        got = eng.filter_document(ev)
+        np.testing.assert_array_equal(got.matched, want.matched)
+        np.testing.assert_array_equal(got.first_event, want.first_event)
+
+
+class TestStreamFilterKernel:
+    def test_block_vs_ref_random_tables(self):
+        rng = np.random.default_rng(0)
+        blk, n = 128, 60
+        kind = jnp.asarray(rng.integers(0, 3, size=n).astype(np.int32))
+        tag = jnp.asarray(rng.integers(0, 8, size=n).astype(np.int32))
+        in_tag = rng.integers(-3, 8, size=blk).astype(np.int32)
+        wild = (in_tag == -2).astype(np.float32)
+        selfloop = (rng.random(blk) < 0.3).astype(np.float32)
+        init = (rng.random(blk) < 0.1).astype(np.float32)
+        parent = np.zeros((blk, blk), np.float32)
+        parent[rng.integers(0, blk, size=blk), np.arange(blk)] = 1
+        want_ever, want_first = ref.stream_filter(
+            kind, tag, jnp.asarray(in_tag), jnp.asarray(wild),
+            jnp.asarray(selfloop), jnp.asarray(init), jnp.asarray(parent),
+            max_depth=16)
+        got_ever, got_first = stream_filter_pallas(
+            kind, tag, jnp.asarray(in_tag[None]), jnp.asarray(wild[None]),
+            jnp.asarray(selfloop[None]), jnp.asarray(init[None]),
+            jnp.asarray(parent[None]), max_depth=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(got_ever[0]),
+                                   np.asarray(want_ever))
+        np.testing.assert_array_equal(np.asarray(got_first[0]),
+                                      np.asarray(want_first))
+
+    @pytest.mark.parametrize("seed,blk", [(0, 64), (1, 128), (2, 256)])
+    def test_engine_matches_oracle(self, seed, blk):
+        dtd = DTD.generate(n_tags=14, seed=seed)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=40, length=4, p_wild=0.1, seed=seed)
+        ev = gen_document(dtd, target_nodes=120, seed=seed)
+        eng = ops.StreamFilterKernelEngine(qs, d, blk=blk, max_depth=32)
+        got = eng.filter_document(ev)
+        nfa = compile_queries(qs, d)
+        want = oracle_filter(nfa, ev, d)
+        np.testing.assert_array_equal(got.matched, want.matched)
+        np.testing.assert_array_equal(got.first_event, want.first_event)
+
+    def test_partition_blocks_closed_under_parents(self):
+        dtd = DTD.generate(n_tags=10, seed=5)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=64, length=5, seed=5)
+        t = partition(qs, d, blk=128)
+        # every parent pointer stays in-block by construction: P row sums
+        for g in range(t.n_blocks):
+            assert t.parent_1h[g].sum(axis=0).max() <= 1.0
+        assert t.n_blocks >= 1
+
+
+class TestWavefrontKernelPath:
+    def test_wavefront_kernel_matches_oracle(self):
+        from repro.core.engines.levelwise import WavefrontEngine
+        dtd = DTD.generate(n_tags=14, seed=11)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=24, length=4, p_wild=0.1, seed=11)
+        nfa = compile_queries(qs, d)
+        for seed in range(3):
+            ev = gen_document(dtd, target_nodes=90, seed=seed + 40)
+            want = oracle_filter(nfa, ev, d)
+            got = WavefrontEngine(nfa, chunk=32,
+                                  use_kernel=True).filter_document(ev)
+            np.testing.assert_array_equal(got.matched, want.matched)
+            np.testing.assert_array_equal(got.first_event, want.first_event)

@@ -1,0 +1,66 @@
+"""Property tests for the MoE dispatch invariants (dense path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.models import layers as L
+
+
+def _cfg(e=8, k=2, cf=1.25):
+    return get_config("qwen3-moe-30b-a3b", reduced=True).with_(
+        n_experts=e, moe_top_k=k, capacity_factor=cf)
+
+
+class TestMoEProperties:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 1000), b=st.integers(1, 4),
+           l=st.sampled_from([1, 4, 8]))
+    def test_finite_and_shaped(self, seed, b, l):
+        cfg = _cfg()
+        p = L.init_moe(cfg, jax.random.PRNGKey(seed % 7))
+        x = jax.random.normal(jax.random.PRNGKey(seed), (b, l, cfg.d_model))
+        y = L.moe(cfg, p, x)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_router_weights_sum_to_one(self):
+        for router in ("softmax", "sigmoid"):
+            cfg = _cfg().with_(router=router)
+            logits = jax.random.normal(jax.random.PRNGKey(0), (32, 8))
+            w, idx = L._router_weights(cfg, logits)
+            np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0,
+                                       rtol=1e-5)
+            assert (np.asarray(idx) < cfg.n_experts).all()
+            # top-k picks distinct experts per token
+            for row in np.asarray(idx):
+                assert len(set(row.tolist())) == cfg.moe_top_k
+
+    def test_capacity_drop_is_graceful(self):
+        """Overloading one expert (identical tokens, low cf) forces
+        capacity drops: dropped tokens produce zero rows (no shared
+        expert), never NaN; ample capacity keeps every token."""
+        cfg_lo = _cfg(cf=0.1).with_(n_shared_experts=0)
+        cfg_hi = _cfg(cf=8.0).with_(n_shared_experts=0)
+        p = L.init_moe(cfg_hi, jax.random.PRNGKey(1))
+        tok = jax.random.normal(jax.random.PRNGKey(2), (1, 1, cfg_hi.d_model))
+        x = jnp.tile(tok, (1, 256, 1))   # 256 identical tokens → 1 expert
+        y_lo = np.asarray(L.moe(cfg_lo, p, x))
+        y_hi = np.asarray(L.moe(cfg_hi, p, x))
+        assert np.isfinite(y_lo).all() and np.isfinite(y_hi).all()
+        zero_lo = (np.abs(y_lo).max(-1) < 1e-9).sum()
+        zero_hi = (np.abs(y_hi).max(-1) < 1e-9).sum()
+        assert zero_lo > 0 and zero_hi == 0
+
+    def test_identical_tokens_identical_outputs(self):
+        """Permutation/consistency: duplicate tokens route identically."""
+        cfg = _cfg(cf=8.0)
+        p = L.init_moe(cfg, jax.random.PRNGKey(3))
+        tok = jax.random.normal(jax.random.PRNGKey(4), (1, 1, cfg.d_model))
+        x = jnp.tile(tok, (2, 3, 1))
+        y = np.asarray(L.moe(cfg, p, x)).reshape(-1, cfg.d_model)
+        for row in y[1:]:
+            np.testing.assert_allclose(row, y[0], rtol=1e-4, atol=1e-5)

@@ -1,0 +1,153 @@
+"""Sharding rules + mini-mesh dry-run (subprocess, 8 placeholder devices).
+
+The full 512-device dry-run is ``launch/dryrun.py``; here the same
+machinery runs on a 4×2 mesh with reduced configs so the suite stays
+fast while covering: rule sanitization, param/opt/cache spec trees,
+lowering with in/out shardings, and the HLO analyzer.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+class TestRules:
+    def test_sanitize_drops_nondivisible(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.rules import sanitize
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+        # 1-device mesh: everything divides; use shape math instead
+        s = sanitize(("data", "model"), (7, 8), mesh)
+        assert s == P(None, None) or s == P("data", "model")
+
+    def test_param_specs_cover_tree(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config
+        from repro.models import transformer as T
+        from repro.sharding.rules import param_specs
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        for arch in ("qwen3-0.6b", "deepseek-v3-671b", "mamba2-780m",
+                     "zamba2-7b", "whisper-large-v3"):
+            cfg = get_config(arch, reduced=True)
+            shapes = jax.eval_shape(
+                lambda c=cfg: T.init_model(c, jax.random.PRNGKey(0)))
+            specs = param_specs(cfg, shapes, mesh)
+            n_spec = len(jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P)))
+            n_par = len(jax.tree.leaves(shapes))
+            assert n_spec == n_par, arch
+
+
+class TestHloAnalyzer:
+    def test_group_size_parsing(self):
+        from repro.launch.hlo_analysis import _group_size
+        assert _group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+        assert _group_size("replica_groups=[4,2]<=[8]") == 2
+        assert _group_size("nothing here", default=1) == 1
+
+    def test_wire_bytes_formulas(self):
+        from repro.launch.hlo_analysis import Op, _collective_wire_bytes
+        op = Op("x", "f32[16]", "all-reduce", "replica_groups=[1,4]<=[4]")
+        assert _collective_wire_bytes(op) == 2 * 64 * 3 / 4
+        op = Op("x", "f32[16]", "all-gather", "replica_groups=[1,4]<=[4]")
+        assert _collective_wire_bytes(op) == 64 * 3 / 4
+        op = Op("x", "f32[16]", "reduce-scatter",
+                "replica_groups=[1,4]<=[4]")
+        assert _collective_wire_bytes(op) == 64 * 3
+
+    def test_trip_count_scaling_on_real_hlo(self):
+        """End-to-end: analyzer flops must scale with scan length."""
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys, json
+sys.path.insert(0, %r)
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.hlo_analysis import analyze_text
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+out = {}
+for nl in (4, 8):
+    def step(params, x):
+        def body(h, w):
+            return h @ w, None
+        h, _ = jax.lax.scan(body, x, params)
+        return h.sum()
+    f = jax.jit(jax.grad(step), in_shardings=(
+        NamedSharding(mesh, P(None, "data", "model")),
+        NamedSharding(mesh, P("data", None))))
+    txt = f.lower(jax.ShapeDtypeStruct((nl, 64, 64), jnp.float32),
+                  jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile().as_text()
+    out[nl] = analyze_text(txt)
+print(json.dumps(out))
+""" % SRC
+        r = subprocess.run([sys.executable, "-c", script],
+                           capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0, r.stderr[-2000:]
+        out = json.loads(r.stdout.strip().splitlines()[-1])
+        assert out["8"]["flops_per_device"] == pytest.approx(
+            2 * out["4"]["flops_per_device"])
+        assert out["8"]["collective_bytes_per_device"] > 0
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen3-0.6b", "train_4k"),
+    ("qwen3-moe-30b-a3b", "train_4k"),
+    ("mamba2-780m", "decode_32k"),
+    ("whisper-large-v3", "prefill_32k"),
+    ("zamba2-7b", "long_500k"),
+])
+def test_mini_dryrun_lowers(arch, shape):
+    """Reduced config × reduced shape through the real dry-run builder on
+    a 4×2 mini-mesh (subprocess so XLA_FLAGS is isolated)."""
+    script = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, %r)
+import jax
+from repro.launch import dryrun as D
+from repro.launch.cells import Cell
+from repro.models.config import ShapeSpec
+from repro.configs import get_config
+import repro.launch.cells as cells_mod
+
+# shrink: reduced config + tiny shape of the same kind
+orig = cells_mod.dryrun_config
+def tiny_config(arch, pad_heads_to=2):
+    return get_config(arch, reduced=True).with_(
+        param_dtype="bfloat16", activ_dtype="bfloat16",
+        pad_heads_to=pad_heads_to, remat=True, grad_accum=1,
+        attn_chunk=16, ce_chunk=32)
+cells_mod.dryrun_config = tiny_config
+D.dryrun_config = tiny_config
+
+kind = dict(train_4k="train", prefill_32k="prefill",
+            decode_32k="decode", long_500k="decode")[%r]
+shape = ShapeSpec("mini", 64, 8, kind)
+cell = Cell(%r, shape, True)
+
+import jax
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+from repro.sharding import mesh_context
+with mesh_context(mesh):
+    cfg, fn, args = D.build_cell(cell, mesh)
+    compiled = fn.lower(*args).compile()
+print("MEM", compiled.memory_analysis().temp_size_in_bytes)
+from repro.launch.hlo_analysis import analyze_text
+a = analyze_text(compiled.as_text())
+assert a["flops_per_device"] > 0
+print("OK", a["flops_per_device"], a["collective_bytes_per_device"])
+""" % (SRC, shape, arch)
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-3000:])
+    assert "OK" in r.stdout

@@ -1,0 +1,108 @@
+"""Twig filtering (paper §5 extension): parser, decomposition,
+two-stage engine vs brute-force ground truth."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dictionary import TagDictionary
+from repro.core.events import to_trees
+from repro.core.twig import (TwigFilter, _twig_matches_tree, decompose,
+                             parse_twig)
+from repro.core.xpath import XPathSyntaxError
+
+from test_engines import ev_from_nested, fresh_dict
+
+
+class TestParserAndDecomposition:
+    def test_parse_linear(self):
+        tq = parse_twig("a//b/c")
+        assert tq.is_linear
+        assert [str(q) for q in decompose(tq)] == ["//a//b/c"]
+
+    def test_parse_branches(self):
+        tq = parse_twig("a[b//c][d]/e")
+        assert not tq.is_linear
+        # bare branch head = child axis (XPath predicate semantics)
+        assert {str(q) for q in decompose(tq)} == \
+            {"//a/b//c", "//a/d", "//a/e"}
+
+    def test_nested_branches(self):
+        tq = parse_twig("/a[b[c]/d]//e")
+        paths = {str(q) for q in decompose(tq)}
+        assert paths == {"/a/b/c", "/a/b/d", "/a//e"}
+
+    @pytest.mark.parametrize("bad", ["a[", "a]b", "a[]", "a[b]]"])
+    def test_rejects(self, bad):
+        with pytest.raises(XPathSyntaxError):
+            parse_twig(bad)
+
+
+class TestTwigSemantics:
+    def test_branch_needs_both(self):
+        d = fresh_dict()
+        #  t0 → (t1, t2)  vs  t0 → t1 only
+        ev_both = ev_from_nested([(0, [(1, []), (2, [])])])
+        ev_one = ev_from_nested([(0, [(1, [])])])
+        f = TwigFilter(["t0[t1][t2]"], d)
+        assert f.filter_document(ev_both).matched[0]
+        assert not f.filter_document(ev_one).matched[0]
+
+    def test_false_positive_eliminated(self):
+        """Paths match in *different* subtrees — decomposition says yes,
+        stage 2 must reject (the paper's stated failure mode)."""
+        d = fresh_dict()
+        # <t9><t0><t1/></t0><t0><t2/></t0></t9>: t0[t1][t2] has both paths
+        # //t0//t1 and //t0//t2 matching, but never under the same t0
+        ev = ev_from_nested([(9, [(0, [(1, [])]), (0, [(2, [])])])])
+        f = TwigFilter(["t0[t1][t2]"], d)
+        res = f.filter_document(ev)
+        assert not res.matched[0]
+        assert f.stats["stage2_rejects"] == 1
+
+    def test_child_vs_descendant_branches(self):
+        d = fresh_dict()
+        ev = ev_from_nested([(0, [(1, [(2, [])])])])  # t0 > t1 > t2
+        f = TwigFilter(["t0[/t2]", "t0[//t2]", "t0[/t1/t2]"], d)
+        res = f.filter_document(ev)
+        assert list(res.matched) == [False, True, True]
+
+    def test_mixed_with_linear(self):
+        d = fresh_dict()
+        ev = ev_from_nested([(0, [(1, []), (2, [(3, [])])])])
+        # t0[t3] needs a *child* t3 (t3 is a grandchild) → no match;
+        # t0[//t3] (descendant) does match
+        f = TwigFilter(["t0/t1", "t0[t1]/t2/t3", "t0[t3]/t1",
+                        "t0[//t3]/t1"], d)
+        res = f.filter_document(ev)
+        assert list(res.matched) == [True, True, False, True]
+
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data())
+    def test_property_vs_ground_truth(self, data):
+        n_tags = data.draw(st.integers(2, 5))
+        d = TagDictionary.build([f"t{i}" for i in range(n_tags)])
+
+        def tree(depth):
+            return st.tuples(
+                st.integers(0, n_tags - 1),
+                st.lists(tree(depth - 1), max_size=3) if depth > 0
+                else st.just([]))
+
+        spec = data.draw(st.lists(tree(3), min_size=1, max_size=2))
+        ev = ev_from_nested(spec)
+        tags = [f"t{j}" for j in range(n_tags)]
+        # random twig: root with 1-2 branches, each 1-2 steps
+        root = data.draw(st.sampled_from(tags))
+        parts = []
+        for _ in range(data.draw(st.integers(1, 2))):
+            steps = [data.draw(st.sampled_from(["/", "//"]))
+                     + data.draw(st.sampled_from(tags))
+                     for _ in range(data.draw(st.integers(1, 2)))]
+            parts.append("[" + "".join(steps) + "]")
+        twig_s = root + "".join(parts)
+        tq = parse_twig(twig_s)
+        f = TwigFilter([tq], d)
+        got = bool(f.filter_document(ev).matched[0])
+        want = _twig_matches_tree(to_trees(ev), tq, d)
+        assert got == want, twig_s

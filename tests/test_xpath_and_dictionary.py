@@ -1,0 +1,104 @@
+"""Unit tests: XPath parser, dictionary replacement, event codec."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dictionary as dmod
+from repro.core import xpath
+from repro.core.events import CLOSE, OPEN, EventStream, decode_bytes, encode_bytes
+from repro.core.dictionary import TagDictionary
+
+
+class TestXPathParser:
+    def test_basic(self):
+        q = xpath.parse("/a/b//c")
+        assert [(s.axis, s.tag) for s in q.steps] == [
+            (xpath.CHILD, "a"), (xpath.CHILD, "b"), (xpath.DESC, "c")]
+        assert q.anchored and q.has_parent_child
+
+    def test_bare_leading_tag_is_descendant(self):
+        q = xpath.parse("a0//b0")
+        assert q.steps[0].axis == xpath.DESC
+        assert not q.has_parent_child
+
+    def test_wildcard(self):
+        q = xpath.parse("//*/b")
+        assert q.steps[0].tag == "*"
+
+    @pytest.mark.parametrize("bad", ["", "/", "a/", "a b", "//", "/a//"])
+    def test_rejects(self, bad):
+        with pytest.raises(xpath.XPathSyntaxError):
+            xpath.parse(bad)
+
+    def test_roundtrip_str(self):
+        for s in ["//a/b//c", "/x//y", "//*"]:
+            assert str(xpath.parse(s)) == s
+
+
+class TestDictionary:
+    def test_fixed_length_encoding(self):
+        d = TagDictionary.build(["test.document", "b"])
+        tid = d.lookup("test.document")
+        assert len(d.open_bytes(tid)) == dmod.OPEN_NBYTES
+        assert len(d.close_bytes(tid)) == dmod.CLOSE_NBYTES
+
+    def test_symbols_roundtrip(self):
+        for tid in [0, 1, 63, 64, 4095]:
+            sym = TagDictionary.symbols_of(tid)
+            assert len(sym) == 2
+            assert TagDictionary.id_of_symbols(sym) == tid
+
+    def test_full(self):
+        d = TagDictionary()
+        with pytest.raises(dmod.DictionaryFull):
+            for i in range(dmod.MAX_TAGS + 1):
+                d.add(f"tag{i}")
+
+    def test_idempotent_add(self):
+        d = TagDictionary()
+        assert d.add("x") == d.add("x")
+
+
+class TestEventCodec:
+    def _stream(self, ids):
+        ks, ts = [], []
+        for i in ids:
+            ks += [OPEN, CLOSE]
+            ts += [i, i]
+        return EventStream(np.array(ks, np.int8), np.array(ts, np.int32))
+
+    def test_roundtrip(self):
+        d = TagDictionary.build([f"t{i}" for i in range(10)])
+        ev = self._stream([0, 5, 9, 63])
+        buf = encode_bytes(ev)
+        back = decode_bytes(buf, d.symbol_value_table())
+        np.testing.assert_array_equal(back.kind, ev.kind)
+        np.testing.assert_array_equal(back.tag_id, ev.tag_id)
+
+    def test_roundtrip_with_text(self):
+        d = TagDictionary.build(["a"])
+        ev = self._stream([0])
+        buf = encode_bytes(ev, text_fill=7)
+        back = decode_bytes(buf, d.symbol_value_table())
+        np.testing.assert_array_equal(back.kind, ev.kind)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(0, 4095), min_size=0, max_size=40),
+           st.integers(0, 5))
+    def test_roundtrip_property(self, ids, fill):
+        ev = self._stream(ids)
+        d = TagDictionary()
+        back = decode_bytes(encode_bytes(ev, text_fill=fill),
+                            d.symbol_value_table())
+        np.testing.assert_array_equal(back.kind, ev.kind)
+        np.testing.assert_array_equal(back.tag_id, ev.tag_id)
+
+    def test_nested_structure(self):
+        ev = EventStream(np.array([OPEN, OPEN, CLOSE, OPEN, CLOSE, CLOSE], np.int8),
+                         np.array([1, 2, 2, 3, 3, 1], np.int32))
+        ev.check_balanced()
+        assert ev.max_depth() == 2
+        depth, parent = ev.structure()
+        assert depth[0] == 1 and depth[1] == 2
+        assert parent[1] == 0 and parent[3] == 0 and parent[0] == -1
