@@ -3,32 +3,37 @@
 The paper streams 1–8 MB documents against 16–1024 profiles and reports
 MB/s: the FPGA is ~100× the software YFilter and throughput degrades
 gently with profile count.  We reproduce the *experiment* on this
-container's CPU: the python YFilter baseline vs the JAX engines
-(levelwise batched / streaming scan / matmul-kernel path).  Absolute
-numbers are CPU-bound; the *shape* of the comparison (orders of magnitude
-over the scalar software path, slope vs #profiles) is the reproduced
-claim; EXPERIMENTS.md §Paper-Fig9 reports both and the §Roofline section
-projects TPU v5e throughput.
+container's CPU: the python YFilter baseline vs the JAX engines — all
+constructed through the engine registry and driven through the one
+batched API (``EventBatch`` in, ``(B, Q)`` ``FilterResult`` out), so the
+Fig-9-style engine comparison is one flag::
+
+    PYTHONPATH=src python benchmarks/bench_throughput.py \
+        --engine streaming --engine levelwise --queries 256
+
+Absolute numbers are CPU-bound; the *shape* of the comparison (orders of
+magnitude over the scalar software path, slope vs #profiles) is the
+reproduced claim; EXPERIMENTS.md §Paper-Fig9 reports both and the
+§Roofline section projects TPU v5e throughput.
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
-import numpy as np
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core import engines
 from repro.core.dictionary import TagDictionary
-from repro.core.engines.levelwise import LevelwiseEngine, levelize_batch
-from repro.core.engines.streaming import StreamingEngine
-from repro.core.engines.yfilter import YFilterEngine
-from repro.core.events import event_stream_nbytes
+from repro.core.events import EventBatch
 from repro.core.nfa import compile_queries
 from repro.data.generator import DTD, gen_corpus, gen_profiles
 
 TEXT_FILL = 8  # emulate element text content in the byte-size accounting
 
-
-def _mb(docs) -> float:
-    return sum(event_stream_nbytes(d, TEXT_FILL) for d in docs) / 1e6
+DEFAULT_ENGINES = ("yfilter", "levelwise", "wavefront", "streaming")
 
 
 def _time(fn, repeat=3) -> float:
@@ -40,56 +45,90 @@ def _time(fn, repeat=3) -> float:
     return best
 
 
+# pure-python engines: nothing compiles, so no warmup and one timed pass
+HOST_ENGINES = frozenset({"yfilter", "oracle"})
+
+
 def run(query_counts=(16, 64, 256, 1024), path_lengths=(2, 4, 6),
-        n_docs=16, nodes_per_doc=400, seed=0, engines=("yfilter",
-                                                       "levelwise",
-                                                       "wavefront",
-                                                       "streaming")):
+        n_docs=16, nodes_per_doc=400, seed=0,
+        engines_to_run=DEFAULT_ENGINES, repeat=3):
+    """One row per (engine, path_len, n_queries): docs/sec and MB/s
+    through the uniform ``filter_batch`` API."""
     rows = []
     for plen in path_lengths:
         dtd = DTD.generate(n_tags=24, seed=seed)
         docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=nodes_per_doc,
                           seed=seed)
-        mb = _mb(docs)
+        batch = EventBatch.from_streams(docs, bucket=128)
+        mb = float(batch.nbytes(TEXT_FILL).sum()) / 1e6
         for nq in query_counts:
+            # one shared workload/NFA per config; matscan alone gets a
+            # descendant-only profile set (the paper's regex-only class,
+            # Fig 5 left) since it rejects child axes and wildcards
             d = TagDictionary()
             dtd.register(d)
             qs = gen_profiles(dtd, n=nq, length=plen, seed=seed + plen)
             nfa = compile_queries(qs, d, shared=True)
-            row = {"bench": "fig9_throughput", "path_len": plen,
-                   "n_queries": nq, "doc_mb": round(mb, 3),
-                   "n_states": nfa.n_states}
-            if "yfilter" in engines:
-                eng_y = YFilterEngine(nfa)
-                t = _time(lambda: eng_y.filter_documents(docs), repeat=1)
-                row["yfilter_mb_s"] = round(mb / t, 3)
-            if "levelwise" in engines:
-                eng_l = LevelwiseEngine(nfa)
-                eng_l.filter_documents_batched(docs)  # compile warmup
-                t = _time(lambda: eng_l.filter_documents_batched(docs))
-                row["levelwise_mb_s"] = round(mb / t, 3)
-            if "wavefront" in engines:
-                from repro.core.engines.levelwise import WavefrontEngine
-                eng_w = WavefrontEngine(nfa, chunk=128)
-                eng_w.filter_documents_batched(docs)  # compile warmup
-                t = _time(lambda: eng_w.filter_documents_batched(docs))
-                row["wavefront_mb_s"] = round(mb / t, 3)
-            if "streaming" in engines:
-                eng_s = StreamingEngine(nfa, max_depth=32)
-                n = max(len(doc) for doc in docs)
-                kind = np.stack([doc.padded(n).kind for doc in docs])
-                tag = np.stack([doc.padded(n).tag_id for doc in docs])
-                eng_s.filter_documents_batched(kind, tag)  # warmup
-                t = _time(lambda: eng_s.filter_documents_batched(kind, tag))
-                row["streaming_mb_s"] = round(mb / t, 3)
-            if "yfilter" in engines and "levelwise" in engines:
-                row["speedup_levelwise_vs_yfilter"] = round(
-                    row["levelwise_mb_s"] / row["yfilter_mb_s"], 2)
-            rows.append(row)
+            config_rows = []
+            for name in engines_to_run:
+                if name == "matscan":
+                    dm = TagDictionary()
+                    dtd.register(dm)
+                    qsm = gen_profiles(dtd, n=nq, length=plen, p_desc=1.0,
+                                       p_wild=0.0, seed=seed + plen)
+                    eng = engines.create(
+                        name, compile_queries(qsm, dm, shared=True),
+                        dictionary=dm)
+                else:
+                    eng = engines.create(name, nfa, dictionary=d)
+                if name not in HOST_ENGINES:
+                    eng.filter_batch(batch)  # compile warmup
+                t = _time(lambda: eng.filter_batch(batch),
+                          repeat=1 if name in HOST_ENGINES else repeat)
+                config_rows.append(
+                    {"bench": "fig9_throughput", "engine": name,
+                     "path_len": plen, "n_queries": nq,
+                     "doc_mb": round(mb, 3), "n_docs": n_docs,
+                     "n_states": eng.nfa.n_states,
+                     "docs_per_s": round(n_docs / t, 2),
+                     "mb_s": round(mb / t, 3)})
+            # order-independent speedup column; matscan runs a different
+            # (descendant-only) profile set, so no cross-workload ratio
+            baseline = next((r["mb_s"] for r in config_rows
+                             if r["engine"] == "yfilter"), None)
+            if baseline:
+                for r in config_rows:
+                    if r["engine"] not in ("yfilter", "matscan"):
+                        r["speedup_vs_yfilter"] = round(
+                            r["mb_s"] / baseline, 2)
+            rows.extend(config_rows)
     return rows
 
 
-if __name__ == "__main__":
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--engine", action="append", default=None,
+                    choices=list(engines.names()),
+                    help="repeatable; default: "
+                         + ",".join(DEFAULT_ENGINES))
+    ap.add_argument("--queries", type=int, nargs="+", default=None)
+    ap.add_argument("--path-lengths", type=int, nargs="+", default=None)
+    ap.add_argument("--docs", type=int, default=16)
+    ap.add_argument("--nodes", type=int, default=400)
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    kw = dict(n_docs=args.docs, nodes_per_doc=args.nodes, seed=args.seed,
+              engines_to_run=tuple(args.engine or DEFAULT_ENGINES),
+              repeat=args.repeat)
+    if args.queries:
+        kw["query_counts"] = tuple(args.queries)
+    if args.path_lengths:
+        kw["path_lengths"] = tuple(args.path_lengths)
     import json
-    for r in run():
+    for r in run(**kw):
         print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,8 @@ from repro.core.twig import TwigFilter, decompose, parse_twig
 from repro.data.generator import DTD, gen_corpus
 
 
-def run(n_twigs=48, n_docs=24, nodes_per_doc=300, seed=0):
+def run(n_twigs=48, n_docs=24, nodes_per_doc=300, seed=0,
+        engine="levelwise"):
     dtd = DTD.generate(n_tags=24, seed=seed)
     d = TagDictionary()
     dtd.register(d)
@@ -32,7 +33,7 @@ def run(n_twigs=48, n_docs=24, nodes_per_doc=300, seed=0):
             twigs.append(f"{names[a]}//{names[b]}")
     docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=nodes_per_doc,
                       seed=seed + 1)
-    f = TwigFilter(twigs, d, engine="levelwise")
+    f = TwigFilter(twigs, d, engine=engine)
     n_paths = sum(len(decompose(parse_twig(t))) for t in twigs)
     t0 = time.perf_counter()
     matches = sum(int(f.filter_document(doc).matched.sum())
@@ -42,6 +43,7 @@ def run(n_twigs=48, n_docs=24, nodes_per_doc=300, seed=0):
     rejects = f.stats["stage2_rejects"]
     return [{
         "bench": "twig_filtering",
+        "engine": engine,
         "n_twigs": n_twigs,
         "n_paths": n_paths,
         "shared_nfa_states": f.nfa.n_states,

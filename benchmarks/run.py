@@ -1,6 +1,6 @@
 """Benchmark orchestrator — one section per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--json [PATH]]``
 
 Sections:
   fig8   — area model, 4 scenarios (paper Fig 8)
@@ -9,7 +9,9 @@ Sections:
   roofline — 3-term roofline per (arch × shape) from dry-run artifacts
              (only if launch/dryrun.py results exist; see EXPERIMENTS.md)
 
-Output: JSON-lines to stdout (one row per measurement).
+Output: JSON-lines to stdout (one row per measurement); ``--json``
+additionally writes the rows to a file (default ``BENCH_filtering.json``)
+so CI accumulates a perf trajectory.
 """
 from __future__ import annotations
 
@@ -26,7 +28,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (slower)")
     ap.add_argument("--only", default=None,
-                    help="run a single section: fig8|fig9|roofline")
+                    help="run a single section: fig8|fig9|twig|roofline")
+    ap.add_argument("--json", nargs="?", const="BENCH_filtering.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to a JSON file "
+                         "(default: BENCH_filtering.json)")
     args = ap.parse_args()
 
     sections = [args.only] if args.only else ["fig8", "fig9", "twig",
@@ -58,6 +64,10 @@ def main() -> None:
 
     for r in rows:
         print(json.dumps(r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -4,14 +4,17 @@ The paper's core loop in ~40 lines of public API:
   parse profiles → compile the shared NFA → filter a document stream →
   report matching profiles + match locations.
 
+Engines are constructed through the registry (`repro.core.engines`) —
+every engine consumes the same `EventBatch` and returns the same
+`FilterResult`, so comparing them is a loop over names.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+from repro.core import engines
 from repro.core.dictionary import TagDictionary
-from repro.core.engines.levelwise import LevelwiseEngine
-from repro.core.engines.streaming import StreamingEngine
-from repro.core.events import EventStream, OPEN, CLOSE, encode_bytes
+from repro.core.events import EventBatch, EventStream, OPEN, CLOSE, encode_bytes
 from repro.core.nfa import compile_queries
 from repro.core.xpath import parse
 from repro.kernels.ops import decode_document
@@ -39,9 +42,11 @@ assert np.array_equal(doc2.tag_id, doc.tag_id)
 print(f"byte stream: {len(buf)} bytes → {len(doc2)} events "
       f"(§3.4 pre-decode kernel)")
 
-# 5. filter with both engines
-for Engine in (StreamingEngine, LevelwiseEngine):
-    res = Engine(nfa).filter_document(doc)
+# 5. filter with every registered engine through the one batched API
+batch = EventBatch.from_streams([doc])
+for name in ("streaming", "levelwise", "yfilter"):
+    eng = engines.create(name, nfa, dictionary=dictionary)
+    res = eng.filter_batch(batch)[0]
     hits = ", ".join(f"{PROFILES[q]} @ event {res.first_event[q]}"
                      for q in res.matching_queries())
-    print(f"{Engine.__name__:>16}: {hits}")
+    print(f"{name:>12}: {hits}")

@@ -1,22 +1,50 @@
-"""Filtering engines.
+"""Filtering engines behind one contract: ``FilterEngine`` + ``FilterPlan``.
 
-Five interchangeable implementations of the paper's filtering semantics:
+Every engine implements the same two-method interface
+(:mod:`repro.core.engines.base`):
 
-* :mod:`.oracle`     — recursive tree-walk ground truth (pure python, tests).
-* :mod:`.yfilter`    — event-driven software baseline (the paper's §4
+* ``plan(nfa) -> FilterPlan`` — compile the standing profiles **once**
+  into a frozen pytree of precomputed device tables (REQ / parent-one-hot
+  / accept matrices, packed init words, …).  The paper's "program the
+  FPGA once per profile set" step.
+* ``filter_batch(EventBatch) -> FilterResult`` — filter a padded
+  ``(B, N)`` document batch (:class:`repro.core.events.EventBatch`, the
+  *only* document format engines see) into a ``(B, Q)`` result.
+
+Engines self-register under a string key, so construction is uniform::
+
+    from repro.core import engines
+    eng = engines.create("levelwise", nfa)            # or any name below
+    res = eng.filter_batch(EventBatch.from_streams(docs))
+
+Registered implementations of the paper's filtering semantics:
+
+* ``oracle``     — recursive tree-walk ground truth (pure python, tests).
+* ``yfilter``    — event-driven software baseline (the paper's §4
   comparison system, reimplemented; pure python "von Neumann" path).
-* :mod:`.streaming`  — paper-faithful JAX engine: ``lax.scan`` over the
+* ``streaming``  — paper-faithful JAX engine: ``lax.scan`` over the
   event stream with a bounded stack of packed state bitmasks (the FPGA
   datapath: every state advances each event, stack push/pop on open/close).
-* :mod:`.levelwise`  — TPU-native engine: the stack is virtualized into
+* ``levelwise``  — TPU-native engine: the stack is virtualized into
   precomputed (depth, parent) structure; the NFA advances level-by-level,
   every node of a level in parallel, transitions as one-hot matmuls.
-* :mod:`.matscan`    — paper-literal regex semantics (§3.2) as per-event
+* ``wavefront``  — levelwise variant with fixed-width level chunks
+  (less padding waste on skewed level widths).
+* ``matscan``    — paper-literal regex semantics (§3.2) as per-event
   0/1 transition matrices composed with ``associative_scan`` (MXU form).
 
-All engines consume :class:`repro.core.nfa.NFA` tables and
-:class:`repro.core.events.EventStream` documents and report, per query:
-``matched`` and the event index of the first match (the paper reports the
-match location, §4).
+All engines report, per (document, query): ``matched`` and the event
+index of the first match (the paper reports the match location, §4).
+To add an engine, subclass :class:`base.FilterEngine` and decorate with
+``@base.register("name")`` — see the ``base`` module docstring.
 """
-from .result import FilterResult  # noqa: F401
+from . import base  # noqa: F401
+from .base import FilterEngine, FilterPlan, create, get, names, register  # noqa: F401
+from .result import NO_MATCH, FilterResult  # noqa: F401
+
+# importing the implementation modules populates the registry
+from . import oracle as _oracle          # noqa: F401,E402
+from . import yfilter as _yfilter        # noqa: F401,E402
+from . import streaming as _streaming    # noqa: F401,E402
+from . import levelwise as _levelwise    # noqa: F401,E402
+from . import matscan as _matscan        # noqa: F401,E402

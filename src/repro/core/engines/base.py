@@ -1,0 +1,180 @@
+"""The engine contract: ``FilterPlan`` + ``FilterEngine`` + the registry.
+
+This is the single seam of the filtering stack.  The paper's architecture
+(§3) compiles the standing profiles once into hardware blocks and then
+streams every document through the same fixed datapath; the software
+analogue is:
+
+* :class:`FilterPlan` — the compiled form: a *frozen pytree* of
+  precomputed device tables (REQ / parent-one-hot / accept matrices,
+  packed init words, …) plus static metadata.  Built once per profile
+  set by :meth:`FilterEngine.plan`; every ``filter_batch`` call reuses
+  it, so tracing/compilation happens once and the plan can be passed
+  through ``jax.jit`` boundaries as an ordinary pytree argument.
+* :class:`FilterEngine` — the uniform engine interface: ``plan(nfa)``
+  and ``filter_batch(EventBatch) -> FilterResult`` with ``(B, Q)``
+  outputs.  Engines are free to run on device (streaming, levelwise,
+  matscan) or on the host (oracle, yfilter) — callers cannot tell.
+* the **registry** — engines self-register under a string key;
+  ``engines.get("levelwise")`` / ``engines.create("levelwise", nfa)``
+  is how every pipeline, benchmark and example constructs one, so an
+  engine comparison is a flag, not an import.
+
+Adding an engine::
+
+    from repro.core.engines import base
+
+    @base.register("myengine")
+    class MyEngine(base.FilterEngine):
+        def plan(self, nfa):
+            return base.FilterPlan("myengine",
+                                   tables={"req": jnp.asarray(...)},
+                                   meta={"n_states": nfa.n_states})
+        def filter_batch(self, batch):
+            ...
+"""
+from __future__ import annotations
+
+import abc
+from typing import Any, ClassVar, Mapping
+
+import jax
+
+from ..events import EventBatch, EventStream
+from ..nfa import NFA
+from .result import FilterResult
+
+
+# ----------------------------------------------------------------- the plan
+class FilterPlan:
+    """Frozen pytree: named device tables + static (hashable) metadata.
+
+    ``plan.tables`` maps table name → array (the pytree leaves);
+    ``plan.meta`` maps name → static value (pytree aux data, so jit
+    retraces when it changes).  Instances are immutable — build a new
+    plan instead of mutating one.
+    """
+
+    __slots__ = ("engine", "_names", "_arrays", "_meta")
+
+    def __init__(self, engine: str, tables: Mapping[str, Any],
+                 meta: Mapping[str, Any] | None = None) -> None:
+        names = tuple(sorted(tables))
+        object.__setattr__(self, "engine", engine)
+        object.__setattr__(self, "_names", names)
+        object.__setattr__(self, "_arrays", tuple(tables[n] for n in names))
+        object.__setattr__(self, "_meta",
+                           tuple(sorted((meta or {}).items())))
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        raise AttributeError("FilterPlan is frozen")
+
+    @property
+    def tables(self) -> dict[str, Any]:
+        return dict(zip(self._names, self._arrays))
+
+    @property
+    def meta(self) -> dict[str, Any]:
+        return dict(self._meta)
+
+    def table(self, name: str) -> Any:
+        return self._arrays[self._names.index(name)]
+
+    def __getitem__(self, name: str) -> Any:
+        return self.table(name)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"FilterPlan({self.engine!r}, tables={list(self._names)}, "
+                f"meta={self.meta})")
+
+    # pytree protocol -----------------------------------------------------
+    def _flatten(self):
+        return self._arrays, (self.engine, self._names, self._meta)
+
+    @classmethod
+    def _unflatten(cls, aux, leaves):
+        engine, names, meta = aux
+        self = cls.__new__(cls)
+        object.__setattr__(self, "engine", engine)
+        object.__setattr__(self, "_names", names)
+        object.__setattr__(self, "_arrays", tuple(leaves))
+        object.__setattr__(self, "_meta", meta)
+        return self
+
+
+jax.tree_util.register_pytree_node(
+    FilterPlan, FilterPlan._flatten, FilterPlan._unflatten)
+
+
+# --------------------------------------------------------------- the engine
+class FilterEngine(abc.ABC):
+    """Uniform engine interface: compile once, filter batches forever.
+
+    ``__init__`` compiles the profile set (via :meth:`plan`) exactly once;
+    :meth:`filter_batch` is then a pure function of the plan and an
+    :class:`~repro.core.events.EventBatch` — the only document format an
+    engine ever sees.
+    """
+
+    #: registry key, set by the :func:`register` decorator
+    name: ClassVar[str] = ""
+
+    def __init__(self, nfa: NFA, dictionary=None, **options: Any) -> None:
+        self.nfa = nfa
+        self.dictionary = dictionary
+        self.options = options
+        self.n_queries = nfa.n_queries
+        self.plan_: FilterPlan = self.plan(nfa)
+
+    # ------------------------------------------------------------ contract
+    @abc.abstractmethod
+    def plan(self, nfa: NFA) -> FilterPlan:
+        """Compile the NFA into this engine's device tables (once)."""
+
+    @abc.abstractmethod
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        """Filter a document batch; returns a ``(B, Q)`` result."""
+
+    # --------------------------------------------------------- conveniences
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        """Single-document convenience on top of :meth:`filter_batch`."""
+        return self.filter_batch(EventBatch.from_streams([ev]))[0]
+
+    def filter_documents(self, docs) -> FilterResult:
+        return self.filter_batch(EventBatch.from_streams(list(docs)))
+
+
+# -------------------------------------------------------------- the registry
+_REGISTRY: dict[str, type[FilterEngine]] = {}
+
+
+def register(name: str):
+    """Class decorator: make the engine constructible by string key."""
+
+    def deco(cls: type[FilterEngine]) -> type[FilterEngine]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get(name: str) -> type[FilterEngine]:
+    """Engine class for ``name`` (raises with the known names on miss)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def create(name: str, nfa: NFA, dictionary=None,
+           **options: Any) -> FilterEngine:
+    """Construct a registered engine: ``create('levelwise', nfa)``."""
+    return get(name)(nfa, dictionary=dictionary, **options)
+
+
+def names() -> tuple[str, ...]:
+    """All registered engine keys, sorted."""
+    return tuple(sorted(_REGISTRY))

@@ -31,8 +31,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..events import OPEN, EventStream
+from ..events import OPEN, EventBatch, EventStream
 from ..nfa import NFA, WILD_TAG, pad_states
+from . import base
 from .result import NO_MATCH, FilterResult
 
 
@@ -120,7 +121,10 @@ def levelize(ev: EventStream) -> LevelDoc:
 
 def levelize_batch(docs: list[EventStream]) -> LevelDoc:
     """Pad a batch of documents to common (D, W); stacks along axis 0."""
-    ls = [levelize(d) for d in docs]
+    return _stack_leveldocs([levelize(d) for d in docs])
+
+
+def _stack_leveldocs(ls: list[LevelDoc]) -> LevelDoc:
     dm = max(l.depth for l in ls)
     wm = max(l.width for l in ls)
     ls = [l.padded(dm, wm) for l in ls]
@@ -133,35 +137,79 @@ def levelize_batch(docs: list[EventStream]) -> LevelDoc:
     )
 
 
+def levelize_from_arrays(kind: np.ndarray, tag: np.ndarray,
+                         depth: np.ndarray, parent: np.ndarray) -> LevelDoc:
+    """Vectorized levelize consuming precomputed (depth, parent) —
+    the :class:`~repro.core.events.EventBatch` fast path.
+
+    ``EventBatch.from_streams`` already ran the one linear host pass
+    that computes per-event structure; here the depth-major bucketing
+    is pure numpy (no per-event python loop), so the levelwise engines
+    never re-walk the document.
+    """
+    open_idx = np.nonzero(kind == OPEN)[0]
+    if len(open_idx) == 0:
+        return LevelDoc(np.full((1, 1), -1, np.int32),
+                        np.full((1, 1), 1, np.int32),
+                        np.zeros((1, 1), bool),
+                        np.zeros((1, 1), np.int32), int(kind.shape[0]))
+    lev = depth[open_idx].astype(np.int64) - 1        # 0-based level
+    d_max = int(lev.max()) + 1
+    # slot within level = stable cumcount of the level sequence
+    order = np.argsort(lev, kind="stable")
+    sorted_lev = lev[order]
+    starts = np.searchsorted(sorted_lev, np.arange(d_max))
+    ranks = np.arange(len(open_idx)) - starts[sorted_lev]
+    slot = np.empty(len(open_idx), np.int64)
+    slot[order] = ranks
+    widths = np.bincount(lev, minlength=d_max)
+    w_max = max(1, int(widths.max()))
+    slot_of_event = np.full(kind.shape[0], w_max, np.int64)
+    slot_of_event[open_idx] = slot
+    tags = np.full((d_max, w_max), -1, np.int32)
+    parent_slot = np.full((d_max, w_max), w_max, np.int32)
+    valid = np.zeros((d_max, w_max), bool)
+    eidx = np.zeros((d_max, w_max), np.int32)
+    tags[lev, slot] = tag[open_idx]
+    p = parent[open_idx]
+    parent_slot[lev, slot] = np.where(
+        p >= 0, slot_of_event[np.clip(p, 0, None)], w_max).astype(np.int32)
+    valid[lev, slot] = True
+    eidx[lev, slot] = open_idx
+    return LevelDoc(tags, parent_slot, valid, eidx, int(kind.shape[0]))
+
+
+def _leveldocs_of_batch(batch) -> list[LevelDoc]:
+    """One LevelDoc per document, from the batch's precomputed arrays."""
+    out = []
+    for i in range(batch.batch_size):
+        n = int(batch.n_events[i])
+        out.append(levelize_from_arrays(
+            batch.kind[i, :n], batch.tag_id[i, :n],
+            batch.depth[i, :n], batch.parent[i, :n]))
+    return out
+
+
 # ------------------------------------------------------------------- engine
-@dataclass(frozen=True)
-class LevelTables:
-    in_state: jax.Array    # (S,) int32
-    in_tag: jax.Array      # (S,) int32
-    selfloop: jax.Array    # (S,) f32 0/1
-    init: jax.Array        # (S,) f32 0/1
-    accept_state: jax.Array  # (Q,) int32
-    req: jax.Array         # (T, S) f32 one-hot tag→state (pre-decoder table)
-    wild: jax.Array        # (S,) f32
-    parent_1h: jax.Array   # (S, S) f32 parent-pointer matrix
-    n_states: int
-    n_tags: int
-
-
-def build_tables(nfa: NFA, lane: int = 128) -> LevelTables:
+def _level_plan(engine: str, nfa: NFA, lane: int = 128) -> base.FilterPlan:
+    """Shared compile step for the levelwise-family engines: lane-pad the
+    state space and materialize the dense MXU tables (REQ pre-decoder,
+    parent one-hot, accept map) once."""
     nfa = pad_states(nfa, lane)
     t = nfa.tables
-    return LevelTables(
-        in_state=jnp.asarray(t.in_state),
-        in_tag=jnp.asarray(t.in_tag),
-        selfloop=jnp.asarray(t.selfloop.astype(np.float32)),
-        init=jnp.asarray(t.init.astype(np.float32)),
-        accept_state=jnp.asarray(t.accept_state),
-        req=jnp.asarray(nfa.req_matrix()),
-        wild=jnp.asarray(nfa.wild_vector()),
-        parent_1h=jnp.asarray(nfa.parent_onehot()),
-        n_states=t.in_state.shape[0],
-        n_tags=nfa.n_tags,
+    return base.FilterPlan(
+        engine,
+        tables=dict(
+            in_state=jnp.asarray(t.in_state),
+            in_tag=jnp.asarray(t.in_tag),
+            selfloop=jnp.asarray(t.selfloop.astype(np.float32)),
+            init=jnp.asarray(t.init.astype(np.float32)),
+            accept_state=jnp.asarray(t.accept_state),
+            req=jnp.asarray(nfa.req_matrix()),
+            wild=jnp.asarray(nfa.wild_vector()),
+            parent_1h=jnp.asarray(nfa.parent_onehot()),
+        ),
+        meta={"n_states": int(t.in_state.shape[0]), "n_tags": nfa.n_tags},
     )
 
 
@@ -240,7 +288,10 @@ class ChunkDoc:
 
 
 def chunkize(ev: EventStream, chunk: int = 128) -> ChunkDoc:
-    ld = levelize(ev)
+    return chunkize_level(levelize(ev), chunk)
+
+
+def chunkize_level(ld: LevelDoc, chunk: int = 128) -> ChunkDoc:
     d_max, w_max = ld.tags.shape
     # chunks per level and level→base-chunk mapping
     widths = ld.valid.sum(axis=1)
@@ -350,29 +401,34 @@ def _run_wavefront_kernel(tags, parent_idx, valid, event_idx,
     return matched, first
 
 
-class WavefrontEngine:
+@base.register("wavefront")
+class WavefrontEngine(base.FilterEngine):
     """Chunked-wavefront levelwise engine (§Perf-filter iteration 1)."""
 
-    def __init__(self, nfa: NFA, chunk: int = 128,
-                 use_kernel: bool = False) -> None:
-        self.tables = build_tables(nfa)
-        self.n_queries = nfa.n_queries
+    def __init__(self, nfa: NFA, dictionary=None, chunk: int = 128,
+                 use_kernel: bool = False, **options) -> None:
         self.chunk = chunk
         self.use_kernel = use_kernel
+        super().__init__(nfa, dictionary, **options)
+
+    def plan(self, nfa: NFA) -> base.FilterPlan:
+        return _level_plan("wavefront", nfa)
 
     def _call(self, cd_tags, cd_parent, cd_valid, cd_eidx):
-        t = self.tables
+        p = self.plan_
         if self.use_kernel:
             return _run_wavefront_kernel(
                 jnp.asarray(cd_tags), jnp.asarray(cd_parent),
                 jnp.asarray(cd_valid), jnp.asarray(cd_eidx),
-                t.selfloop, t.init, t.accept_state, t.req, t.wild,
-                t.parent_1h, n_states=t.n_states, n_tags=t.n_tags)
+                p["selfloop"], p["init"], p["accept_state"], p["req"],
+                p["wild"], p["parent_1h"],
+                n_states=p.meta["n_states"], n_tags=p.meta["n_tags"])
         return _run_wavefront(
             jnp.asarray(cd_tags), jnp.asarray(cd_parent),
             jnp.asarray(cd_valid), jnp.asarray(cd_eidx),
-            t.in_state, t.in_tag, t.selfloop, t.init, t.accept_state,
-            n_states=t.n_states, n_tags=t.n_tags)
+            p["in_state"], p["in_tag"], p["selfloop"], p["init"],
+            p["accept_state"],
+            n_states=p.meta["n_states"], n_tags=p.meta["n_tags"])
 
     def filter_document(self, ev: EventStream) -> FilterResult:
         cd = chunkize(ev, self.chunk)
@@ -380,8 +436,10 @@ class WavefrontEngine:
                                     cd.event_idx)
         return FilterResult(np.asarray(matched), np.asarray(first))
 
-    def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
-        cds = [chunkize(d, self.chunk) for d in docs]
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        # precomputed batch structure → no per-event host re-walk
+        cds = [chunkize_level(ld, self.chunk)
+               for ld in _leveldocs_of_batch(batch)]
         nc = max(c.n_chunks for c in cds)
 
         def pad(c: ChunkDoc) -> ChunkDoc:
@@ -418,26 +476,33 @@ class WavefrontEngine:
             np.stack([c.parent_idx for c in fixed]),
             np.stack([c.valid for c in fixed]),
             np.stack([c.event_idx for c in fixed]))
-        matched, first = np.asarray(matched), np.asarray(first)
-        return [FilterResult(matched[i], first[i]) for i in range(len(docs))]
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
+        """Legacy list API (prefer :meth:`filter_batch`)."""
+        res = self.filter_batch(EventBatch.from_streams(docs))
+        return list(res.per_document())
 
 
-class LevelwiseEngine:
-    def __init__(self, nfa: NFA, use_matmul: bool = True,
-                 use_kernel: bool = False) -> None:
-        self.tables = build_tables(nfa)
-        self.n_queries = nfa.n_queries
+@base.register("levelwise")
+class LevelwiseEngine(base.FilterEngine):
+    def __init__(self, nfa: NFA, dictionary=None, use_matmul: bool = True,
+                 use_kernel: bool = False, **options) -> None:
         self.use_matmul = use_matmul
         self.use_kernel = use_kernel
+        super().__init__(nfa, dictionary, **options)
+
+    def plan(self, nfa: NFA) -> base.FilterPlan:
+        return _level_plan("levelwise", nfa)
 
     def _call(self, ld_tags, ld_parent, ld_valid, ld_eidx):
-        t = self.tables
+        p = self.plan_
         return _run_level(
             jnp.asarray(ld_tags), jnp.asarray(ld_parent),
             jnp.asarray(ld_valid), jnp.asarray(ld_eidx),
-            t.in_state, t.in_tag, t.selfloop, t.init, t.accept_state,
-            t.req, t.wild, t.parent_1h,
-            n_states=t.n_states, n_tags=t.n_tags,
+            p["in_state"], p["in_tag"], p["selfloop"], p["init"],
+            p["accept_state"], p["req"], p["wild"], p["parent_1h"],
+            n_states=p.meta["n_states"], n_tags=p.meta["n_tags"],
             use_matmul=self.use_matmul, use_kernel=self.use_kernel)
 
     def filter_document(self, ev: EventStream) -> FilterResult:
@@ -446,10 +511,14 @@ class LevelwiseEngine:
                                     ld.event_idx)
         return FilterResult(np.asarray(matched), np.asarray(first))
 
-    def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
-        ld = levelize_batch(docs)
-        t = self.tables
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        # precomputed batch structure → no per-event host re-walk
+        ld = _stack_leveldocs(_leveldocs_of_batch(batch))
         fn = jax.vmap(self._call, in_axes=(0, 0, 0, 0))
         matched, first = fn(ld.tags, ld.parent_slot, ld.valid, ld.event_idx)
-        matched, first = np.asarray(matched), np.asarray(first)
-        return [FilterResult(matched[i], first[i]) for i in range(len(docs))]
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
+        """Legacy list API (prefer :meth:`filter_batch`)."""
+        res = self.filter_batch(EventBatch.from_streams(docs))
+        return list(res.per_document())

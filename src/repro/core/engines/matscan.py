@@ -20,16 +20,15 @@ priority-encoder output of Fig 5.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..dictionary import TagDictionary
-from ..events import CLOSE, OPEN, EventStream
-from ..nfa import WILD_TAG
-from ..xpath import CHILD, DESC, Query
+from ..events import CLOSE, OPEN, EventBatch, EventStream
+from ..nfa import NFA, compile_queries
+from ..xpath import CHILD, Query
+from . import base
 from .result import NO_MATCH, FilterResult
 
 
@@ -47,74 +46,110 @@ def _check_supported(q: Query) -> None:
         raise MatscanUnsupported(f"{q.raw!r}: wildcard tag test")
 
 
-class MatscanEngine:
+def _matrices(step_tags: jax.Array, kind: jax.Array,
+              tag: jax.Array) -> jax.Array:
+    """(N,) events → (N, Q, k+1, k+1) int8 transition matrices."""
+    n = kind.shape[0]
+    q, km = step_tags.shape
+    eye = jnp.eye(km + 1, dtype=jnp.int8)
+    # OPEN: I + advance i→i+1 where step i+1's tag equals the event tag
+    adv = (step_tags[None, :, :] == tag[:, None, None])       # (N, Q, km)
+    open_m = jnp.zeros((n, q, km + 1, km + 1), jnp.int8)
+    idx = jnp.arange(km)
+    open_m = open_m.at[:, :, idx, idx + 1].set(adv.astype(jnp.int8))
+    open_m = open_m + eye
+    # CLOSE </t>: negation block — progress at or beyond the first step
+    # matching t collapses back to just before it.
+    occurs = (step_tags[None, :, :] == tag[:, None, None])
+    # first step index j (1-based) with tag t, km+1 if none
+    jpos = jnp.where(occurs, idx[None, None, :] + 1, km + 1).min(axis=-1)
+    rows = jnp.arange(km + 1)
+    # target[i] = i if i < j else j-1
+    tgt = jnp.where(rows[None, None, :] < jpos[:, :, None],
+                    rows[None, None, :], jpos[:, :, None] - 1)
+    close_m = jax.nn.one_hot(tgt, km + 1, dtype=jnp.int8)  # (N,Q,km+1,km+1)
+    is_open = (kind == OPEN)[:, None, None, None]
+    is_close = (kind == CLOSE)[:, None, None, None]
+    return jnp.where(is_open, open_m,
+                     jnp.where(is_close, close_m, eye[None, None]))
+
+
+@jax.jit
+def _scan(step_tags: jax.Array, accept_idx: jax.Array, kind: jax.Array,
+          tag: jax.Array):
+    mats = _matrices(step_tags, kind, tag).astype(jnp.int32)
+
+    def compose(a, b):
+        # ordered product: prefix(a) then b, saturated boolean semiring
+        return jnp.minimum(jnp.einsum("...ij,...jk->...ik", a, b), 1)
+
+    prefix = jax.lax.associative_scan(compose, mats, axis=0)
+    # v0 = e_0 ⇒ reached states = prefix[:, :, 0, :]
+    reach = prefix[:, :, 0, :]                       # (N, Q, km+1)
+    acc = jnp.take_along_axis(
+        reach, accept_idx[None, :, None], axis=-1)[..., 0]  # (N, Q)
+    hit = acc > 0
+    matched = hit.any(axis=0)
+    first = jnp.where(hit, jnp.arange(kind.shape[0])[:, None],
+                      NO_MATCH).min(axis=0)
+    return matched, first
+
+
+@jax.jit
+def _scan_batch(step_tags: jax.Array, accept_idx: jax.Array,
+                kind: jax.Array, tag: jax.Array):
+    """(B, N) batched scan — PAD events are identity matrices, so padded
+    tails are free (they cannot create or destroy matches)."""
+    return jax.vmap(_scan, in_axes=(None, None, 0, 0))(
+        step_tags, accept_idx, kind, tag)
+
+
+@base.register("matscan")
+class MatscanEngine(base.FilterEngine):
     """Batched per-query (k+1)×(k+1) transition-matrix scans."""
 
-    def __init__(self, queries: list[Query], dictionary: TagDictionary) -> None:
-        for q in queries:
+    def __init__(self, nfa: NFA | list[Query],
+                 dictionary: TagDictionary | None = None, **options) -> None:
+        if dictionary is None:
+            raise ValueError("matscan engine needs the tag dictionary")
+        if not isinstance(nfa, NFA):  # legacy: a raw list of queries
+            nfa = compile_queries(list(nfa), dictionary, shared=True)
+        for q in nfa.queries:
             _check_supported(q)
-        self.n_queries = len(queries)
-        self.kmax = max(q.length for q in queries)
-        km = self.kmax
+        super().__init__(nfa, dictionary, **options)
+
+    def plan(self, nfa: NFA) -> base.FilterPlan:
+        queries = list(nfa.queries)
+        kmax = max(q.length for q in queries)
         # step_tags[q, i] = tag id of step i (or -1 past the end)
-        step_tags = np.full((len(queries), km), -1, np.int32)
+        step_tags = np.full((len(queries), kmax), -1, np.int32)
         for qi, q in enumerate(queries):
             for i, st in enumerate(q.steps):
-                step_tags[qi, i] = dictionary.add(st.tag)
-        self.step_tags = jnp.asarray(step_tags)
-        # accept index per query = its own length
-        self.accept_idx = jnp.asarray(
-            np.array([q.length for q in queries], np.int32))
-
-    @functools.partial(jax.jit, static_argnames=("self",))
-    def _matrices(self, kind: jax.Array, tag: jax.Array) -> jax.Array:
-        """(N,) events → (N, Q, k+1, k+1) int8 transition matrices."""
-        n = kind.shape[0]
-        q, km = self.step_tags.shape
-        eye = jnp.eye(km + 1, dtype=jnp.int8)
-        # OPEN: I + advance i→i+1 where step i+1's tag equals the event tag
-        adv = (self.step_tags[None, :, :] == tag[:, None, None])  # (N, Q, km)
-        open_m = jnp.zeros((n, q, km + 1, km + 1), jnp.int8)
-        idx = jnp.arange(km)
-        open_m = open_m.at[:, :, idx, idx + 1].set(adv.astype(jnp.int8))
-        open_m = open_m + eye
-        # CLOSE </t>: negation block — progress at or beyond the first step
-        # matching t collapses back to just before it.
-        occurs = (self.step_tags[None, :, :] == tag[:, None, None])
-        # first step index j (1-based) with tag t, km+1 if none
-        jpos = jnp.where(occurs, idx[None, None, :] + 1, km + 1).min(axis=-1)
-        rows = jnp.arange(km + 1)
-        # target[i] = i if i < j else j-1
-        tgt = jnp.where(rows[None, None, :] < jpos[:, :, None],
-                        rows[None, None, :], jpos[:, :, None] - 1)
-        close_m = jax.nn.one_hot(tgt, km + 1, dtype=jnp.int8)  # (N,Q,km+1,km+1)
-        is_open = (kind == OPEN)[:, None, None, None]
-        is_close = (kind == CLOSE)[:, None, None, None]
-        return jnp.where(is_open, open_m,
-                         jnp.where(is_close, close_m, eye[None, None]))
-
-    @functools.partial(jax.jit, static_argnames=("self",))
-    def _scan(self, kind: jax.Array, tag: jax.Array):
-        mats = self._matrices(kind, tag).astype(jnp.int32)
-
-        def compose(a, b):
-            # ordered product: prefix(a) then b, saturated boolean semiring
-            return jnp.minimum(jnp.einsum("...ij,...jk->...ik", a, b), 1)
-
-        prefix = jax.lax.associative_scan(compose, mats, axis=0)
-        # v0 = e_0 ⇒ reached states = prefix[:, :, 0, :]
-        reach = prefix[:, :, 0, :]                       # (N, Q, km+1)
-        acc = jnp.take_along_axis(
-            reach, self.accept_idx[None, :, None], axis=-1)[..., 0]  # (N, Q)
-        hit = acc > 0
-        matched = hit.any(axis=0)
-        first = jnp.where(hit, jnp.arange(kind.shape[0])[:, None],
-                          NO_MATCH).min(axis=0)
-        return matched, first
+                step_tags[qi, i] = self.dictionary.add(st.tag)
+        return base.FilterPlan(
+            "matscan",
+            tables=dict(
+                step_tags=jnp.asarray(step_tags),
+                # accept index per query = its own length
+                accept_idx=jnp.asarray(
+                    np.array([q.length for q in queries], np.int32)),
+            ),
+            meta={"kmax": kmax, "n_queries": len(queries)},
+        )
 
     def filter_document(self, ev: EventStream) -> FilterResult:
-        matched, first = self._scan(jnp.asarray(ev.kind.astype(np.int32)),
-                                    jnp.asarray(ev.tag_id))
+        p = self.plan_
+        matched, first = _scan(p["step_tags"], p["accept_idx"],
+                               jnp.asarray(ev.kind.astype(np.int32)),
+                               jnp.asarray(ev.tag_id))
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        p = self.plan_
+        matched, first = _scan_batch(
+            p["step_tags"], p["accept_idx"],
+            jnp.asarray(batch.kind.astype(np.int32)),
+            jnp.asarray(batch.tag_id))
         return FilterResult(np.asarray(matched), np.asarray(first))
 
 

@@ -9,9 +9,10 @@ from __future__ import annotations
 import numpy as np
 
 from ..dictionary import TagDictionary
-from ..events import OPEN, EventStream
+from ..events import OPEN, EventBatch, EventStream
 from ..nfa import NFA, WILD_TAG
 from ..xpath import CHILD, Query, WILDCARD
+from . import base
 from .result import NO_MATCH, FilterResult
 
 
@@ -47,6 +48,11 @@ def filter_document(nfa: NFA, ev: EventStream,
                     dictionary: TagDictionary) -> FilterResult:
     """Evaluate every profile against the document, recursively."""
     queries = [_resolve_steps(q, dictionary) for q in nfa.queries]
+    return _filter_resolved(queries, ev)
+
+
+def _filter_resolved(queries, ev: EventStream) -> FilterResult:
+    """Same walk, with the name→id resolution already done."""
     matched = np.zeros(len(queries), dtype=bool)
     first = np.full(len(queries), NO_MATCH, dtype=np.int32)
 
@@ -65,3 +71,34 @@ def filter_document(nfa: NFA, ev: EventStream,
             if path:
                 path.pop()
     return FilterResult(matched, first)
+
+
+@base.register("oracle")
+class OracleEngine(base.FilterEngine):
+    """Registry adapter over the recursive ground truth.
+
+    Needs the tag dictionary (queries carry tag *names*); "compilation"
+    is just resolving names to ids once.
+    """
+
+    def __init__(self, nfa: NFA, dictionary: TagDictionary | None = None,
+                 **options) -> None:
+        if dictionary is None:
+            raise ValueError("oracle engine needs the tag dictionary")
+        super().__init__(nfa, dictionary, **options)
+        self._steps = self.plan_.meta["steps"]
+
+    def plan(self, nfa: NFA) -> base.FilterPlan:
+        steps = tuple(tuple(_resolve_steps(q, self.dictionary))
+                      for q in nfa.queries)
+        return base.FilterPlan("oracle", tables={},
+                               meta={"steps": steps,
+                                     "n_queries": nfa.n_queries})
+
+    def filter_document(self, ev: EventStream) -> FilterResult:
+        # resolution happened once, in plan()
+        return _filter_resolved(self._steps, ev)
+
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        return FilterResult.stack(
+            [self.filter_document(ev) for ev in batch.streams()])

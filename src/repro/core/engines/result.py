@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -10,30 +11,72 @@ NO_MATCH = np.iinfo(np.int32).max
 
 @dataclass
 class FilterResult:
-    """Per-query outcome of filtering one document.
+    """Per-query outcome of filtering one document — or a batch of them.
 
-    ``matched[q]`` — document satisfies profile q.
-    ``first_event[q]`` — event index of the first accepting OPEN event
+    Single document: ``matched``/``first_event`` have shape ``(Q,)``.
+    Batched (the :meth:`repro.core.engines.base.FilterEngine.filter_batch`
+    contract): shape ``(B, Q)``; ``res[i]`` recovers document i's view.
+
+    ``matched[..., q]`` — document satisfies profile q.
+    ``first_event[..., q]`` — event index of the first accepting OPEN event
     (the paper's "location of the match inside the document structure"),
-    ``NO_MATCH`` when unmatched.  Engines that cannot report locations
-    (matscan prefix products report them; oracle does) set it to
-    ``NO_MATCH`` for unmatched queries only.
+    ``NO_MATCH`` when unmatched.
     """
 
-    matched: np.ndarray      # (Q,) bool
-    first_event: np.ndarray  # (Q,) int32
+    matched: np.ndarray      # (..., Q) bool
+    first_event: np.ndarray  # (..., Q) int32
 
     def __post_init__(self) -> None:
         self.matched = np.asarray(self.matched, dtype=bool)
         self.first_event = np.asarray(self.first_event, dtype=np.int32)
+        assert self.matched.shape == self.first_event.shape
 
+    # ------------------------------------------------------------ structure
+    @property
+    def n_queries(self) -> int:
+        return int(self.matched.shape[-1])
+
+    @property
+    def batch_shape(self) -> tuple[int, ...]:
+        return tuple(self.matched.shape[:-1])
+
+    def __len__(self) -> int:
+        if not self.batch_shape:
+            raise TypeError("len() of a single-document FilterResult")
+        return int(self.batch_shape[0])
+
+    def __getitem__(self, i) -> "FilterResult":
+        if not self.batch_shape:
+            raise TypeError("single-document FilterResult is not indexable")
+        return FilterResult(self.matched[i], self.first_event[i])
+
+    def per_document(self) -> Iterator["FilterResult"]:
+        """Iterate a batched result as single-document results."""
+        for i in range(len(self)):
+            yield self[i]
+
+    @classmethod
+    def stack(cls, results: Sequence["FilterResult"]) -> "FilterResult":
+        """Stack single-document results into one batched result."""
+        return cls(np.stack([r.matched for r in results]),
+                   np.stack([r.first_event for r in results]))
+
+    # ------------------------------------------------------------- queries
     def matching_queries(self) -> np.ndarray:
+        if self.batch_shape:
+            raise TypeError("matching_queries() needs a single-document "
+                            "result; index the batch first")
         return np.nonzero(self.matched)[0]
+
+    def selectivity(self) -> float:
+        """Fraction of (doc, profile) pairs that match."""
+        return float(self.matched.mean())
 
     def __eq__(self, other: object) -> bool:  # pragma: no cover
         if not isinstance(other, FilterResult):
             return NotImplemented
         return bool(
-            (self.matched == other.matched).all()
+            self.matched.shape == other.matched.shape
+            and (self.matched == other.matched).all()
             and (self.first_event == other.first_event).all()
         )

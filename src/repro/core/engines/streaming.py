@@ -13,37 +13,25 @@ rather than per byte; the byte→event pre-decode is its own parallel kernel,
 
 State bitmasks are packed ``uint32`` words (the FPGA keeps one FF per
 state; we keep one bit), so the scan carry is ``(max_depth+2, S/32)`` words
-per document — small enough for VMEM at thousands of queries.
+per document — small enough for VMEM at thousands of queries, and XLA
+donates it in place across scan steps.
+
+Compilation happens once, in :meth:`StreamingEngine.plan`; the batched
+path is ``vmap`` of the same scan over an
+:class:`~repro.core.events.EventBatch`.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..events import CLOSE, OPEN, EventStream
-from ..nfa import NFA, WILD_TAG
+from ..events import CLOSE, OPEN, EventBatch, EventStream
+from ..nfa import NFA, WILD_TAG, pad_states
+from . import base
 from .result import NO_MATCH, FilterResult
-
-
-@dataclass(frozen=True)
-class StreamingTables:
-    """Device-resident NFA tables (padded to 32-lane words)."""
-
-    in_state: jax.Array   # (S,) int32
-    in_tag: jax.Array     # (S,) int32
-    selfloop: jax.Array   # (S,) int32 0/1
-    init_words: jax.Array  # (W,) uint32
-    accept_state: jax.Array  # (Q,) int32
-    n_states: int
-    max_depth: int
-
-    @property
-    def n_words(self) -> int:
-        return self.n_states // 32
 
 
 def _pack_words(bits: jax.Array) -> jax.Array:
@@ -59,25 +47,6 @@ def _unpack_words(words: jax.Array) -> jax.Array:
     shifts = jnp.arange(32, dtype=jnp.uint32)
     bits = (words[..., None] >> shifts) & jnp.uint32(1)
     return bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,)).astype(jnp.int32)
-
-
-def build_tables(nfa: NFA, max_depth: int) -> StreamingTables:
-    from ..nfa import pad_states
-
-    nfa = pad_states(nfa, 32)
-    t = nfa.tables
-    init_words = np.asarray(
-        jax.device_get(_pack_words(jnp.asarray(t.init.astype(np.int32))))
-    )
-    return StreamingTables(
-        in_state=jnp.asarray(t.in_state),
-        in_tag=jnp.asarray(t.in_tag),
-        selfloop=jnp.asarray(t.selfloop.astype(np.int32)),
-        init_words=jnp.asarray(init_words),
-        accept_state=jnp.asarray(t.accept_state),
-        n_states=t.in_state.shape[0],
-        max_depth=max_depth,
-    )
 
 
 @functools.partial(jax.jit, static_argnames=("n_states", "max_depth"))
@@ -121,33 +90,68 @@ def _run(kind, tag, in_state, in_tag, selfloop, init_words, accept_state,
     return matched, first
 
 
-class StreamingEngine:
-    """Public API: compile once, filter many documents."""
+@jax.jit
+def _run_batch(plan: base.FilterPlan, kind: jax.Array, tag: jax.Array):
+    """vmap of the event scan over a (B, N) batch; plan is a pytree arg,
+    so one trace serves every batch of the same shape."""
+    meta = plan.meta
+    fn = functools.partial(
+        _run,
+        in_state=plan["in_state"], in_tag=plan["in_tag"],
+        selfloop=plan["selfloop"], init_words=plan["init_words"],
+        accept_state=plan["accept_state"],
+        n_states=meta["n_states"], max_depth=meta["max_depth"])
+    return jax.vmap(fn, in_axes=(0, 0))(kind, tag)
 
-    def __init__(self, nfa: NFA, max_depth: int = 64) -> None:
-        self.tables = build_tables(nfa, max_depth)
-        self.n_queries = nfa.n_queries
+
+@base.register("streaming")
+class StreamingEngine(base.FilterEngine):
+    """Public API: compile once (``plan``), filter many documents."""
+
+    def __init__(self, nfa: NFA, dictionary=None, max_depth: int = 64,
+                 **options) -> None:
+        self.max_depth = max_depth
+        super().__init__(nfa, dictionary, **options)
+
+    def plan(self, nfa: NFA) -> base.FilterPlan:
+        nfa = pad_states(nfa, 32)
+        t = nfa.tables
+        init_words = jax.device_get(
+            _pack_words(jnp.asarray(t.init.astype(np.int32))))
+        return base.FilterPlan(
+            "streaming",
+            tables=dict(
+                in_state=jnp.asarray(t.in_state),
+                in_tag=jnp.asarray(t.in_tag),
+                selfloop=jnp.asarray(t.selfloop.astype(np.int32)),
+                init_words=jnp.asarray(init_words),
+                accept_state=jnp.asarray(t.accept_state),
+            ),
+            meta={"n_states": int(t.in_state.shape[0]),
+                  "max_depth": self.max_depth},
+        )
 
     def filter_document(self, ev: EventStream) -> FilterResult:
-        t = self.tables
+        p = self.plan_
         matched, first = _run(
             jnp.asarray(ev.kind.astype(np.int32)),
             jnp.asarray(ev.tag_id),
-            t.in_state, t.in_tag, t.selfloop, t.init_words, t.accept_state,
-            n_states=t.n_states, max_depth=t.max_depth)
+            p["in_state"], p["in_tag"], p["selfloop"], p["init_words"],
+            p["accept_state"],
+            n_states=p.meta["n_states"], max_depth=p.meta["max_depth"])
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        matched, first = _run_batch(
+            self.plan_,
+            jnp.asarray(batch.kind.astype(np.int32)),
+            jnp.asarray(batch.tag_id))
         return FilterResult(np.asarray(matched), np.asarray(first))
 
     def filter_documents_batched(self, kind: np.ndarray,
                                  tag: np.ndarray) -> FilterResult:
-        """(B, N) batched documents (padded) → stacked results via vmap."""
-        t = self.tables
-        fn = jax.vmap(
-            functools.partial(
-                _run, in_state=t.in_state, in_tag=t.in_tag,
-                selfloop=t.selfloop, init_words=t.init_words,
-                accept_state=t.accept_state,
-                n_states=t.n_states, max_depth=t.max_depth),
-            in_axes=(0, 0))
-        matched, first = fn(jnp.asarray(kind.astype(np.int32)),
-                            jnp.asarray(tag))
+        """Legacy raw-array batched API (prefer :meth:`filter_batch`)."""
+        matched, first = _run_batch(
+            self.plan_, jnp.asarray(np.asarray(kind).astype(np.int32)),
+            jnp.asarray(tag))
         return FilterResult(np.asarray(matched), np.asarray(first))

@@ -11,47 +11,57 @@ from collections import defaultdict
 
 import numpy as np
 
-from ..events import CLOSE, OPEN, EventStream
+from ..events import CLOSE, OPEN, EventBatch, EventStream
 from ..nfa import NFA, WILD_TAG
+from . import base
 from .result import NO_MATCH, FilterResult
 
 
-class YFilterEngine:
+def _adjacency(nfa: NFA):
+    """NFA tables → adjacency-list execution form (host-side 'plan')."""
+    t = nfa.tables
+    by_src_tag: dict[int, dict[int, list[int]]] = defaultdict(dict)
+    by_src_wild: dict[int, list[int]] = defaultdict(list)
+    for s in range(1, t.in_state.shape[0]):
+        u = int(t.in_state[s])
+        tag = int(t.in_tag[s])
+        if tag == WILD_TAG:
+            by_src_wild[u].append(s)
+        elif tag >= 0:
+            by_src_tag[u].setdefault(tag, []).append(s)
+    accept_of_state: dict[int, list[int]] = defaultdict(list)
+    for q, s in enumerate(t.accept_state.tolist()):
+        accept_of_state[s].append(q)
+    return dict(
+        by_src_tag=dict(by_src_tag),
+        by_src_wild=dict(by_src_wild),
+        selfloop=frozenset(np.nonzero(t.selfloop)[0].tolist()),
+        init=frozenset(np.nonzero(t.init)[0].tolist()),
+        accept_of_state=dict(accept_of_state),
+    )
+
+
+@base.register("yfilter")
+class YFilterEngine(base.FilterEngine):
     """Precompiled adjacency-list execution of the shared NFA."""
 
-    def __init__(self, nfa: NFA) -> None:
-        t = nfa.tables
-        self.n_queries = nfa.n_queries
-        # by_src_tag[u][tag] -> list of target states; wildcard edges separate
-        by_src_tag: dict[int, dict[int, list[int]]] = defaultdict(dict)
-        by_src_wild: dict[int, list[int]] = defaultdict(list)
-        for s in range(1, t.in_state.shape[0]):
-            u = int(t.in_state[s])
-            tag = int(t.in_tag[s])
-            if tag == WILD_TAG:
-                by_src_wild[u].append(s)
-            elif tag >= 0:
-                by_src_tag[u].setdefault(tag, []).append(s)
-        self.by_src_tag = dict(by_src_tag)
-        self.by_src_wild = dict(by_src_wild)
-        self.selfloop = frozenset(np.nonzero(t.selfloop)[0].tolist())
-        self.init = frozenset(np.nonzero(t.init)[0].tolist())
-        accept_of_state: dict[int, list[int]] = defaultdict(list)
-        for q, s in enumerate(t.accept_state.tolist()):
-            accept_of_state[s].append(q)
-        self.accept_of_state = dict(accept_of_state)
+    def plan(self, nfa: NFA) -> base.FilterPlan:
+        # host tables, not device arrays — the plan never enters jit
+        return base.FilterPlan("yfilter", tables=_adjacency(nfa),
+                               meta={"n_queries": nfa.n_queries})
 
     # ------------------------------------------------------------------ run
     def filter_document(self, ev: EventStream) -> FilterResult:
+        p = self.plan_
         matched = np.zeros(self.n_queries, dtype=bool)
         first = np.full(self.n_queries, NO_MATCH, dtype=np.int32)
-        stack: list[frozenset[int]] = [self.init]
+        stack: list[frozenset[int]] = [p["init"]]
         kinds = ev.kind
         tags = ev.tag_id
-        by_tag = self.by_src_tag
-        by_wild = self.by_src_wild
-        loops = self.selfloop
-        accepts = self.accept_of_state
+        by_tag = p["by_src_tag"]
+        by_wild = p["by_src_wild"]
+        loops = p["selfloop"]
+        accepts = p["accept_of_state"]
         for i in range(len(ev)):
             k = kinds[i]
             if k == OPEN:
@@ -80,5 +90,6 @@ class YFilterEngine:
                     stack.pop()
         return FilterResult(matched, first)
 
-    def filter_documents(self, docs: list[EventStream]) -> list[FilterResult]:
-        return [self.filter_document(d) for d in docs]
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        return FilterResult.stack(
+            [self.filter_document(ev) for ev in batch.streams()])

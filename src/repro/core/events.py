@@ -19,6 +19,7 @@ tags 5 bytes ``</xy>`` where ``x``/``y`` come from the 64-symbol alphabet in
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -123,6 +124,134 @@ class EventStream:
             else:
                 depth[i] = len(stack)
         return depth, parent
+
+
+# -------------------------------------------------------------- batch format
+def bucket_length(n: int, bucket: int | None) -> int:
+    """Round ``n`` up to a padding bucket boundary.
+
+    Bucketed padding keeps the number of distinct (B, N) shapes — and
+    therefore the number of XLA compilations — bounded: every batch is
+    padded to the next multiple of ``bucket`` instead of its exact max
+    length.  ``bucket=None`` disables bucketing (exact max-length pad).
+    """
+    if bucket is None or bucket <= 1:
+        return max(1, n)
+    return max(bucket, -(-n // bucket) * bucket)
+
+
+@dataclass
+class EventBatch:
+    """Padded, device-ready batch of event streams — THE document format.
+
+    Every filtering engine consumes this one structure (see
+    :mod:`repro.core.engines.base`): a dense ``(B, N)`` structure-of-arrays
+    view of ``B`` documents padded to a common event count ``N``, with the
+    per-event structure (depth, parent pointer) that the levelwise engines
+    need precomputed in the same host pass that pads.
+
+    ``kind``/``tag_id`` are the raw SAX-level stream (what the streaming
+    and matscan engines scan); ``depth``/``parent`` virtualize the
+    document stack (what the levelwise engines bucket by); ``valid`` masks
+    the padding tail; ``n_events[b]`` is the true length of document b.
+    """
+
+    kind: np.ndarray      # (B, N) int8  — OPEN / CLOSE / PAD
+    tag_id: np.ndarray    # (B, N) int32 — dictionary id, -1 for PAD
+    depth: np.ndarray     # (B, N) int32 — node depth for OPEN events
+    parent: np.ndarray    # (B, N) int32 — event idx of parent OPEN, -1 root
+    valid: np.ndarray     # (B, N) bool  — kind != PAD
+    n_events: np.ndarray  # (B,)   int32 — true per-document lengths
+
+    def __post_init__(self) -> None:
+        self.kind = np.asarray(self.kind, dtype=np.int8)
+        self.tag_id = np.asarray(self.tag_id, dtype=np.int32)
+        self.depth = np.asarray(self.depth, dtype=np.int32)
+        self.parent = np.asarray(self.parent, dtype=np.int32)
+        self.valid = np.asarray(self.valid, dtype=bool)
+        self.n_events = np.asarray(self.n_events, dtype=np.int32)
+        assert self.kind.ndim == 2
+        assert self.kind.shape == self.tag_id.shape == self.depth.shape \
+            == self.parent.shape == self.valid.shape
+        assert self.n_events.shape == (self.kind.shape[0],)
+
+    # ----------------------------------------------------------- properties
+    @property
+    def batch_size(self) -> int:
+        return int(self.kind.shape[0])
+
+    @property
+    def length(self) -> int:
+        return int(self.kind.shape[1])
+
+    def __len__(self) -> int:
+        return self.batch_size
+
+    # ----------------------------------------------------------- constructors
+    @classmethod
+    def from_streams(cls, docs: Sequence["EventStream"],
+                     bucket: int | None = None) -> "EventBatch":
+        """Pad ``docs`` to a common (bucketed) length and stack.
+
+        One linear host pass per document computes (depth, parent)
+        alongside the pad — the batch analogue of
+        :meth:`EventStream.structure`.
+        """
+        if len(docs) == 0:
+            raise ValueError("empty batch")
+        n = bucket_length(max((len(d) for d in docs), default=1), bucket)
+        b = len(docs)
+        kind = np.full((b, n), PAD, dtype=np.int8)
+        tag = np.full((b, n), -1, dtype=np.int32)
+        depth = np.zeros((b, n), dtype=np.int32)
+        parent = np.full((b, n), -1, dtype=np.int32)
+        valid = np.zeros((b, n), dtype=bool)
+        lengths = np.zeros(b, dtype=np.int32)
+        for i, doc in enumerate(docs):
+            m = len(doc)
+            kind[i, :m] = doc.kind
+            tag[i, :m] = doc.tag_id
+            d, p = doc.structure()
+            depth[i, :m] = d
+            parent[i, :m] = p
+            valid[i, :m] = doc.kind != PAD
+            lengths[i] = m
+        return cls(kind, tag, depth, parent, valid, lengths)
+
+    def pad_to(self, n: int) -> "EventBatch":
+        """Grow the event axis to ``n`` (no-op when already that long)."""
+        cur = self.length
+        if n < cur:
+            raise ValueError(f"cannot pad {cur} events into {n}")
+        if n == cur:
+            return self
+        b, extra = self.batch_size, n - cur
+        return EventBatch(
+            np.concatenate([self.kind, np.full((b, extra), PAD, np.int8)], 1),
+            np.concatenate([self.tag_id, np.full((b, extra), -1, np.int32)], 1),
+            np.concatenate([self.depth, np.zeros((b, extra), np.int32)], 1),
+            np.concatenate([self.parent, np.full((b, extra), -1, np.int32)], 1),
+            np.concatenate([self.valid, np.zeros((b, extra), bool)], 1),
+            self.n_events,
+        )
+
+    # ------------------------------------------------------------ recovery
+    def stream(self, i: int) -> "EventStream":
+        """Document ``i`` as an un-padded :class:`EventStream`."""
+        m = int(self.n_events[i])
+        return EventStream(self.kind[i, :m].copy(), self.tag_id[i, :m].copy())
+
+    def streams(self) -> Iterator["EventStream"]:
+        for i in range(self.batch_size):
+            yield self.stream(i)
+
+    # ------------------------------------------------------------- metrics
+    def nbytes(self, text_fill: int = 0) -> np.ndarray:
+        """(B,) byte sizes in the paper's wire format (for MB/s stats)."""
+        n_open = (self.kind == OPEN).sum(axis=1)
+        n_close = (self.kind == CLOSE).sum(axis=1)
+        return (n_open * (OPEN_NBYTES + text_fill)
+                + n_close * CLOSE_NBYTES).astype(np.int64)
 
 
 # ----------------------------------------------------------------- tree view

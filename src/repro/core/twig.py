@@ -210,14 +210,9 @@ class TwigFilter:
                 self.paths.append(q)
                 self.path_owner.append(ti)
         self.nfa = compile_queries(self.paths, dictionary, shared=True)
-        if engine == "levelwise":
-            from .engines.levelwise import LevelwiseEngine
-            self._eng = LevelwiseEngine(self.nfa)
-        elif engine == "streaming":
-            from .engines.streaming import StreamingEngine
-            self._eng = StreamingEngine(self.nfa)
-        else:
-            raise ValueError(engine)
+        from . import engines as engine_registry
+        self._eng = engine_registry.create(engine, self.nfa,
+                                           dictionary=dictionary)
         self.stats = {"stage2_checks": 0, "stage2_rejects": 0}
 
     def filter_document(self, ev: EventStream) -> FilterResult:

@@ -10,24 +10,30 @@ stage in front of the training/serving data pipeline:
 * serving: requests carrying XML payloads are routed to model replicas by
   subscription (``launch/serve.py``).
 
-The stage batches documents and runs the levelwise TPU engine by default;
-``engine='yfilter'`` selects the software baseline (useful for the Fig-9
-comparison in situ).
+The stage is engine-agnostic: any registered engine name
+(:func:`repro.core.engines.names`) works, because every engine consumes
+the same :class:`~repro.core.events.EventBatch` and returns the same
+batched ``(B, Q)`` :class:`~repro.core.engines.FilterResult`.  Batches
+are padded to bucket boundaries so the number of compiled shapes stays
+bounded, and ``stage.stats`` accumulates per-batch throughput and
+selectivity.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
+from ..core import engines
 from ..core.dictionary import TagDictionary
-from ..core.engines.levelwise import LevelwiseEngine
-from ..core.engines.streaming import StreamingEngine
-from ..core.engines.yfilter import YFilterEngine
-from ..core.events import EventStream, event_stream_nbytes
+from ..core.engines import FilterResult
+from ..core.events import EventBatch, EventStream, event_stream_nbytes
 from ..core.nfa import NFA, compile_queries
 from ..core.xpath import Query, parse
+
+TEXT_FILL = 8  # filler text bytes per element in the MB/s accounting
 
 
 @dataclass
@@ -40,12 +46,16 @@ class RoutedDocument:
 
 @dataclass
 class FilterStage:
-    """Standing-profile filter + router.
+    """Standing-profile filter + router over any registered engine.
 
     ``shard_of_profile[q]`` maps each subscription to a destination shard
     (defaults to round-robin).  A document goes to every shard that has at
     least one matching subscription; unmatched documents are dropped
     (classic pub-sub) or sent to shard 0 with ``keep_unmatched=True``.
+
+    ``bucket`` controls padded-batch bucketing: each batch's event axis is
+    padded to the next multiple, capping the number of distinct shapes
+    the device engines compile for.
     """
 
     profiles: Sequence[Query]
@@ -54,30 +64,42 @@ class FilterStage:
     engine: str = "levelwise"
     keep_unmatched: bool = False
     batch_size: int = 32
+    bucket: int = 128
     shard_of_profile: np.ndarray = field(default=None)  # type: ignore
+    stats: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if isinstance(self.profiles[0], str):
             self.profiles = [parse(p) for p in self.profiles]
         self.nfa: NFA = compile_queries(list(self.profiles), self.dictionary,
                                         shared=True)
+        self._eng = engines.create(self.engine, self.nfa,
+                                   dictionary=self.dictionary)
         if self.shard_of_profile is None:
             self.shard_of_profile = (
                 np.arange(len(self.profiles)) % self.n_shards).astype(np.int32)
-        if self.engine == "levelwise":
-            self._eng = LevelwiseEngine(self.nfa)
-        elif self.engine == "streaming":
-            self._eng = StreamingEngine(self.nfa)
-        elif self.engine == "yfilter":
-            self._eng = YFilterEngine(self.nfa)
-        else:
-            raise ValueError(self.engine)
+        self.stats = {"batches": 0, "docs": 0, "bytes": 0,
+                      "seconds": 0.0, "pair_matches": 0, "pairs": 0}
 
     # ----------------------------------------------------------------- run
-    def _filter_batch(self, docs: list[EventStream]):
-        if self.engine == "levelwise":
-            return self._eng.filter_documents_batched(docs)
-        return [self._eng.filter_document(d) for d in docs]
+    def _filter_batch(self, docs: list[EventStream],
+                      record: bool = True) -> FilterResult:
+        """Uniform batched path: every engine gets one EventBatch and
+        returns one (B, Q) FilterResult.  ``record=False`` keeps
+        metric-only reads (e.g. :meth:`selectivity`) out of the
+        cumulative routing stats."""
+        batch = EventBatch.from_streams(docs, bucket=self.bucket)
+        t0 = time.perf_counter()
+        res = self._eng.filter_batch(batch)
+        dt = time.perf_counter() - t0
+        if record:
+            self.stats["batches"] += 1
+            self.stats["docs"] += batch.batch_size
+            self.stats["bytes"] += int(batch.nbytes(TEXT_FILL).sum())
+            self.stats["seconds"] += dt
+            self.stats["pair_matches"] += int(res.matched.sum())
+            self.stats["pairs"] += res.matched.size
+        return res
 
     def route(self, docs: Iterable[EventStream]) -> Iterator[list[RoutedDocument]]:
         """Yield routed batches; each doc may fan out to several shards."""
@@ -96,8 +118,8 @@ class FilterStage:
                      base: int) -> list[RoutedDocument]:
         results = self._filter_batch(docs)
         out: list[RoutedDocument] = []
-        for i, (doc, res) in enumerate(zip(docs, results)):
-            qids = res.matching_queries()
+        for i, doc in enumerate(docs):
+            qids = results[i].matching_queries()
             nb = event_stream_nbytes(doc)
             if len(qids) == 0:
                 if self.keep_unmatched:
@@ -110,7 +132,19 @@ class FilterStage:
 
     # ------------------------------------------------------------- metrics
     def selectivity(self, docs: list[EventStream]) -> float:
-        """Fraction of (doc, profile) pairs that match — workload stat."""
-        results = self._filter_batch(docs)
-        m = np.stack([r.matched for r in results])
-        return float(m.mean())
+        """Fraction of (doc, profile) pairs that match — workload stat.
+
+        Read-only: does not count toward :meth:`throughput`."""
+        return self._filter_batch(list(docs), record=False).selectivity()
+
+    def throughput(self) -> dict:
+        """Cumulative filtering throughput over everything routed so far."""
+        s = self.stats
+        dt = max(s["seconds"], 1e-9)
+        return {
+            "engine": self.engine,
+            "docs": s["docs"],
+            "docs_per_s": s["docs"] / dt,
+            "mb_per_s": s["bytes"] / 1e6 / dt,
+            "selectivity": s["pair_matches"] / max(s["pairs"], 1),
+        }

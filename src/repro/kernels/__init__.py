@@ -5,4 +5,27 @@
 * :mod:`.stream_filter`  -- FPGA-analogue streaming filter, VMEM stack
 * :mod:`.ops`            -- jit'd public wrappers (+ interpret switch)
 * :mod:`.ref`            -- pure-jnp oracles (tests assert allclose)
+
+Kernel selection: every ``*_pallas`` entry point takes
+``interpret=None``, which auto-detects from the backend — compiled on
+TPU, interpreter everywhere else (overridable with the
+``REPRO_PALLAS_INTERPRET`` env var; see :func:`interpret_default`).
 """
+from __future__ import annotations
+
+import os
+
+
+def interpret_default() -> bool:
+    """Should Pallas kernels run in interpret mode on this backend?
+
+    ``REPRO_PALLAS_INTERPRET=0/1`` forces it; otherwise interpret
+    everywhere except a real TPU backend (the kernels are written for
+    TPU and validated via the interpreter on CPU).
+    """
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    import jax
+
+    return jax.default_backend() != "tpu"

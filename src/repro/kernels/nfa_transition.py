@@ -40,38 +40,54 @@ def nfa_transition_pallas(parent_rows: jax.Array, tags: jax.Array,
                           req: jax.Array, wild: jax.Array,
                           parent_1h: jax.Array, selfloop: jax.Array,
                           *, bw: int = 128, bs: int = 512,
-                          interpret: bool = True) -> jax.Array:
-    """See :func:`repro.kernels.ref.nfa_transition` for semantics."""
+                          interpret: bool | None = None) -> jax.Array:
+    """See :func:`repro.kernels.ref.nfa_transition` for semantics.
+
+    ``interpret=None`` auto-detects from the backend (compiled on TPU,
+    interpreter elsewhere).  Both the node axis (W) and the state axis
+    (S) are padded up to the block grid; padding states are inert (no
+    parent edge, REQ column zero) so the sliced-back result is exact.
+    """
+    from . import interpret_default
+
+    if interpret is None:
+        interpret = interpret_default()
     w, s = parent_rows.shape
     t = req.shape[0]
     bw = min(bw, max(8, w))
     bs = min(bs, s)
     w_pad, s_pad = -w % bw, -s % bs
-    if s_pad:
-        raise ValueError(f"n_states {s} must be a multiple of bs {bs}")
     onehot = jax.nn.one_hot(tags, t, dtype=jnp.float32)
     valid = (tags >= 0).astype(jnp.float32)[:, None]
     if w_pad:
         parent_rows = jnp.pad(parent_rows, ((0, w_pad), (0, 0)))
         onehot = jnp.pad(onehot, ((0, w_pad), (0, 0)))
         valid = jnp.pad(valid, ((0, w_pad), (0, 0)))
-    wp = parent_rows.shape[0]
-    grid = (wp // bw, s // bs)
+    if s_pad:
+        # grow the state axis with inert states: zero REQ/wild/selfloop
+        # columns and no parent-one-hot edges ⇒ padding lanes stay 0.
+        parent_rows = jnp.pad(parent_rows, ((0, 0), (0, s_pad)))
+        req = jnp.pad(req, ((0, 0), (0, s_pad)))
+        wild = jnp.pad(wild, (0, s_pad))
+        selfloop = jnp.pad(selfloop, (0, s_pad))
+        parent_1h = jnp.pad(parent_1h, ((0, s_pad), (0, s_pad)))
+    wp, sp = parent_rows.shape
+    grid = (wp // bw, sp // bs)
     out = pl.pallas_call(
         functools.partial(_kernel, bs=bs),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bw, s), lambda i, j: (i, 0)),    # parent strip
+            pl.BlockSpec((bw, sp), lambda i, j: (i, 0)),   # parent strip
             pl.BlockSpec((bw, t), lambda i, j: (i, 0)),    # onehot tags
             pl.BlockSpec((t, bs), lambda i, j: (0, j)),    # REQ tile
             pl.BlockSpec((1, bs), lambda i, j: (0, j)),    # wild
-            pl.BlockSpec((s, bs), lambda i, j: (0, j)),    # parent one-hot
+            pl.BlockSpec((sp, bs), lambda i, j: (0, j)),   # parent one-hot
             pl.BlockSpec((1, bs), lambda i, j: (0, j)),    # selfloop
             pl.BlockSpec((bw, 1), lambda i, j: (i, 0)),    # valid col
         ],
         out_specs=pl.BlockSpec((bw, bs), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((wp, s), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((wp, sp), jnp.float32),
         interpret=interpret,
     )(parent_rows, onehot, req, wild[None, :], parent_1h,
       selfloop[None, :], valid)
-    return out[:w]
+    return out[:w, :s]

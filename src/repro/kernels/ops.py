@@ -1,13 +1,13 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels are written for TPU and validated in interpret mode, per the
-hardware-adaptation notes in DESIGN.md).  On a real TPU backend set
-``REPRO_PALLAS_INTERPRET=0`` (or rely on the auto-detect) to run compiled.
+Kernel selection (interpret vs compiled) is auto-detected from the
+backend by :func:`repro.kernels.interpret_default`: interpret mode
+everywhere except a real TPU (this container is CPU-only; the kernels
+are written for TPU and validated in interpret mode, per the
+hardware-adaptation notes in DESIGN.md).  ``REPRO_PALLAS_INTERPRET=0/1``
+overrides.
 """
 from __future__ import annotations
-
-import os
 
 import jax
 import jax.numpy as jnp
@@ -18,28 +18,21 @@ from ..core.engines.result import NO_MATCH, FilterResult
 from ..core.events import EventStream
 from ..core.xpath import Query
 from . import blocks as blocks_mod
+from . import interpret_default as _interpret_default
 from . import ref
 from .nfa_transition import nfa_transition_pallas
 from .predecode import predecode_pallas
 from .stream_filter import stream_filter_pallas
 
 
-def _interpret_default() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
-
-
 def predecode(bytes_: jax.Array) -> tuple[jax.Array, jax.Array]:
-    return predecode_pallas(jnp.asarray(bytes_),
-                            interpret=_interpret_default())
+    return predecode_pallas(jnp.asarray(bytes_))
 
 
 def nfa_transition(parent_rows, tags, req, wild, parent_1h, selfloop,
                    **kw):
-    kw.setdefault("interpret", _interpret_default())
-    # pick bs dividing S (states are padded to 128 lanes)
+    # pick bs dividing S when possible (states are padded to 128 lanes);
+    # the kernel pads the state axis itself otherwise
     s = parent_rows.shape[-1]
     kw.setdefault("bs", min(512, s) if s % min(512, s) == 0 else 128)
     return nfa_transition_pallas(parent_rows, tags, req, wild, parent_1h,

@@ -49,8 +49,16 @@ def _kernel(b_ref, b1_ref, b2_ref, b3_ref, kind_ref, tag_ref):
 
 
 def predecode_pallas(bytes_: jax.Array, *, block_rows: int = 8,
-                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
-    """(N,) uint8 → ((N,) kind int32, (N,) tag int32)."""
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """(N,) uint8 → ((N,) kind int32, (N,) tag int32).
+
+    ``interpret=None`` auto-detects from the backend.
+    """
+    from . import interpret_default
+
+    if interpret is None:
+        interpret = interpret_default()
     n = bytes_.shape[0]
     b = bytes_.astype(jnp.int32)
 

@@ -80,14 +80,19 @@ def stream_filter_pallas(kind: jax.Array, tag: jax.Array,
                          in_tag: jax.Array, wild: jax.Array,
                          selfloop: jax.Array, init: jax.Array,
                          parent_1h: jax.Array, *, max_depth: int = 48,
-                         interpret: bool = True
+                         interpret: bool | None = None
                          ) -> tuple[jax.Array, jax.Array]:
     """Run all state blocks over one document.
 
     kind/tag: (N,) int32.  Block tables: in_tag (G, BLK) int32;
     wild/selfloop/init (G, BLK) f32; parent_1h (G, BLK, BLK) f32.
     Returns ever (G, BLK) f32, first (G, BLK) int32.
+    ``interpret=None`` auto-detects from the backend.
     """
+    from . import interpret_default
+
+    if interpret is None:
+        interpret = interpret_default()
     g, blk = in_tag.shape
     n = kind.shape[0]
     ever, first = pl.pallas_call(

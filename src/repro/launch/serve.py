@@ -20,6 +20,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.core import engines
 from repro.core.dictionary import TagDictionary
 from repro.data.filter_stage import FilterStage
 from repro.data.generator import DTD, gen_corpus, gen_profiles
@@ -36,13 +37,16 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--filter-engine", default="levelwise",
+                    choices=list(engines.names()),
+                    help="pub-sub routing engine (any registered engine)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced).with_(vocab=256)
     params = T.init_model(cfg, jax.random.PRNGKey(0))
-    engines = [ServeEngine(cfg, params, batch=args.batch,
-                           max_len=args.prompt_len + args.gen_len + 4)
-               for _ in range(args.replicas)]
+    replica_engines = [ServeEngine(cfg, params, batch=args.batch,
+                                   max_len=args.prompt_len + args.gen_len + 4)
+                       for _ in range(args.replicas)]
 
     # pub-sub routing layer: profiles → replicas
     dtd = DTD.generate(n_tags=24, seed=0)
@@ -50,7 +54,7 @@ def main() -> None:
     dtd.register(d)
     profiles = gen_profiles(dtd, n=32, length=3, seed=0)
     stage = FilterStage(profiles, d, n_shards=args.replicas,
-                        engine="levelwise", keep_unmatched=True,
+                        engine=args.filter_engine, keep_unmatched=True,
                         batch_size=args.batch)
     payloads = gen_corpus(dtd, n_docs=args.requests, nodes_per_doc=60,
                           seed=1)
@@ -61,8 +65,11 @@ def main() -> None:
         for r in routed:
             queues[r.shard].append(r.doc_index)
     t_route = time.perf_counter() - t0
+    tp = stage.throughput()
     print(f"[serve] routed {args.requests} requests → "
-          f"{[len(q) for q in queues]} per replica ({t_route*1e3:.1f} ms)")
+          f"{[len(q) for q in queues]} per replica ({t_route*1e3:.1f} ms; "
+          f"{tp['engine']}: {tp['docs_per_s']:.0f} docs/s, "
+          f"{tp['mb_per_s']:.2f} MB/s)")
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -73,7 +80,8 @@ def main() -> None:
             pad = args.batch - len(chunk)
             prompts = rng.integers(
                 0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
-            out = engines[rep].generate({"tokens": prompts}, args.gen_len)
+            out = replica_engines[rep].generate({"tokens": prompts},
+                                                args.gen_len)
             n_tok += out.shape[1] * (len(chunk))
             del pad
     dt = time.perf_counter() - t0

@@ -21,6 +21,23 @@ from .config import ModelConfig
 Params = dict[str, Any]
 
 
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map with replication checking off.
+
+    Newer jax exposes ``jax.shard_map`` taking ``check_vma``; some
+    releases expose ``jax.shard_map`` still taking ``check_rep``; older
+    ones only have the experimental module.  Probe the kwarg instead of
+    trusting the attribute's presence."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return sm(f, **kwargs, check_vma=False)
+    except TypeError:
+        return sm(f, **kwargs, check_rep=False)
+
+
 def dtype_of(cfg: ModelConfig):
     return jnp.dtype(cfg.activ_dtype)
 
@@ -455,12 +472,11 @@ def _moe_ep_shardmap(cfg: ModelConfig, p: Params, x2: jax.Array,
         return jax.lax.psum(y, "model")
 
     P_ = jax.sharding.PartitionSpec
-    return jax.shard_map(
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P_(dp_axes or None, None), P_(None, None),
                   P_("model", None, None), P_("model", None, None)),
         out_specs=P_(dp_axes or None, None),
-        check_vma=False,
     )(x2, p["router"], p["wi"], p["wo"])
 
 
@@ -566,12 +582,11 @@ def _moe_ep_stationary(cfg: ModelConfig, p: Params, x2: jax.Array,
         return jax.lax.psum(y, ("model", "data"))
 
     P_ = jax.sharding.PartitionSpec
-    return jax.shard_map(
+    return _shard_map(
         local, mesh=mesh,
         in_specs=(P_(None, "data"), P_("data", None),
                   P_("model", "data", None), P_("model", "data", None)),
         out_specs=P_(None, None),
-        check_vma=False,
     )(x2, p["router"], p["wi"], p["wo"])
 
 

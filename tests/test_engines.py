@@ -6,8 +6,7 @@ the TPU-shaped levelwise matmul engine.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.dictionary import TagDictionary
 from repro.core.engines import FilterResult

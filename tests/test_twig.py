@@ -2,8 +2,7 @@
 two-stage engine vs brute-force ground truth."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.dictionary import TagDictionary
 from repro.core.events import to_trees

@@ -1,0 +1,252 @@
+"""Unified filtering pipeline: EventBatch, engine registry, FilterPlan.
+
+The PR-level contract: every registered engine consumes the same
+``EventBatch`` and produces the same batched ``(B, Q)`` ``FilterResult``
+as the per-document oracle — and the pipeline/routing layer is
+engine-agnostic.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engines
+from repro.core.dictionary import TagDictionary
+from repro.core.engines import FilterPlan, FilterResult
+from repro.core.engines.matscan import exact_class
+from repro.core.engines.oracle import filter_document as oracle_filter
+from repro.core.events import (CLOSE, OPEN, PAD, EventBatch, EventStream,
+                               bucket_length)
+from repro.core.nfa import compile_queries
+from repro.core.xpath import parse
+from repro.data.filter_stage import FilterStage
+from repro.data.generator import DTD, gen_corpus, gen_document, gen_profiles
+
+ALL_ENGINES = ("levelwise", "matscan", "oracle", "streaming", "wavefront",
+               "yfilter")
+
+
+def _workload(engine: str, seed: int = 0, n_docs: int = 6, n_queries: int = 16):
+    """Profiles + docs valid for ``engine`` (matscan only supports
+    descendant chains with concrete tags, and its regex semantics is
+    exact only on documents without nested same-tag occurrences)."""
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    if engine == "matscan":
+        profiles = gen_profiles(dtd, n=n_queries, length=3, p_desc=1.0,
+                                p_wild=0.0, seed=seed)
+        # shallow documents keep the workload in matscan's exact class
+        # (no nested same-tag occurrence — see matscan module docstring)
+        docs = [doc for i in range(40 * n_docs)
+                if exact_class(doc := gen_document(dtd, target_nodes=20,
+                                                   max_depth=4,
+                                                   seed=seed + i))][:n_docs]
+        assert len(docs) == n_docs, "not enough exact-class documents"
+    else:
+        profiles = gen_profiles(dtd, n=n_queries, length=3, p_desc=0.4,
+                                p_wild=0.15, seed=seed)
+        docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=60, seed=seed)
+    return profiles, docs, d
+
+
+# ----------------------------------------------------------------- registry
+class TestRegistry:
+    def test_all_five_engines_plus_wavefront_registered(self):
+        assert set(ALL_ENGINES) <= set(engines.names())
+
+    def test_get_returns_engine_class(self):
+        cls = engines.get("levelwise")
+        assert issubclass(cls, engines.FilterEngine)
+        assert cls.name == "levelwise"
+
+    def test_unknown_engine_lists_known(self):
+        with pytest.raises(ValueError, match="levelwise"):
+            engines.get("nope")
+
+
+# --------------------------------------------------------------- EventBatch
+class TestEventBatch:
+    def test_bucket_length(self):
+        assert bucket_length(5, None) == 5
+        assert bucket_length(5, 8) == 8
+        assert bucket_length(8, 8) == 8
+        assert bucket_length(9, 8) == 16
+        assert bucket_length(0, 8) == 8
+
+    def test_from_streams_pads_and_round_trips(self):
+        dtd = DTD.generate(n_tags=8, seed=0)
+        docs = gen_corpus(dtd, n_docs=5, nodes_per_doc=30, seed=0)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        assert batch.batch_size == 5
+        assert batch.length % 64 == 0
+        assert batch.length >= max(len(d) for d in docs)
+        for i, doc in enumerate(docs):
+            got = batch.stream(i)
+            np.testing.assert_array_equal(got.kind, doc.kind)
+            np.testing.assert_array_equal(got.tag_id, doc.tag_id)
+        # padding tail is PAD/-1/invalid
+        for i, doc in enumerate(docs):
+            assert (batch.kind[i, len(doc):] == PAD).all()
+            assert (batch.tag_id[i, len(doc):] == -1).all()
+            assert not batch.valid[i, len(doc):].any()
+
+    def test_structure_matches_event_stream(self):
+        dtd = DTD.generate(n_tags=8, seed=1)
+        docs = gen_corpus(dtd, n_docs=3, nodes_per_doc=40, seed=1)
+        batch = EventBatch.from_streams(docs)
+        for i, doc in enumerate(docs):
+            depth, parent = doc.structure()
+            m = len(doc)
+            np.testing.assert_array_equal(batch.depth[i, :m], depth)
+            np.testing.assert_array_equal(batch.parent[i, :m], parent)
+
+    def test_pad_to(self):
+        ev = EventStream(np.array([OPEN, CLOSE], np.int8),
+                         np.array([0, 0], np.int32))
+        batch = EventBatch.from_streams([ev]).pad_to(16)
+        assert batch.length == 16
+        assert batch.n_events[0] == 2
+        with pytest.raises(ValueError):
+            batch.pad_to(4)
+
+
+# -------------------------------------------------------------- FilterPlan
+class TestFilterPlan:
+    def test_plan_is_a_pytree(self):
+        d = TagDictionary.build([f"t{i}" for i in range(4)])
+        nfa = compile_queries([parse(p) for p in ["t0//t1", "t0/t2"]], d)
+        eng = engines.create("streaming", nfa)
+        leaves = jax.tree_util.tree_leaves(eng.plan_)
+        assert leaves, "plan should carry device tables as pytree leaves"
+        rebuilt = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(eng.plan_), leaves)
+        assert rebuilt.meta == eng.plan_.meta
+        assert sorted(rebuilt.tables) == sorted(eng.plan_.tables)
+
+    def test_plan_is_frozen(self):
+        d = TagDictionary.build(["a", "b"])
+        nfa = compile_queries([parse("a//b")], d)
+        eng = engines.create("levelwise", nfa)
+        with pytest.raises(AttributeError):
+            eng.plan_.engine = "other"
+
+
+# ------------------------------------------- batched-vs-oracle equivalence
+class TestBatchedEquivalence:
+    """The acceptance-criteria suite: every registered engine, same
+    EventBatch input, equals the per-document oracle."""
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_filter_batch_equals_oracle(self, name, seed):
+        profiles, docs, d = _workload(name, seed=seed)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        res = eng.filter_batch(batch)
+        assert res.batch_shape == (len(docs),)
+        assert res.n_queries == len(profiles)
+        for i, doc in enumerate(docs):
+            want = oracle_filter(nfa, doc, d)
+            np.testing.assert_array_equal(
+                res[i].matched, want.matched,
+                err_msg=f"{name} doc {i} matched != oracle")
+            np.testing.assert_array_equal(
+                res[i].first_event, want.first_event,
+                err_msg=f"{name} doc {i} location != oracle")
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_padding_is_inert(self, name):
+        """Extra bucket padding must not change any engine's answer."""
+        profiles, docs, d = _workload(name, seed=5, n_docs=3)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d)
+        tight = eng.filter_batch(EventBatch.from_streams(docs))
+        padded = eng.filter_batch(
+            EventBatch.from_streams(docs).pad_to(
+                bucket_length(max(len(x) for x in docs) + 37, 64)))
+        np.testing.assert_array_equal(tight.matched, padded.matched)
+        np.testing.assert_array_equal(tight.first_event, padded.first_event)
+
+
+# --------------------------------------------------------- routing parity
+class TestEngineAgnosticRouting:
+    """Regression for the old per-backend return-type split:
+    FilterStage routing must be identical for every registered engine."""
+
+    def _routes(self, engine):
+        profiles, docs, d = _workload("matscan", seed=2, n_docs=8,
+                                      n_queries=24)
+        stage = FilterStage(profiles, d, n_shards=4, engine=engine,
+                            batch_size=3)
+        got = [r for batch in stage.route(docs) for r in batch]
+        return {(r.doc_index, r.shard): tuple(r.matched_profiles)
+                for r in got}
+
+    def test_routing_identical_across_all_engines(self):
+        routes = {name: self._routes(name) for name in ALL_ENGINES}
+        ref = routes["oracle"]
+        for name, r in routes.items():
+            assert r == ref, f"routing diverged for {name}"
+
+    def test_selectivity_engine_agnostic(self):
+        profiles, docs, d = _workload("matscan", seed=2, n_docs=8)
+        sel = []
+        for name in ALL_ENGINES:
+            stage = FilterStage(profiles, d, n_shards=2, engine=name)
+            sel.append(stage.selectivity(docs))
+        assert len(set(sel)) == 1
+
+    def test_throughput_stats_accumulate(self):
+        profiles, docs, d = _workload("levelwise", seed=1, n_docs=6)
+        stage = FilterStage(profiles, d, n_shards=2, engine="levelwise",
+                            batch_size=3)
+        list(stage.route(docs))
+        tp = stage.throughput()
+        assert tp["docs"] == len(docs)
+        assert tp["docs_per_s"] > 0
+        assert tp["mb_per_s"] > 0
+        assert 0.0 <= tp["selectivity"] <= 1.0
+
+
+# ------------------------------------------------- kernel padding bugfix
+class TestKernelStatePadding:
+    def test_nfa_transition_pads_state_axis(self):
+        """n_states not a multiple of bs used to raise; now padded+sliced."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ref
+        from repro.kernels.nfa_transition import nfa_transition_pallas
+
+        rng = np.random.default_rng(7)
+        w, s, t = 12, 192, 9   # 192 % 128 != 0
+        parent = (rng.random((w, s)) < 0.3).astype(np.float32)
+        tags = rng.integers(-1, t, size=w).astype(np.int32)
+        req = (rng.random((t, s)) < 0.1).astype(np.float32)
+        wild = (rng.random(s) < 0.05).astype(np.float32)
+        in_state = rng.integers(0, s, size=s).astype(np.int32)
+        p1h = np.zeros((s, s), np.float32)
+        p1h[in_state, np.arange(s)] = 1
+        sl = (rng.random(s) < 0.2).astype(np.float32)
+        args = [jnp.asarray(x) for x in (parent, tags, req, wild, p1h, sl)]
+        got = nfa_transition_pallas(*args, bs=128, interpret=True)
+        want = ref.nfa_transition(*args)
+        assert got.shape == (w, s)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------- batched results
+class TestFilterResultBatch:
+    def test_stack_index_iterate(self):
+        a = FilterResult(np.array([True, False]), np.array([1, 2**31 - 1]))
+        b = FilterResult(np.array([False, True]), np.array([2**31 - 1, 5]))
+        batched = FilterResult.stack([a, b])
+        assert batched.batch_shape == (2,)
+        assert len(batched) == 2
+        assert batched[0] == a
+        docs = list(batched.per_document())
+        assert docs[1] == b
+        with pytest.raises(TypeError):
+            a.__getitem__(0)
+        with pytest.raises(TypeError):
+            batched.matching_queries()

@@ -1,8 +1,7 @@
 """Unit tests: XPath parser, dictionary replacement, event codec."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core import dictionary as dmod
 from repro.core import xpath
