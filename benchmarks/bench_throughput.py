@@ -27,13 +27,23 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import engines
 from repro.core.dictionary import TagDictionary
-from repro.core.events import EventBatch
+from repro.core.events import (ByteBatch, EventBatch, decode_bytes,
+                               encode_bytes)
 from repro.core.nfa import compile_queries
 from repro.data.generator import DTD, gen_corpus, gen_profiles
 
 TEXT_FILL = 8  # emulate element text content in the byte-size accounting
 
 DEFAULT_ENGINES = ("yfilter", "levelwise", "wavefront", "streaming")
+
+#: ingest paths for the parse-cost comparison (--ingest):
+#:   events       — documents pre-parsed on the host; pad+structure pass
+#:                  (EventBatch.from_streams) + filter_batch
+#:   bytes-host   — raw wire bytes decoded by the host reference
+#:                  (decode_bytes) then the events path
+#:   bytes-device — raw wire bytes parsed AND filtered on device
+#:                  (engine.filter_bytes; fused for the streaming engine)
+INGEST_PATHS = ("events", "bytes-host", "bytes-device")
 
 
 def _time(fn, repeat=3) -> float:
@@ -105,6 +115,65 @@ def run(query_counts=(16, 64, 256, 1024), path_lengths=(2, 4, 6),
     return rows
 
 
+def run_ingest(query_counts=(64, 256), path_len=4, n_docs=16,
+               nodes_per_doc=400, seed=0, ingest_paths=INGEST_PATHS,
+               engine="streaming", repeat=3):
+    """Parse-cost comparison: raw payload → verdict, per ingest path.
+
+    Unlike :func:`run` (which times only ``filter_batch`` on a prebuilt
+    batch), every path here is timed *end to end from its wire input*,
+    so the host-parse seam the device path removes is inside the
+    measurement.  One row per (ingest, n_queries).
+    """
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=nodes_per_doc,
+                      seed=seed)
+    payloads = [encode_bytes(doc, text_fill=TEXT_FILL) for doc in docs]
+    mb = sum(len(p) for p in payloads) / 1e6
+    sym = d.symbol_value_table()
+
+    rows = []
+    for nq in query_counts:
+        qs = gen_profiles(dtd, n=nq, length=path_len, seed=seed + path_len)
+        nfa = compile_queries(qs, d, shared=True)
+        eng = engines.create(engine, nfa, dictionary=d)
+
+        def path_events():
+            return eng.filter_batch(EventBatch.from_streams(docs, bucket=128))
+
+        def path_bytes_host():
+            decoded = [decode_bytes(p, sym) for p in payloads]
+            return eng.filter_batch(
+                EventBatch.from_streams(decoded, bucket=128))
+
+        def path_bytes_device():
+            return eng.filter_bytes(
+                ByteBatch.from_buffers(payloads, bucket=1024))
+
+        fns = {"events": path_events, "bytes-host": path_bytes_host,
+               "bytes-device": path_bytes_device}
+        for name in ingest_paths:
+            fn = fns[name]
+            fn()  # warmup: device paths compile once per shape
+            t = _time(fn, repeat=repeat)
+            rows.append(
+                {"bench": "ingest_throughput", "ingest": name,
+                 "engine": engine, "path_len": path_len, "n_queries": nq,
+                 "n_docs": n_docs, "doc_mb": round(mb, 3),
+                 "docs_per_s": round(n_docs / t, 2),
+                 "mb_s": round(mb / t, 3)})
+        base = next((r["mb_s"] for r in rows
+                     if r["n_queries"] == nq and r["ingest"] == "events"),
+                    None)
+        if base:
+            for r in rows:
+                if r["n_queries"] == nq and r["ingest"] != "events":
+                    r["vs_events"] = round(r["mb_s"] / base, 2)
+    return rows
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--engine", action="append", default=None,
@@ -117,7 +186,22 @@ def main() -> None:
     ap.add_argument("--nodes", type=int, default=400)
     ap.add_argument("--repeat", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ingest", action="append", default=None,
+                    choices=list(INGEST_PATHS),
+                    help="repeatable; measure parse cost end-to-end over "
+                         "these ingest paths instead of the Fig-9 sweep")
     args = ap.parse_args()
+    import json
+    if args.ingest:
+        rows = run_ingest(
+            query_counts=tuple(args.queries or (64, 256)),
+            path_len=(args.path_lengths or [4])[0],
+            n_docs=args.docs, nodes_per_doc=args.nodes, seed=args.seed,
+            ingest_paths=tuple(args.ingest),
+            engine=(args.engine or ["streaming"])[0], repeat=args.repeat)
+        for r in rows:
+            print(json.dumps(r))
+        return
     kw = dict(n_docs=args.docs, nodes_per_doc=args.nodes, seed=args.seed,
               engines_to_run=tuple(args.engine or DEFAULT_ENGINES),
               repeat=args.repeat)
@@ -125,7 +209,6 @@ def main() -> None:
         kw["query_counts"] = tuple(args.queries)
     if args.path_lengths:
         kw["path_lengths"] = tuple(args.path_lengths)
-    import json
     for r in run(**kw):
         print(json.dumps(r))
 

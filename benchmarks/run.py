@@ -5,6 +5,9 @@
 Sections:
   fig8   — area model, 4 scenarios (paper Fig 8)
   fig9   — filtering throughput vs YFilter baseline (paper Fig 9)
+  ingest — ingest_throughput: parse cost end-to-end over the three
+           ingestion paths (events / bytes-host / bytes-device — the
+           paper's same-chip parser+filter vs host parsing)
   twig   — twig-pattern filtering cost structure (paper §5 extension)
   roofline — 3-term roofline per (arch × shape) from dry-run artifacts
              (only if launch/dryrun.py results exist; see EXPERIMENTS.md)
@@ -28,15 +31,16 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (slower)")
     ap.add_argument("--only", default=None,
-                    help="run a single section: fig8|fig9|twig|roofline")
+                    help="run a single section: "
+                         "fig8|fig9|ingest|twig|roofline")
     ap.add_argument("--json", nargs="?", const="BENCH_filtering.json",
                     default=None, metavar="PATH",
                     help="also write rows to a JSON file "
                          "(default: BENCH_filtering.json)")
     args = ap.parse_args()
 
-    sections = [args.only] if args.only else ["fig8", "fig9", "twig",
-                                              "roofline"]
+    sections = [args.only] if args.only else ["fig8", "fig9", "ingest",
+                                              "twig", "roofline"]
     rows = []
 
     if "fig8" in sections:
@@ -52,6 +56,15 @@ def main() -> None:
             rows += bench_throughput.run(
                 query_counts=(16, 64, 256), path_lengths=(2, 4),
                 n_docs=8, nodes_per_doc=200)
+
+    if "ingest" in sections:
+        from benchmarks import bench_throughput
+        if args.full:
+            rows += bench_throughput.run_ingest(n_docs=32,
+                                                nodes_per_doc=2000)
+        else:
+            rows += bench_throughput.run_ingest(
+                query_counts=(16, 64), n_docs=8, nodes_per_doc=200)
 
     if "twig" in sections:
         from benchmarks import bench_twig

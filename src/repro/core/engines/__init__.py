@@ -10,6 +10,9 @@ Every engine implements the same two-method interface
 * ``filter_batch(EventBatch) -> FilterResult`` — filter a padded
   ``(B, N)`` document batch (:class:`repro.core.events.EventBatch`, the
   *only* document format engines see) into a ``(B, Q)`` result.
+* ``filter_bytes(ByteBatch) -> FilterResult`` — same verdict from *raw
+  wire bytes*, parsed on device (:mod:`repro.kernels.parse`); the
+  streaming engine fuses parse+filter into one jitted program.
 
 Engines self-register under a string key, so construction is uniform::
 

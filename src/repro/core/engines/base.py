@@ -40,7 +40,7 @@ from typing import Any, ClassVar, Mapping
 
 import jax
 
-from ..events import EventBatch, EventStream
+from ..events import ByteBatch, EventBatch, EventStream
 from ..nfa import NFA
 from .result import FilterResult
 
@@ -134,6 +134,31 @@ class FilterEngine(abc.ABC):
     @abc.abstractmethod
     def filter_batch(self, batch: EventBatch) -> FilterResult:
         """Filter a document batch; returns a ``(B, Q)`` result."""
+
+    # ------------------------------------------------------ byte ingestion
+    def filter_bytes(self, bb: ByteBatch, *,
+                     bucket: int = 128) -> FilterResult:
+        """Raw wire bytes → ``(B, Q)`` verdict, parsed on device.
+
+        The ingestion seam of the paper's same-chip architecture: the
+        batch is parsed by :func:`repro.kernels.parse.parse_batch` (no
+        per-event host Python) and fed to :meth:`filter_batch` as a
+        device-resident :class:`~repro.core.events.EventBatch`.  Device
+        engines that can fuse parse+filter into one compiled program
+        override this (see ``StreamingEngine.filter_bytes``).
+
+        The parse honours the engine's own ``max_depth`` bound when it
+        has one and *raises* on documents nested deeper (parse_batch's
+        depth check) — never a silently clipped verdict.  ``bucket``
+        bounds the compiled event-axis shapes (callers with their own
+        bucketing policy — e.g. ``FilterStage`` — pass theirs through).
+        """
+        from ...kernels.parse import DEFAULT_MAX_DEPTH, parse_batch
+
+        max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
+        return self.filter_batch(
+            parse_batch(bb, n_events=bb.event_bound(bucket=bucket),
+                        max_depth=max_depth))
 
     # --------------------------------------------------------- conveniences
     def filter_document(self, ev: EventStream) -> FilterResult:

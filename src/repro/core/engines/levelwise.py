@@ -181,6 +181,7 @@ def levelize_from_arrays(kind: np.ndarray, tag: np.ndarray,
 
 def _leveldocs_of_batch(batch) -> list[LevelDoc]:
     """One LevelDoc per document, from the batch's precomputed arrays."""
+    batch = batch.to_host()  # depth-major bucketing is a host (numpy) pass
     out = []
     for i in range(batch.batch_size):
         n = int(batch.n_events[i])

@@ -101,4 +101,4 @@ class OracleEngine(base.FilterEngine):
 
     def filter_batch(self, batch: EventBatch) -> FilterResult:
         return FilterResult.stack(
-            [self.filter_document(ev) for ev in batch.streams()])
+            [self.filter_document(ev) for ev in batch.to_host().streams()])

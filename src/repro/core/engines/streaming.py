@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..events import CLOSE, OPEN, EventBatch, EventStream
+from ..dictionary import OPEN_NBYTES
+from ..events import CLOSE, OPEN, ByteBatch, EventBatch, EventStream
 from ..nfa import NFA, WILD_TAG, pad_states
 from . import base
 from .result import NO_MATCH, FilterResult
@@ -104,6 +105,30 @@ def _run_batch(plan: base.FilterPlan, kind: jax.Array, tag: jax.Array):
     return jax.vmap(fn, in_axes=(0, 0))(kind, tag)
 
 
+@functools.partial(jax.jit, static_argnames=("n_events",))
+def _run_bytes_batch(plan: base.FilterPlan, data: jax.Array,
+                     n_events: int | None = None):
+    """Fused ingest+filter: (B, L) raw wire bytes → (B, Q) verdicts as ONE
+    compiled program — the paper's same-chip parser+filter (§1).
+
+    The one byte→event pipeline (:func:`repro.kernels.parse.parse_arrays`:
+    batched pre-decode + cumsum compaction) and the event-stream state
+    scan inline into a single XLA computation; the structure outputs this
+    engine doesn't read (depth/parent scans) are dead-code-eliminated.
+    Between the byte tensor going in and the verdict coming out there is
+    no host transfer and no per-event Python.  ``n_events`` is the static
+    compacted length (callers pass the tight ``ByteBatch.event_bound``;
+    defaults to the worst case L/4).
+    """
+    from repro.kernels import parse as parse_mod
+
+    if n_events is None:
+        n_events = max(1, data.shape[1] // OPEN_NBYTES)
+    kind, tag, _depth, _parent, _valid, _n = parse_mod.parse_arrays(
+        data, n_events=n_events)
+    return _run_batch(plan, kind.astype(jnp.int32), tag)
+
+
 @base.register("streaming")
 class StreamingEngine(base.FilterEngine):
     """Public API: compile once (``plan``), filter many documents."""
@@ -146,6 +171,14 @@ class StreamingEngine(base.FilterEngine):
             self.plan_,
             jnp.asarray(batch.kind.astype(np.int32)),
             jnp.asarray(batch.tag_id))
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    def filter_bytes(self, bb: ByteBatch, *,
+                     bucket: int = 128) -> FilterResult:
+        """Bytes → verdict as one jitted program (no intermediate
+        EventBatch, no host round-trip) — see :func:`_run_bytes_batch`."""
+        matched, first = _run_bytes_batch(self.plan_, jnp.asarray(bb.data),
+                                          bb.event_bound(bucket=bucket))
         return FilterResult(np.asarray(matched), np.asarray(first))
 
     def filter_documents_batched(self, kind: np.ndarray,

@@ -92,4 +92,4 @@ class YFilterEngine(base.FilterEngine):
 
     def filter_batch(self, batch: EventBatch) -> FilterResult:
         return FilterResult.stack(
-            [self.filter_document(ev) for ev in batch.streams()])
+            [self.filter_document(ev) for ev in batch.to_host().streams()])

@@ -35,6 +35,21 @@ from .dictionary import (
 OPEN, CLOSE, PAD = 0, 1, 2
 
 
+def _as_field(x, dtype):
+    """Coerce a batch field without forcing device arrays to host.
+
+    numpy input (or anything list-like) becomes a numpy array of the
+    requested dtype; jax arrays keep their placement — ``EventBatch`` is
+    duck-typed over the two so device-parsed batches flow to engines
+    with no host round-trip.
+    """
+    if isinstance(x, np.ndarray):
+        return np.asarray(x, dtype)
+    if hasattr(x, "astype") and hasattr(x, "shape") and hasattr(x, "dtype"):
+        return x if x.dtype == np.dtype(dtype) else x.astype(dtype)
+    return np.asarray(x, dtype)
+
+
 @dataclass
 class EventStream:
     """Structure-of-arrays event stream for one document."""
@@ -154,6 +169,12 @@ class EventBatch:
     and matscan engines scan); ``depth``/``parent`` virtualize the
     document stack (what the levelwise engines bucket by); ``valid`` masks
     the padding tail; ``n_events[b]`` is the true length of document b.
+
+    Fields are duck-typed over numpy and jax arrays: a batch built on the
+    host (:meth:`from_streams`) carries numpy, a batch parsed on device
+    (:func:`repro.kernels.parse.parse_batch`) carries jax arrays and
+    stays resident — device engines consume it with no host round-trip,
+    host engines call :meth:`to_host` first.
     """
 
     kind: np.ndarray      # (B, N) int8  — OPEN / CLOSE / PAD
@@ -164,16 +185,29 @@ class EventBatch:
     n_events: np.ndarray  # (B,)   int32 — true per-document lengths
 
     def __post_init__(self) -> None:
-        self.kind = np.asarray(self.kind, dtype=np.int8)
-        self.tag_id = np.asarray(self.tag_id, dtype=np.int32)
-        self.depth = np.asarray(self.depth, dtype=np.int32)
-        self.parent = np.asarray(self.parent, dtype=np.int32)
-        self.valid = np.asarray(self.valid, dtype=bool)
-        self.n_events = np.asarray(self.n_events, dtype=np.int32)
+        self.kind = _as_field(self.kind, np.int8)
+        self.tag_id = _as_field(self.tag_id, np.int32)
+        self.depth = _as_field(self.depth, np.int32)
+        self.parent = _as_field(self.parent, np.int32)
+        self.valid = _as_field(self.valid, bool)
+        self.n_events = _as_field(self.n_events, np.int32)
         assert self.kind.ndim == 2
         assert self.kind.shape == self.tag_id.shape == self.depth.shape \
             == self.parent.shape == self.valid.shape
         assert self.n_events.shape == (self.kind.shape[0],)
+
+    @property
+    def is_device(self) -> bool:
+        """True when fields are device (jax) arrays, not numpy."""
+        return not isinstance(self.kind, np.ndarray)
+
+    def to_host(self) -> "EventBatch":
+        """Materialize on the host (no-op for numpy-backed batches)."""
+        if not self.is_device:
+            return self
+        return EventBatch(*(np.asarray(a) for a in
+                            (self.kind, self.tag_id, self.depth,
+                             self.parent, self.valid, self.n_events)))
 
     # ----------------------------------------------------------- properties
     @property
@@ -248,10 +282,113 @@ class EventBatch:
     # ------------------------------------------------------------- metrics
     def nbytes(self, text_fill: int = 0) -> np.ndarray:
         """(B,) byte sizes in the paper's wire format (for MB/s stats)."""
-        n_open = (self.kind == OPEN).sum(axis=1)
-        n_close = (self.kind == CLOSE).sum(axis=1)
+        kind = np.asarray(self.kind)  # host metric; device batches transfer
+        n_open = (kind == OPEN).sum(axis=1)
+        n_close = (kind == CLOSE).sum(axis=1)
         return (n_open * (OPEN_NBYTES + text_fill)
                 + n_close * CLOSE_NBYTES).astype(np.int64)
+
+
+# ------------------------------------------------------------- byte batches
+@dataclass
+class ByteBatch:
+    """Padded ``(B, L)`` uint8 batch of raw paper-format byte streams.
+
+    The ingestion mirror of :class:`EventBatch`: where ``EventBatch`` is
+    the *parsed* document format every engine consumes, ``ByteBatch`` is
+    the *wire* format the device parser consumes —
+    :func:`repro.kernels.parse.parse_batch` turns one into the other
+    entirely on device (the paper's same-chip parser+filter, §1/§3.4).
+
+    ``data`` is zero-padded: byte 0 is neither ``<`` nor a dictionary
+    symbol, so padding decodes to no events by construction.  ``bucket``
+    rounds ``L`` up to a boundary (see :func:`bucket_length`) to bound
+    the number of compiled shapes, exactly like ``EventBatch`` padding.
+    """
+
+    data: np.ndarray     # (B, L) uint8 — raw bytes, zero-padded
+    n_bytes: np.ndarray  # (B,)   int32 — true per-document byte counts
+
+    def __post_init__(self) -> None:
+        self.data = _as_field(self.data, np.uint8)
+        self.n_bytes = _as_field(self.n_bytes, np.int32)
+        assert self.data.ndim == 2
+        assert self.n_bytes.shape == (self.data.shape[0],)
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def length(self) -> int:
+        return int(self.data.shape[1])
+
+    def __len__(self) -> int:
+        return self.batch_size
+
+    @property
+    def max_events(self) -> int:
+        """Static upper bound on events per document.
+
+        The fixed-width codec (§3.1) guarantees every event occupies at
+        least ``OPEN_NBYTES`` bytes, so ``L // OPEN_NBYTES`` bounds the
+        compacted event count — this is what makes the device parser's
+        output shape static.
+        """
+        return max(1, self.length // OPEN_NBYTES)
+
+    def event_bound(self, bucket: int | None = None) -> int:
+        """Tight static bound on events per document: the max per-doc
+        count of ``<`` markers (every event starts with one).
+
+        One vectorized host pass over the byte tensor — batch *metadata*,
+        like the length scan in :meth:`from_buffers`; the per-event
+        validate/compact work stays on device.  Much tighter than
+        :attr:`max_events` when documents carry text content, so the
+        filter scan does not step through phantom padding events.
+        """
+        data = np.asarray(self.data)
+        n = int((data == LT).sum(axis=1).max()) if data.size else 1
+        return bucket_length(max(1, n), bucket)
+
+    # ----------------------------------------------------------- building
+    @classmethod
+    def from_buffers(cls, bufs: Sequence[bytes],
+                     bucket: int | None = None) -> "ByteBatch":
+        """Stack raw byte payloads, zero-padded to a bucketed length."""
+        if len(bufs) == 0:
+            raise ValueError("empty batch")
+        n = bucket_length(max((len(b) for b in bufs), default=1), bucket)
+        data = np.zeros((len(bufs), n), dtype=np.uint8)
+        lengths = np.zeros(len(bufs), dtype=np.int32)
+        for i, buf in enumerate(bufs):
+            arr = np.frombuffer(buf, dtype=np.uint8)
+            data[i, : len(arr)] = arr
+            lengths[i] = len(arr)
+        return cls(data, lengths)
+
+    @classmethod
+    def from_streams(cls, docs: Sequence["EventStream"], text_fill: int = 0,
+                     bucket: int | None = None) -> "ByteBatch":
+        """Serialize event streams to the wire format and stack."""
+        return cls.from_buffers(
+            [encode_bytes(d, text_fill=text_fill) for d in docs],
+            bucket=bucket)
+
+    # ----------------------------------------------------------- recovery
+    def buffer(self, i: int) -> bytes:
+        """Document ``i`` as its un-padded byte string."""
+        data = np.asarray(self.data)
+        return bytes(data[i, : int(self.n_bytes[i])])
+
+    def buffers(self) -> Iterator[bytes]:
+        for i in range(self.batch_size):
+            yield self.buffer(i)
+
+    # ------------------------------------------------------------ metrics
+    def nbytes_total(self) -> int:
+        """True payload bytes across the batch (MB/s accounting)."""
+        return int(np.asarray(self.n_bytes).sum())
 
 
 # ----------------------------------------------------------------- tree view
@@ -314,6 +451,12 @@ def decode_bytes(buf: bytes, sym_table: np.ndarray) -> EventStream:
     classify each byte position, then decode the two symbol bytes that follow
     each ``<`` / ``</`` marker.  Fixed-length tags (the paper's dictionary
     replacement) are what make this embarrassingly parallel.
+
+    A ``<`` / ``</`` marker whose symbol bytes are not both in the
+    64-symbol alphabet is *rejected* (no event emitted) — identical to
+    the kernel's ``ok = (v0 >= 0) & (v1 >= 0)`` validation in
+    :mod:`repro.kernels.predecode`, so host and device agree on
+    malformed input.
     """
     b = np.frombuffer(buf, dtype=np.uint8)
     n = b.shape[0]
@@ -327,12 +470,13 @@ def decode_bytes(buf: bytes, sym_table: np.ndarray) -> EventStream:
     idx = np.arange(n)
     s0 = np.where(is_close, idx + 2, idx + 1)
     s1 = s0 + 1
-    s0 = np.clip(s0, 0, n - 1)
-    s1 = np.clip(s1, 0, n - 1)
-    v0 = sym_table[b[s0]]
-    v1 = sym_table[b[s1]]
+    # the kernel shifts zeros in past the end; byte 0 is not in the
+    # alphabet, so out-of-range symbol positions are invalid there too
+    v0 = np.where(s0 < n, sym_table[b[np.clip(s0, 0, n - 1)]], -1)
+    v1 = np.where(s1 < n, sym_table[b[np.clip(s1, 0, n - 1)]], -1)
+    ok = (v0 >= 0) & (v1 >= 0)
     tag = (v0 << 6) | v1
-    keep = is_open | is_close
+    keep = (is_open | is_close) & ok
     kind = np.where(is_close[keep], CLOSE, OPEN).astype(np.int8)
     return EventStream(kind, tag[keep].astype(np.int32))
 

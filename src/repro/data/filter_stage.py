@@ -17,6 +17,12 @@ batched ``(B, Q)`` :class:`~repro.core.engines.FilterResult`.  Batches
 are padded to bucket boundaries so the number of compiled shapes stays
 bounded, and ``stage.stats`` accumulates per-batch throughput and
 selectivity.
+
+Two ingest paths feed the same router: :meth:`FilterStage.route` takes
+pre-parsed event streams (host parse), :meth:`FilterStage.route_bytes`
+takes raw paper-format byte payloads and parses them *on device*
+(:func:`repro.kernels.parse.parse_batch` / the engine's fused
+``filter_bytes``) — the paper's same-chip parser+filter dataflow.
 """
 from __future__ import annotations
 
@@ -29,7 +35,8 @@ import numpy as np
 from ..core import engines
 from ..core.dictionary import TagDictionary
 from ..core.engines import FilterResult
-from ..core.events import EventBatch, EventStream, event_stream_nbytes
+from ..core.events import (ByteBatch, EventBatch, EventStream,
+                           event_stream_nbytes)
 from ..core.nfa import NFA, compile_queries
 from ..core.xpath import Query, parse
 
@@ -55,7 +62,8 @@ class FilterStage:
 
     ``bucket`` controls padded-batch bucketing: each batch's event axis is
     padded to the next multiple, capping the number of distinct shapes
-    the device engines compile for.
+    the device engines compile for; ``byte_bucket`` does the same for the
+    raw-byte axis of the device-ingest path (:meth:`route_bytes`).
     """
 
     profiles: Sequence[Query]
@@ -65,6 +73,7 @@ class FilterStage:
     keep_unmatched: bool = False
     batch_size: int = 32
     bucket: int = 128
+    byte_bucket: int = 1024
     shard_of_profile: np.ndarray = field(default=None)  # type: ignore
     stats: dict = field(default_factory=dict)
 
@@ -93,12 +102,32 @@ class FilterStage:
         res = self._eng.filter_batch(batch)
         dt = time.perf_counter() - t0
         if record:
-            self.stats["batches"] += 1
-            self.stats["docs"] += batch.batch_size
-            self.stats["bytes"] += int(batch.nbytes(TEXT_FILL).sum())
-            self.stats["seconds"] += dt
-            self.stats["pair_matches"] += int(res.matched.sum())
-            self.stats["pairs"] += res.matched.size
+            self._record(res, batch.batch_size,
+                         int(batch.nbytes(TEXT_FILL).sum()), dt)
+        return res
+
+    def _record(self, res: FilterResult, n_docs: int, n_bytes: int,
+                dt: float) -> None:
+        """One accounting path for both ingest forms, so throughput()
+        stays comparable between them."""
+        self.stats["batches"] += 1
+        self.stats["docs"] += n_docs
+        self.stats["bytes"] += n_bytes
+        self.stats["seconds"] += dt
+        self.stats["pair_matches"] += int(res.matched.sum())
+        self.stats["pairs"] += res.matched.size
+
+    def _filter_bytebatch(self, bufs: list[bytes],
+                          record: bool = True) -> FilterResult:
+        """Device-ingest batched path: raw wire bytes in, ``(B, Q)``
+        verdicts out, parsed on device by ``engine.filter_bytes`` — no
+        per-event host Python between payload and verdict."""
+        bb = ByteBatch.from_buffers(bufs, bucket=self.byte_bucket)
+        t0 = time.perf_counter()
+        res = self._eng.filter_bytes(bb, bucket=self.bucket)
+        dt = time.perf_counter() - t0
+        if record:
+            self._record(res, bb.batch_size, bb.nbytes_total(), dt)
         return res
 
     def route(self, docs: Iterable[EventStream]) -> Iterator[list[RoutedDocument]]:
@@ -114,13 +143,38 @@ class FilterStage:
         if batch:
             yield self._route_batch(batch, base)
 
+    def route_bytes(self, payloads: Iterable[bytes]
+                    ) -> Iterator[list[RoutedDocument]]:
+        """Route raw paper-format byte payloads (device-ingest twin of
+        :meth:`route`): each batch is parsed *and* filtered on device,
+        then fanned out to shards exactly like the event path."""
+        batch: list[bytes] = []
+        base = 0
+        for buf in payloads:
+            batch.append(buf)
+            if len(batch) == self.batch_size:
+                yield self._route_byte_batch(batch, base)
+                base += len(batch)
+                batch = []
+        if batch:
+            yield self._route_byte_batch(batch, base)
+
     def _route_batch(self, docs: list[EventStream],
                      base: int) -> list[RoutedDocument]:
         results = self._filter_batch(docs)
+        return self._fan_out(results, [event_stream_nbytes(d) for d in docs],
+                             base)
+
+    def _route_byte_batch(self, bufs: list[bytes],
+                          base: int) -> list[RoutedDocument]:
+        results = self._filter_bytebatch(bufs)
+        return self._fan_out(results, [len(b) for b in bufs], base)
+
+    def _fan_out(self, results: FilterResult, nbytes: list[int],
+                 base: int) -> list[RoutedDocument]:
         out: list[RoutedDocument] = []
-        for i, doc in enumerate(docs):
+        for i, nb in enumerate(nbytes):
             qids = results[i].matching_queries()
-            nb = event_stream_nbytes(doc)
             if len(qids) == 0:
                 if self.keep_unmatched:
                     out.append(RoutedDocument(base + i, qids, 0, nb))

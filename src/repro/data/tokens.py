@@ -55,17 +55,45 @@ class XMLBytePipeline:
     Tokens are raw bytes of the paper-format serialized documents (vocab
     256), padded/packed to seq_len.  Demonstrates the paper's filter as
     the ingest stage of LM training (examples/train_lm.py --data-filter).
+
+    Input is either parsed event streams (``docs``, serialized here) or
+    raw wire-byte payloads (``payloads``) — the latter is what
+    :meth:`from_filtered_bytes` produces: payloads routed through
+    ``FilterStage.route_bytes`` (parsed *and* filtered on device) with
+    only the matched documents kept, so the whole ingest side of the LM
+    pipeline is the paper's same-chip dataflow.
     """
 
-    docs: list[EventStream]
+    docs: list[EventStream] | None
     batch: int
     seq_len: int
     text_fill: int = 4
+    payloads: list[bytes] | None = None
 
     def __post_init__(self) -> None:
-        self._buf = np.concatenate([
-            np.frombuffer(encode_bytes(d, text_fill=self.text_fill), np.uint8)
-            for d in self.docs]).astype(np.int32)
+        if (self.docs is None) == (self.payloads is None):
+            raise ValueError("pass exactly one of docs= or payloads=")
+        bufs = (self.payloads if self.payloads is not None else
+                [encode_bytes(d, text_fill=self.text_fill)
+                 for d in self.docs])
+        self._buf = np.concatenate(
+            [np.frombuffer(b, np.uint8) for b in bufs]).astype(np.int32)
+
+    @classmethod
+    def from_filtered_bytes(cls, payloads: list[bytes], stage, batch: int,
+                            seq_len: int) -> "XMLBytePipeline":
+        """Device-filter raw payloads, keep the matched ones, tokenize.
+
+        ``stage`` is a :class:`~repro.data.filter_stage.FilterStage`;
+        payloads that match no standing profile are dropped (unless the
+        stage keeps unmatched docs), exactly like pub-sub delivery.
+        """
+        keep = sorted({r.doc_index for routed in stage.route_bytes(payloads)
+                       for r in routed})
+        kept = [payloads[i] for i in keep]
+        if not kept:
+            raise ValueError("no payloads matched the standing profiles")
+        return cls(docs=None, batch=batch, seq_len=seq_len, payloads=kept)
 
     def batch_at(self, step: int) -> dict[str, np.ndarray]:
         need = self.batch * (self.seq_len + 1)

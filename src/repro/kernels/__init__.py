@@ -1,8 +1,15 @@
 """Pallas TPU kernels for the filtering hot spots.
 
-* :mod:`.predecode`      -- byte->event character pre-decode (paper 3.4)
-* :mod:`.nfa_transition` -- levelwise NFA transition (2 matmuls + mask)
-* :mod:`.stream_filter`  -- FPGA-analogue streaming filter, VMEM stack
+* :mod:`.predecode`      -- byte->event character pre-decode (paper 3.4),
+                            batched; host oracles: ref.predecode,
+                            core.events.decode_bytes
+* :mod:`.parse`          -- device-resident byte->EventBatch parsing
+                            (compaction, depth scan, parent stacks);
+                            host oracle: EventBatch.from_streams
+* :mod:`.nfa_transition` -- levelwise NFA transition (2 matmuls + mask);
+                            host oracle: ref.nfa_transition
+* :mod:`.stream_filter`  -- FPGA-analogue streaming filter, VMEM stack;
+                            host oracle: ref.stream_filter
 * :mod:`.ops`            -- jit'd public wrappers (+ interpret switch)
 * :mod:`.ref`            -- pure-jnp oracles (tests assert allclose)
 

@@ -11,6 +11,10 @@ parent_rows (full reduction dim for the P matmul — the NFA trie's parent
 pointers may cross column tiles) and produces a (bw, bs) output tile.
 VMEM working set per program ≈ bw·S + S·bs + T·bs floats; block sizes are
 chosen so it stays under ~4 MB at S up to 8192 states.
+
+Host oracle: :func:`repro.kernels.ref.nfa_transition` (pure jnp, same
+signature); tests/test_kernels.py asserts exact agreement across
+shape/tile sweeps.
 """
 from __future__ import annotations
 

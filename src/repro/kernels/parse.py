@@ -1,0 +1,182 @@
+"""Device-resident byte→event parsing: the paper's same-chip parser.
+
+The paper's central architectural claim (§1, §3.4) is that parser and
+filter share one chip, so a document goes wire-bytes → verdict with no
+host↔device hop.  This module is that parser for the TPU: a batch of raw
+paper-format byte streams (:class:`repro.core.events.ByteBatch`) becomes
+a fully structured :class:`repro.core.events.EventBatch` with *no
+per-event host Python* —
+
+1. **pre-decode** — every byte position classified in parallel into
+   (kind, tag) by the batched Pallas kernel
+   :func:`repro.kernels.predecode.predecode_pallas` (§3.4's character
+   pre-decoder; possible because dictionary tags are fixed-length, §3.1);
+2. **compaction** — the sparse per-position hits are packed into a dense
+   event list by cumsum indexing (a masked stream compaction: position
+   of event *i* = number of hits before it);
+3. **depth** — a ``+1/-1`` prefix scan over open/close events, floored
+   at zero exactly like a pop-on-empty stack (running sum minus its
+   clipped running minimum);
+4. **parent pointers** — the paper's §3.3 per-state stacks, vectorized:
+   an associative scan carries "last open event seen at each depth", and
+   every open event reads slot ``depth-1`` — stack virtualization with
+   ``O(log N)`` depth instead of a sequential walk.
+
+Host oracles: :meth:`repro.core.events.EventStream.structure` for
+(depth, parent) and :meth:`repro.core.events.EventBatch.from_streams`
+for the whole pipeline — ``parse_batch`` is bit-identical to it on every
+well-formed corpus (tests/test_ingest.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.events import EventBatch, ByteBatch, bucket_length
+from . import ref
+from .predecode import predecode_pallas
+
+#: depth bound for the vectorized parent-pointer stacks (matches the
+#: streaming engine's default bounded stack).  ``parse_batch`` *raises*
+#: on deeper documents by default (``check_depth=True``) — pass a larger
+#: ``max_depth`` for deep corpora; only ``check_depth=False`` silently
+#: clips parents past the bound.
+DEFAULT_MAX_DEPTH = 64
+
+
+def compact_events(kind_pos: jax.Array, tag_pos: jax.Array,
+                   n_events: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Masked stream compaction: per-position hits → dense event list.
+
+    ``kind_pos``/``tag_pos`` are per *byte position* (PAD where no tag
+    starts); the result is the first ``n_events`` true events in order,
+    padded with PAD/-1.  The destination of each hit is the cumulative
+    count of hits before it — pure cumsum indexing, no host loop.
+    Positions beyond ``n_events`` (impossible when ``n_events ≥ L //
+    OPEN_NBYTES``) are dropped.
+    """
+    keep = kind_pos != ref.PAD
+    pos = jnp.cumsum(keep) - 1
+    idx = jnp.where(keep, pos, n_events)  # n_events ⇒ out of range ⇒ drop
+    kind = jnp.full((n_events,), ref.PAD, jnp.int8)
+    kind = kind.at[idx].set(kind_pos.astype(jnp.int8), mode="drop")
+    tag = jnp.full((n_events,), -1, jnp.int32)
+    tag = tag.at[idx].set(tag_pos, mode="drop")
+    # clamp so a too-small n_events yields a *consistent* truncated batch
+    # (n_events ≤ length) rather than a count the arrays don't contain
+    n = jnp.minimum(keep.sum(), n_events).astype(jnp.int32)
+    return kind, tag, n
+
+
+def structure_scan(kind: jax.Array, max_depth: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Per-event (depth, parent) from the event-kind stream, on device.
+
+    Host oracle: :meth:`repro.core.events.EventStream.structure` (the
+    sequential stack walk).  Depth is the ``+1/-1`` running sum floored
+    at zero (``s - min(cummin(s), 0)`` reproduces pop-on-empty).  Parents
+    come from an associative scan over "last open event per depth"
+    vectors — the stack, virtualized: a later open at depth *d* shadows
+    any closed earlier one, so no pop/invalidate step is needed.
+    """
+    n = kind.shape[0]
+    is_open = kind == ref.OPEN
+    is_close = kind == ref.CLOSE
+    delta = jnp.where(is_open, 1, jnp.where(is_close, -1, 0)).astype(jnp.int32)
+    s = jnp.cumsum(delta)
+    depth = (s - jnp.minimum(jax.lax.cummin(s), 0)).astype(jnp.int32)
+
+    d_slots = max_depth + 2
+    d_pub = jnp.clip(depth, 0, d_slots - 1)
+    levels = jnp.arange(d_slots, dtype=jnp.int32)[None, :]
+    event_idx = jnp.arange(n, dtype=jnp.int32)[:, None]
+    pub = jnp.where(is_open[:, None] & (levels == d_pub[:, None]),
+                    event_idx, -1)
+    last_open_at = jax.lax.associative_scan(
+        lambda a, b: jnp.where(b >= 0, b, a), pub, axis=0)
+    lookup = jnp.clip(d_pub - 1, 0, d_slots - 1)
+    parent = jnp.where(
+        is_open,
+        last_open_at[jnp.arange(n), lookup],
+        -1).astype(jnp.int32)
+    return depth, parent
+
+
+def _predecode(data: jax.Array, use_kernel: bool | None,
+               interpret: bool | None) -> tuple[jax.Array, jax.Array]:
+    """Kernel selection for the pre-decode stage.
+
+    Follows the package convention (cf. ``LevelwiseEngine(use_kernel=)``
+    and :func:`repro.kernels.interpret_default`): the Pallas kernel on a
+    real TPU, the bit-identical pure-jnp oracle (XLA-compiled) elsewhere
+    — the Pallas *interpreter* is a correctness tool, not a fast path.
+    ``use_kernel=True`` forces the kernel (tests pair it with
+    ``interpret=True`` for interpreter coverage).
+    """
+    from . import interpret_default
+
+    if use_kernel is None:
+        use_kernel = not interpret_default()
+    if use_kernel:
+        return predecode_pallas(data, interpret=interpret)
+    return ref.predecode(data)
+
+
+@functools.partial(jax.jit, static_argnames=("n_events", "max_depth",
+                                             "use_kernel", "interpret"))
+def parse_arrays(data: jax.Array, *, n_events: int,
+                 max_depth: int = DEFAULT_MAX_DEPTH,
+                 use_kernel: bool | None = None,
+                 interpret: bool | None = None):
+    """jit core of :func:`parse_batch`: (B, L) bytes → EventBatch fields.
+
+    One compiled program per (B, L, n_events) shape: batched pre-decode
+    over all documents at once (Pallas kernel or its jnp oracle — see
+    :func:`_predecode`), then vmapped compaction and structure scans.
+    Returns ``(kind, tag, depth, parent, valid, n_per_doc)`` as device
+    arrays.
+    """
+    kind_pos, tag_pos = _predecode(data, use_kernel, interpret)
+    kind, tag, n_per_doc = jax.vmap(
+        lambda k, t: compact_events(k, t, n_events))(kind_pos, tag_pos)
+    depth, parent = jax.vmap(
+        lambda k: structure_scan(k, max_depth))(kind)
+    valid = kind != ref.PAD
+    return kind, tag, depth, parent, valid, n_per_doc
+
+
+def parse_batch(bb: ByteBatch, *, n_events: int | None = None,
+                bucket: int | None = None,
+                max_depth: int = DEFAULT_MAX_DEPTH,
+                use_kernel: bool | None = None,
+                interpret: bool | None = None,
+                check_depth: bool = True) -> EventBatch:
+    """Device parse: :class:`ByteBatch` → device-resident `EventBatch`.
+
+    The returned batch holds jax arrays (``batch.is_device``) — device
+    engines consume it with no host round-trip; host engines call
+    ``batch.to_host()``.  ``n_events`` defaults to the static bound
+    ``bb.max_events`` (optionally bucketed); pass the event length of a
+    host-built batch to compare the two paths shape-for-shape.
+
+    Parent pointers are exact only up to ``max_depth``;
+    ``check_depth=True`` (default) verifies the batch against the bound
+    and raises instead of silently clipping — one O(1) scalar sync, not
+    a per-event host pass.  Pure device pipelines that guarantee the
+    bound can pass ``check_depth=False``.
+    """
+    if n_events is None:
+        n_events = bucket_length(bb.max_events, bucket)
+    kind, tag, depth, parent, valid, n_per_doc = parse_arrays(
+        jnp.asarray(bb.data), n_events=n_events, max_depth=max_depth,
+        use_kernel=use_kernel, interpret=interpret)
+    if check_depth:
+        dmax = int(jax.device_get(depth.max()))
+        if dmax > max_depth:
+            raise ValueError(
+                f"document nesting depth {dmax} exceeds max_depth="
+                f"{max_depth}; re-parse with parse_batch(..., "
+                f"max_depth={dmax}) or larger")
+    return EventBatch(kind, tag, depth, parent, valid, n_per_doc)

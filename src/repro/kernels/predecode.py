@@ -9,7 +9,13 @@ gathers, no tables.
 
 The wrapper pre-shifts the byte stream by 1..3 positions so each grid
 block is self-contained (the halo is materialized, not read across
-blocks).
+blocks).  Batched ``(B, L)`` input shifts per document row, so tags
+never bleed across document boundaries.
+
+Host oracles: :func:`repro.kernels.ref.predecode` (same per-position
+output) and :func:`repro.core.events.decode_bytes` (the compacted event
+stream); tests/test_kernels.py and tests/test_ingest.py assert exact
+agreement, including on malformed input.
 """
 from __future__ import annotations
 
@@ -51,25 +57,34 @@ def _kernel(b_ref, b1_ref, b2_ref, b3_ref, kind_ref, tag_ref):
 def predecode_pallas(bytes_: jax.Array, *, block_rows: int = 8,
                      interpret: bool | None = None
                      ) -> tuple[jax.Array, jax.Array]:
-    """(N,) uint8 → ((N,) kind int32, (N,) tag int32).
+    """(N,) or (B, N) uint8 → same-shaped (kind int32, tag int32).
 
+    Batched input decodes every document in one ``pallas_call``: the
+    1..3-byte halo shifts are materialized *per row* (zero shift-in at
+    each document's end), so tags never bleed across document
+    boundaries, then all positions go through the grid together.
+
+    Host oracles: :func:`repro.kernels.ref.predecode` (same shapes) and
+    :func:`repro.core.events.decode_bytes` (after compaction).
     ``interpret=None`` auto-detects from the backend.
     """
     from . import interpret_default
 
     if interpret is None:
         interpret = interpret_default()
-    n = bytes_.shape[0]
-    b = bytes_.astype(jnp.int32)
+    shape = bytes_.shape
+    n = shape[-1]
+    b2 = bytes_.astype(jnp.int32).reshape(-1, n)
 
     def shift(k):
-        return jnp.concatenate([b[k:], jnp.zeros((min(k, n),), jnp.int32)])
+        return jnp.pad(b2[:, k:], ((0, 0), (0, min(k, n))))
 
+    flat = [x.reshape(-1) for x in (b2, shift(1), shift(2), shift(3))]
+    total = flat[0].shape[0]
     rows = block_rows
     width = rows * LANE
-    n_pad = -n % width
-    arrs = [jnp.pad(x, (0, n_pad)).reshape(-1, LANE)
-            for x in (b, shift(1), shift(2), shift(3))]
+    n_pad = -total % width
+    arrs = [jnp.pad(x, (0, n_pad)).reshape(-1, LANE) for x in flat]
     n_rows = arrs[0].shape[0]
     grid = (n_rows // rows,)
     spec = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
@@ -81,4 +96,5 @@ def predecode_pallas(bytes_: jax.Array, *, block_rows: int = 8,
         out_shape=[jax.ShapeDtypeStruct((n_rows, LANE), jnp.int32)] * 2,
         interpret=interpret,
     )(*arrs)
-    return kind.reshape(-1)[:n], tag.reshape(-1)[:n]
+    return kind.reshape(-1)[:total].reshape(shape), \
+        tag.reshape(-1)[:total].reshape(shape)

@@ -31,17 +31,20 @@ def symbol_value(b: jax.Array) -> jax.Array:
 
 
 def predecode(bytes_: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """(N,) uint8 → per-position (kind, tag_id); kind=PAD where no tag opens.
+    """(..., N) uint8 → per-position (kind, tag_id); kind=PAD off tags.
 
     The §3.4 character pre-decoder adapted to the TPU: every byte position
     is classified *in parallel* (fixed-length dictionary tags make this
     possible); stream compaction to an event list happens outside.
+    Batched input shifts per row, so documents never bleed into each
+    other.
     """
     b = bytes_.astype(jnp.int32)
-    n = b.shape[0]
+    n = b.shape[-1]
 
     def shift(k):
-        return jnp.concatenate([b[k:], jnp.zeros((min(k, n),), jnp.int32)])
+        pad = [(0, 0)] * (b.ndim - 1) + [(0, min(k, n))]
+        return jnp.pad(b[..., k:], pad)
 
     b1, b2, b3 = shift(1), shift(2), shift(3)
     is_lt = b == _LT

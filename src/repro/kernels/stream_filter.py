@@ -16,6 +16,10 @@ on-chip memory playing the role of the FPGA's block RAM stack (§3.2).
 
 Outputs per state: ever-active flag and first-active event index; the
 caller maps accept states to queries (priority encoder).
+
+Host oracle: :func:`repro.kernels.ref.stream_filter` (pure-jnp scan of
+one state block); tests/test_kernels.py asserts exact agreement, and the
+end-to-end engine is checked against the recursive oracle engine.
 """
 from __future__ import annotations
 

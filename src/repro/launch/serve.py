@@ -8,10 +8,16 @@ batched serve engine.  The filter runs the TPU levelwise engine — on a
 real deployment this sits on the same chips as the model, the paper's
 "parser and filter on the same chip eliminates communication" argument.
 
+``--ingest bytes`` serves *raw wire bytes*: payloads arrive as
+paper-format byte strings and are parsed on device
+(``FilterStage.route_bytes``), so routing runs bytes → verdict with no
+per-event host Python — the full same-chip dataflow.  ``--ingest
+events`` is the pre-parsed host path.
+
 Usage::
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --requests 32 --replicas 2
+      --requests 32 --replicas 2 --ingest bytes
 """
 import argparse
 import time
@@ -22,7 +28,8 @@ import numpy as np
 from repro.configs import ARCHS, get_config
 from repro.core import engines
 from repro.core.dictionary import TagDictionary
-from repro.data.filter_stage import FilterStage
+from repro.core.events import encode_bytes
+from repro.data.filter_stage import TEXT_FILL, FilterStage
 from repro.data.generator import DTD, gen_corpus, gen_profiles
 from repro.models import transformer as T
 from repro.serve.engine import ServeEngine
@@ -40,6 +47,10 @@ def main() -> None:
     ap.add_argument("--filter-engine", default="levelwise",
                     choices=list(engines.names()),
                     help="pub-sub routing engine (any registered engine)")
+    ap.add_argument("--ingest", default="events",
+                    choices=("events", "bytes"),
+                    help="request payload form: pre-parsed event streams "
+                         "(host parse) or raw wire bytes parsed on device")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced).with_(vocab=256)
@@ -59,14 +70,23 @@ def main() -> None:
     payloads = gen_corpus(dtd, n_docs=args.requests, nodes_per_doc=60,
                           seed=1)
 
+    # serialization is request *arrival* (real deployments receive bytes),
+    # so it happens outside the routing timer
+    if args.ingest == "bytes":
+        raw = [encode_bytes(doc, text_fill=TEXT_FILL) for doc in payloads]
     t0 = time.perf_counter()
     queues: list[list[int]] = [[] for _ in range(args.replicas)]
-    for routed in stage.route(payloads):
+    if args.ingest == "bytes":
+        # requests arrive as raw paper-format bytes; parse runs on device
+        routed_batches = stage.route_bytes(raw)
+    else:
+        routed_batches = stage.route(payloads)
+    for routed in routed_batches:
         for r in routed:
             queues[r.shard].append(r.doc_index)
     t_route = time.perf_counter() - t0
     tp = stage.throughput()
-    print(f"[serve] routed {args.requests} requests → "
+    print(f"[serve] routed {args.requests} requests ({args.ingest} ingest) → "
           f"{[len(q) for q in queues]} per replica ({t_route*1e3:.1f} ms; "
           f"{tp['engine']}: {tp['docs_per_s']:.0f} docs/s, "
           f"{tp['mb_per_s']:.2f} MB/s)")

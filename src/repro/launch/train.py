@@ -31,14 +31,36 @@ from repro.train.optimizer import make_optimizer
 from repro.train.train_step import make_train_step
 
 
-def build_filtered_pipeline(batch: int, seq_len: int, log=print):
-    """Pub-sub ingest: generate docs, filter by profiles, route shard 0."""
+def build_filtered_pipeline(batch: int, seq_len: int, log=print,
+                            ingest: str = "events"):
+    """Pub-sub ingest: generate docs, filter by profiles, route shard 0.
+
+    ``ingest='bytes'`` serializes the corpus to raw wire bytes first and
+    runs the whole filter on device (``XMLBytePipeline.from_filtered_bytes``
+    → ``FilterStage.route_bytes``) — the paper's same-chip parse+filter
+    feeding LM training.
+    """
+    from repro.core.events import encode_bytes
+
     dtd = DTD.generate(n_tags=24, seed=0)
     d = TagDictionary()
     dtd.register(d)
     profiles = gen_profiles(dtd, n=64, length=4, seed=0)
     docs = gen_corpus(dtd, n_docs=64, nodes_per_doc=300, seed=0)
     stage = FilterStage(profiles, d, n_shards=1, engine="levelwise")
+    if ingest == "bytes":
+        # serialize with the stage's TEXT_FILL so recorded byte volumes
+        # (and therefore MB/s) are comparable with the event path, which
+        # charges TEXT_FILL synthetic bytes per element in its stats
+        from repro.data.filter_stage import TEXT_FILL
+
+        payloads = [encode_bytes(doc, text_fill=TEXT_FILL) for doc in docs]
+        pipe = XMLBytePipeline.from_filtered_bytes(payloads, stage,
+                                                   batch=batch,
+                                                   seq_len=seq_len)
+        log(f"[train] device-ingest filter kept "
+            f"{len(pipe.payloads)}/{len(docs)} documents")
+        return pipe
     kept = []
     for routed in stage.route(docs):
         kept += [r.doc_index for r in routed]
@@ -58,6 +80,10 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--data-filter", action="store_true")
+    ap.add_argument("--data-ingest", default="events",
+                    choices=("events", "bytes"),
+                    help="with --data-filter: host-parsed events or raw "
+                         "bytes parsed+filtered on device")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--preempt-file", default="")
@@ -86,7 +112,8 @@ def main() -> None:
     step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0, 1))
 
     if args.data_filter:
-        pipe = build_filtered_pipeline(args.batch, args.seq_len)
+        pipe = build_filtered_pipeline(args.batch, args.seq_len,
+                                       ingest=args.data_ingest)
     else:
         pipe = TokenPipeline(vocab=cfg.vocab, batch=args.batch,
                              seq_len=args.seq_len, seed=0)

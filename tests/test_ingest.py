@@ -1,0 +1,309 @@
+"""Device-resident ingestion: ByteBatch → parse kernels → EventBatch.
+
+The PR-level contract: a batch of raw paper-format byte streams becomes
+a filter verdict with no per-event host Python, and the device parser
+(:func:`repro.kernels.parse.parse_batch`) is *bit-identical* to the host
+oracle (:meth:`repro.core.events.EventBatch.from_streams`) on every
+well-formed corpus — kind, tag_id, depth, parent, valid and n_events.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hypothesis_shim import given, settings, st
+from repro.core import engines
+from repro.core.dictionary import TagDictionary
+from repro.core.events import (CLOSE, OPEN, ByteBatch, EventBatch,
+                               EventStream, bucket_length, decode_bytes,
+                               encode_bytes)
+from repro.core.nfa import compile_queries
+from repro.data.filter_stage import FilterStage
+from repro.data.generator import DTD, gen_corpus, gen_document, gen_profiles
+from repro.kernels import ops, ref
+from repro.kernels.parse import parse_batch, structure_scan
+from repro.kernels.predecode import predecode_pallas
+
+
+def _corpus(seed, n_docs=5, nodes=60):
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    return dtd, d, gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=nodes,
+                              seed=seed)
+
+
+def _assert_batches_identical(got: EventBatch, want: EventBatch, msg=""):
+    got = got.to_host()
+    for f in ("kind", "tag_id", "depth", "parent", "valid", "n_events"):
+        np.testing.assert_array_equal(
+            getattr(got, f), getattr(want, f),
+            err_msg=f"{f} differs {msg}")
+
+
+# -------------------------------------------------------------- ByteBatch
+class TestByteBatch:
+    def test_from_buffers_pads_and_recovers(self):
+        bufs = [b"<aa><ab></ab></aa>", b"<ba></ba>"]
+        bb = ByteBatch.from_buffers(bufs, bucket=32)
+        assert bb.batch_size == 2
+        assert bb.length == 32
+        assert list(bb.n_bytes) == [18, 9]
+        assert list(bb.buffers()) == bufs
+        # zero padding: tail bytes decode to nothing
+        assert (np.asarray(bb.data)[1, 9:] == 0).all()
+        assert bb.nbytes_total() == 27
+
+    def test_from_streams_matches_encode_bytes(self):
+        _, _, docs = _corpus(0, n_docs=3, nodes=30)
+        bb = ByteBatch.from_streams(docs, text_fill=3, bucket=64)
+        for i, doc in enumerate(docs):
+            assert bb.buffer(i) == encode_bytes(doc, text_fill=3)
+
+    def test_max_events_bounds_true_event_count(self):
+        _, _, docs = _corpus(1, n_docs=4, nodes=50)
+        for tf in (0, 7):
+            bb = ByteBatch.from_streams(docs, text_fill=tf)
+            assert bb.max_events >= max(len(d) for d in docs)
+
+    def test_empty_batch_raises(self):
+        with pytest.raises(ValueError):
+            ByteBatch.from_buffers([])
+
+
+# ------------------------------------------- parse_batch vs host oracle
+class TestParseBatchParity:
+    """Acceptance criterion: bit-identical to EventBatch.from_streams."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    @pytest.mark.parametrize("text_fill", [0, 4])
+    @pytest.mark.parametrize("bucket", [None, 64])
+    def test_round_trips_generated_corpora(self, seed, text_fill, bucket):
+        _, _, docs = _corpus(seed)
+        bb = ByteBatch.from_streams(docs, text_fill=text_fill,
+                                    bucket=bucket)
+        got = parse_batch(bb)
+        want = EventBatch.from_streams(docs).pad_to(got.length)
+        _assert_batches_identical(
+            got, want, f"(seed={seed} tf={text_fill} bucket={bucket})")
+
+    def test_multi_root_forest(self):
+        # forests (multiple top-level elements) exercise the depth floor
+        ev = EventStream(
+            np.array([OPEN, CLOSE, OPEN, OPEN, CLOSE, CLOSE, OPEN, CLOSE],
+                     np.int8),
+            np.array([1, 1, 2, 3, 3, 2, 1, 1], np.int32))
+        bb = ByteBatch.from_streams([ev, ev], text_fill=2)
+        got = parse_batch(bb)
+        want = EventBatch.from_streams([ev, ev]).pad_to(got.length)
+        _assert_batches_identical(got, want, "(forest)")
+
+    def test_returns_device_arrays(self):
+        _, _, docs = _corpus(3, n_docs=2, nodes=20)
+        got = parse_batch(ByteBatch.from_streams(docs))
+        assert got.is_device
+        assert not isinstance(got.kind, np.ndarray)
+        host = got.to_host()
+        assert not host.is_device
+        assert host.to_host() is host
+
+    def test_explicit_n_events(self):
+        _, _, docs = _corpus(4, n_docs=2, nodes=20)
+        n = bucket_length(max(len(d) for d in docs), 32)
+        got = parse_batch(ByteBatch.from_streams(docs), n_events=n)
+        assert got.length == n
+        _assert_batches_identical(
+            got, EventBatch.from_streams(docs).pad_to(n), "(n_events)")
+
+    @given(seed=st.integers(0, 10**6), text_fill=st.integers(0, 9),
+           bucket=st.sampled_from([None, 16, 64, 128]))
+    @settings(max_examples=15, deadline=None)
+    def test_property_round_trip(self, seed, text_fill, bucket):
+        """encode_bytes → parse_batch ≡ from_streams over random forests,
+        text_fill values and bucket sizes (hypothesis; skipped without)."""
+        dtd = DTD.generate(n_tags=16, seed=seed % 97)
+        docs = [gen_document(dtd, target_nodes=10 + seed % 40,
+                             max_depth=2 + seed % 9, seed=seed + i)
+                for i in range(3)]
+        bb = ByteBatch.from_streams(docs, text_fill=text_fill,
+                                    bucket=bucket)
+        got = parse_batch(bb)
+        want = EventBatch.from_streams(docs).pad_to(got.length)
+        _assert_batches_identical(got, want, f"(property seed={seed})")
+
+    @pytest.mark.parametrize("use_kernel", [False, True])
+    def test_pallas_and_oracle_predecode_paths_agree(self, use_kernel):
+        """The ingest pipeline is identical through the Pallas kernel
+        (interpret mode here) and its pure-jnp oracle pre-decode."""
+        _, _, docs = _corpus(6, n_docs=3, nodes=40)
+        bb = ByteBatch.from_streams(docs, text_fill=3, bucket=128)
+        got = parse_batch(bb, use_kernel=use_kernel, interpret=True)
+        want = EventBatch.from_streams(docs).pad_to(got.length)
+        _assert_batches_identical(got, want, f"(use_kernel={use_kernel})")
+
+    def test_deep_document_raises_instead_of_silent_clip(self):
+        depth = 70
+        ev = EventStream(
+            np.array([OPEN] * depth + [CLOSE] * depth, np.int8),
+            np.array(list(range(depth)) + list(range(depth))[::-1],
+                     np.int32))
+        bb = ByteBatch.from_streams([ev])
+        with pytest.raises(ValueError, match="max_depth"):
+            parse_batch(bb)  # default bound is 64
+        got = parse_batch(bb, max_depth=depth)
+        want = EventBatch.from_streams([ev]).pad_to(got.length)
+        _assert_batches_identical(got, want, "(deep doc)")
+
+    def test_too_small_n_events_truncates_consistently(self):
+        _, _, docs = _corpus(7, n_docs=2, nodes=30)
+        n = max(len(d) for d in docs) // 2
+        got = parse_batch(ByteBatch.from_streams(docs), n_events=n)
+        host = got.to_host()
+        # counts must describe what the arrays actually contain
+        assert int(host.n_events.max()) <= got.length
+        np.testing.assert_array_equal(
+            host.n_events, host.valid.sum(axis=1).astype(np.int32))
+
+    def test_structure_scan_matches_structure_oracle(self):
+        _, _, docs = _corpus(5, n_docs=4, nodes=80)
+        for doc in docs:
+            depth, parent = doc.structure()
+            d_got, p_got = structure_scan(
+                jnp.asarray(doc.kind.astype(np.int32)), max_depth=64)
+            np.testing.assert_array_equal(np.asarray(d_got), depth)
+            np.testing.assert_array_equal(np.asarray(p_got), parent)
+
+
+# -------------------------------------------- batched predecode parity
+class TestBatchedPredecode:
+    @pytest.mark.parametrize("b,n", [(1, 64), (3, 127), (4, 256), (7, 1025)])
+    def test_batched_equals_per_row(self, b, n):
+        rng = np.random.default_rng(b * 1000 + n)
+        data = rng.integers(0, 256, size=(b, n), dtype=np.uint8)
+        k2, t2 = predecode_pallas(jnp.asarray(data), interpret=True)
+        assert k2.shape == (b, n)
+        for i in range(b):
+            k1, t1 = predecode_pallas(jnp.asarray(data[i]), interpret=True)
+            np.testing.assert_array_equal(np.asarray(k2[i]), np.asarray(k1),
+                                          err_msg=f"row {i} kind")
+            np.testing.assert_array_equal(np.asarray(t2[i]), np.asarray(t1),
+                                          err_msg=f"row {i} tag")
+
+    def test_no_bleed_across_document_boundaries(self):
+        # doc 0 ends with a truncated '<a' split off by padding; doc 1
+        # starts with symbol bytes — a flat decode would fuse them
+        bufs = [b"<aa></aa><a", b"ab<ab></ab>"]
+        bb = ByteBatch.from_buffers(bufs, bucket=16)
+        k, t = predecode_pallas(jnp.asarray(bb.data), interpret=True)
+        k_ref, t_ref = ref.predecode(jnp.asarray(bb.data))
+        np.testing.assert_array_equal(np.asarray(k), np.asarray(k_ref))
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(t_ref))
+        # the truncated tag in doc 0 must NOT produce an event
+        assert (np.asarray(k[0]) != ref.PAD).sum() == 2
+
+    def test_batched_ref_matches_stacked_1d(self):
+        rng = np.random.default_rng(9)
+        data = rng.integers(0, 256, size=(3, 200), dtype=np.uint8)
+        k2, t2 = ref.predecode(jnp.asarray(data))
+        for i in range(3):
+            k1, t1 = ref.predecode(jnp.asarray(data[i]))
+            np.testing.assert_array_equal(np.asarray(k2[i]), np.asarray(k1))
+            np.testing.assert_array_equal(np.asarray(t2[i]), np.asarray(t1))
+
+
+# --------------------------------------- host/kernel malformed parity
+class TestDecodeBytesMalformed:
+    """Regression: decode_bytes must reject invalid symbol bytes exactly
+    like the kernel's ``ok = (v0 >= 0) & (v1 >= 0)`` check."""
+
+    CASES = [
+        b"<a#>x</ab>",          # invalid second open symbol
+        b"<#a></aa>",           # invalid first open symbol
+        b"</a*><ab>",           # invalid close symbol
+        b"<aa><ab",             # truncated open at end of stream
+        b"<aa></a",             # truncated close at end of stream
+        b"<<aa>>",              # '<' immediately followed by '<'
+        b"</",                  # bare close marker
+    ]
+
+    @pytest.mark.parametrize("buf", CASES)
+    def test_host_matches_kernel(self, buf):
+        d = TagDictionary.build(["t%d" % i for i in range(8)])
+        host = decode_bytes(buf, d.symbol_value_table())
+        dev = ops.decode_document(buf, d)
+        np.testing.assert_array_equal(host.kind, dev.kind, err_msg=str(buf))
+        np.testing.assert_array_equal(host.tag_id, dev.tag_id,
+                                      err_msg=str(buf))
+
+    def test_invalid_symbols_rejected(self):
+        d = TagDictionary.build(["a"])
+        ev = decode_bytes(b"<a#>", d.symbol_value_table())
+        assert len(ev) == 0
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_random_bytes_host_matches_kernel(self, seed):
+        rng = np.random.default_rng(seed)
+        buf = bytes(rng.integers(0, 256, size=500, dtype=np.uint8))
+        d = TagDictionary.build(["a"])
+        host = decode_bytes(buf, d.symbol_value_table())
+        dev = ops.decode_document(buf, d)
+        np.testing.assert_array_equal(host.kind, dev.kind)
+        np.testing.assert_array_equal(host.tag_id, dev.tag_id)
+
+
+# ------------------------------------------------- fused filter path
+class TestFilterBytes:
+    def _workload(self, seed=0):
+        dtd, d, docs = _corpus(seed, n_docs=6, nodes=50)
+        qs = gen_profiles(dtd, n=16, length=3, seed=seed)
+        nfa = compile_queries(qs, d, shared=True)
+        return qs, nfa, d, docs
+
+    @pytest.mark.parametrize("name", ["streaming", "levelwise", "oracle"])
+    def test_filter_bytes_equals_filter_batch(self, name):
+        qs, nfa, d, docs = self._workload(0)
+        eng = engines.create(name, nfa, dictionary=d)
+        want = eng.filter_batch(EventBatch.from_streams(docs))
+        got = eng.filter_bytes(
+            ByteBatch.from_streams(docs, text_fill=5, bucket=256))
+        np.testing.assert_array_equal(got.matched, want.matched,
+                                      err_msg=name)
+        np.testing.assert_array_equal(got.first_event, want.first_event,
+                                      err_msg=name)
+
+    def test_route_bytes_matches_route(self):
+        qs, nfa, d, docs = self._workload(1)
+        payloads = [encode_bytes(doc, text_fill=4) for doc in docs]
+        routes = {}
+        for via in ("events", "bytes"):
+            stage = FilterStage(qs, d, n_shards=3, engine="streaming",
+                                batch_size=4)
+            batches = (stage.route(docs) if via == "events"
+                       else stage.route_bytes(payloads))
+            routes[via] = {(r.doc_index, r.shard): tuple(r.matched_profiles)
+                           for b in batches for r in b}
+        assert routes["events"] == routes["bytes"]
+
+    def test_route_bytes_accumulates_stats(self):
+        qs, nfa, d, docs = self._workload(2)
+        payloads = [encode_bytes(doc) for doc in docs]
+        stage = FilterStage(qs, d, n_shards=2, engine="streaming",
+                            batch_size=3)
+        list(stage.route_bytes(payloads))
+        tp = stage.throughput()
+        assert tp["docs"] == len(docs)
+        assert stage.stats["bytes"] == sum(len(p) for p in payloads)
+
+    def test_from_filtered_bytes_pipeline(self):
+        from repro.data.tokens import XMLBytePipeline
+
+        qs, nfa, d, docs = self._workload(3)
+        payloads = [encode_bytes(doc, text_fill=2) for doc in docs]
+        stage = FilterStage(qs, d, n_shards=1, engine="streaming")
+        pipe = XMLBytePipeline.from_filtered_bytes(payloads, stage,
+                                                   batch=2, seq_len=16)
+        b = pipe.batch_at(0)
+        assert b["tokens"].shape == (2, 16)
+        assert b["labels"].shape == (2, 16)
+        with pytest.raises(ValueError):
+            XMLBytePipeline(docs, batch=2, seq_len=8, payloads=payloads)
