@@ -174,6 +174,104 @@ def run_ingest(query_counts=(64, 256), path_len=4, n_docs=16,
     return rows
 
 
+def run_query_scaling(query_counts=(100, 1000, 10000),
+                      shard_counts=(1, 2, 4), path_len=3, n_docs=8,
+                      nodes_per_doc=200, seed=0, engine="streaming",
+                      repeat=3, use_mesh=True):
+    """The paper's headline claim, measured: scalability in the number
+    of standing profiles.
+
+    One row per (n_queries, query_shards): docs/s through the same
+    batch as the subscription set grows 10²→10⁴, monolithic plan
+    (``query_shards=1``, the seed architecture) vs the partitioned
+    :class:`ShardedPlan` executed over the mesh ``"model"`` axis.  On a
+    single device the sharded rows measure the stacking overhead; on a
+    real mesh each device runs 1/P of the query set — the paper's
+    profiles-across-chips replication (§3.5/Fig 9 slope).
+    """
+    from repro.launch.mesh import make_filter_mesh
+
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=nodes_per_doc,
+                      seed=seed)
+    batch = EventBatch.from_streams(docs, bucket=128)
+    mb = float(batch.nbytes(TEXT_FILL).sum()) / 1e6
+    rows = []
+    for nq in query_counts:
+        qs = gen_profiles(dtd, n=nq, length=path_len, seed=seed + path_len)
+        nfa = compile_queries(qs, d, shared=True)
+        eng = engines.create(engine, nfa, dictionary=d)
+        for shards in shard_counts:
+            if shards == 1:
+                fn = lambda: eng.filter_batch(batch)  # noqa: E731
+            else:
+                sp = eng.plan_sharded(shards)
+                mesh = make_filter_mesh(shards) if use_mesh else None
+                fn = lambda: eng.filter_batch_sharded(  # noqa: E731
+                    batch, sp, mesh=mesh)
+            fn()  # compile warmup
+            t = _time(fn, repeat=repeat)
+            rows.append(
+                {"bench": "query_scaling", "engine": engine,
+                 "n_queries": nq, "query_shards": shards,
+                 "path_len": path_len, "n_docs": n_docs,
+                 "doc_mb": round(mb, 3), "n_states": eng.nfa.n_states,
+                 "docs_per_s": round(n_docs / t, 2),
+                 "mb_s": round(mb / t, 3)})
+    return rows
+
+
+def run_churn(n_queries=512, n_parts=4, n_ops=16, path_len=3, seed=0,
+              engine="streaming"):
+    """Subscription-churn latency: the pub-sub system's defining op.
+
+    Per-op seconds for subscribe (recompiles ONE partition) and
+    unsubscribe (tombstone, no recompile) on a sharded plan, against
+    the monolithic alternative — a full profile-set recompile per op.
+    The steady-state gap is the O(n_queries / n_parts) claim.
+    """
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    profiles = gen_profiles(dtd, n=n_queries, length=path_len,
+                            seed=seed + path_len)
+    extra = gen_profiles(dtd, n=n_ops, length=path_len, seed=seed + 977)
+    eng = engines.create(engine, compile_queries(profiles, d, shared=True),
+                         dictionary=d)
+    sp = eng.plan_sharded(n_parts)
+
+    t0 = time.perf_counter()
+    added: list[int] = []
+    for q in extra:
+        sp, gids = sp.add_queries([q])
+        added += gids
+    add_s = (time.perf_counter() - t0) / n_ops
+
+    t0 = time.perf_counter()
+    for gid in added:
+        sp = sp.remove_queries([gid])
+    rm_s = (time.perf_counter() - t0) / n_ops
+
+    # the monolithic alternative: every churn op recompiles everything
+    t0 = time.perf_counter()
+    engines.create(engine,
+                   compile_queries(list(sp.live_queries()), d, shared=True),
+                   dictionary=d)
+    full_s = time.perf_counter() - t0
+
+    common = {"bench": "churn_latency", "engine": engine,
+              "n_queries": n_queries, "n_parts": n_parts, "n_ops": n_ops}
+    return [
+        {**common, "op": "subscribe", "seconds_per_op": round(add_s, 6),
+         "speedup_vs_recompile": round(full_s / max(add_s, 1e-9), 2)},
+        {**common, "op": "unsubscribe", "seconds_per_op": round(rm_s, 6),
+         "speedup_vs_recompile": round(full_s / max(rm_s, 1e-9), 2)},
+        {**common, "op": "full_recompile", "seconds_per_op": round(full_s, 6)},
+    ]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--engine", action="append", default=None,
@@ -190,8 +288,34 @@ def main() -> None:
                     choices=list(INGEST_PATHS),
                     help="repeatable; measure parse cost end-to-end over "
                          "these ingest paths instead of the Fig-9 sweep")
+    ap.add_argument("--query-shards", type=int, nargs="+", default=None,
+                    metavar="P",
+                    help="run the query-count scaling sweep (10²→10⁴ "
+                         "standing profiles) over these shard counts "
+                         "instead of the Fig-9 sweep")
+    ap.add_argument("--churn", action="store_true",
+                    help="run the subscription-churn latency section "
+                         "instead of the Fig-9 sweep")
     args = ap.parse_args()
     import json
+    if args.query_shards:
+        rows = run_query_scaling(
+            query_counts=tuple(args.queries or (100, 1000, 10000)),
+            shard_counts=tuple(args.query_shards),
+            path_len=(args.path_lengths or [3])[0],
+            n_docs=args.docs, nodes_per_doc=args.nodes, seed=args.seed,
+            engine=(args.engine or ["streaming"])[0], repeat=args.repeat)
+        for r in rows:
+            print(json.dumps(r))
+        return
+    if args.churn:
+        rows = run_churn(n_queries=(args.queries or [512])[0],
+                         path_len=(args.path_lengths or [3])[0],
+                         seed=args.seed,
+                         engine=(args.engine or ["streaming"])[0])
+        for r in rows:
+            print(json.dumps(r))
+        return
     if args.ingest:
         rows = run_ingest(
             query_counts=tuple(args.queries or (64, 256)),

@@ -8,6 +8,11 @@ Sections:
   ingest — ingest_throughput: parse cost end-to-end over the three
            ingestion paths (events / bytes-host / bytes-device — the
            paper's same-chip parser+filter vs host parsing)
+  qscale — query_scaling: docs/s as the standing profile set grows
+           10²→10⁴, monolithic vs sharded query plans (the paper's
+           scalability-in-profiles claim, §3.5)
+  churn  — churn_latency: per-op subscribe/unsubscribe on a sharded
+           plan vs a full recompile
   twig   — twig-pattern filtering cost structure (paper §5 extension)
   roofline — 3-term roofline per (arch × shape) from dry-run artifacts
              (only if launch/dryrun.py results exist; see EXPERIMENTS.md)
@@ -32,7 +37,7 @@ def main() -> None:
                     help="paper-scale sweeps (slower)")
     ap.add_argument("--only", default=None,
                     help="run a single section: "
-                         "fig8|fig9|ingest|twig|roofline")
+                         "fig8|fig9|ingest|qscale|churn|twig|roofline")
     ap.add_argument("--json", nargs="?", const="BENCH_filtering.json",
                     default=None, metavar="PATH",
                     help="also write rows to a JSON file "
@@ -40,7 +45,8 @@ def main() -> None:
     args = ap.parse_args()
 
     sections = [args.only] if args.only else ["fig8", "fig9", "ingest",
-                                              "twig", "roofline"]
+                                              "qscale", "churn", "twig",
+                                              "roofline"]
     rows = []
 
     if "fig8" in sections:
@@ -65,6 +71,23 @@ def main() -> None:
         else:
             rows += bench_throughput.run_ingest(
                 query_counts=(16, 64), n_docs=8, nodes_per_doc=200)
+
+    if "qscale" in sections:
+        from benchmarks import bench_throughput
+        if args.full:
+            rows += bench_throughput.run_query_scaling(
+                n_docs=16, nodes_per_doc=400)
+        else:
+            # acceptance sweep 10²→10⁴ profiles on a small doc batch
+            rows += bench_throughput.run_query_scaling(
+                query_counts=(100, 1000, 10000), shard_counts=(1, 2, 4),
+                n_docs=4, nodes_per_doc=120, repeat=1)
+
+    if "churn" in sections:
+        from benchmarks import bench_throughput
+        rows += bench_throughput.run_churn(
+            n_queries=1024 if args.full else 256,
+            n_ops=32 if args.full else 8)
 
     if "twig" in sections:
         from benchmarks import bench_twig

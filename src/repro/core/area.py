@@ -48,6 +48,7 @@ class AreaReport:
     n_queries: int
     n_states: int
     bit_cost: int
+    part: int | None = None  # partition index for sharded plans (per-FPGA)
 
     @property
     def chip_fraction(self) -> float:
@@ -104,6 +105,39 @@ def area_report(queries: Sequence[Query], dictionary: TagDictionary,
         n_states=nfa.n_states,
         bit_cost=nfa_bit_cost(nfa, chardec=chardec),
     )
+
+
+def area_report_sharded(queries: Sequence[Query], dictionary: TagDictionary,
+                        scenario: str, n_parts: int) -> list[AreaReport]:
+    """Per-part area of a partitioned profile set — one row per part.
+
+    The paper's area model is per-FPGA; partitioning the query set
+    across chips (§3.5, the multi-chip scaling table) makes the cost of
+    each chip the cost of *its* sub-NFA.  Balanced partitions show up
+    here directly: the max row bounds the required device, the sum is
+    the total silicon.  Shared-prefix dedup happens within a part (the
+    partitioner keeps prefix groups together precisely so this cost
+    does not explode versus the monolithic NFA).
+    """
+    from .nfa import partition_queries
+
+    if scenario not in SCENARIOS:
+        raise ValueError(scenario)
+    shared = scenario.startswith("Com-P")
+    chardec = scenario.endswith("CharDec")
+    parts, partition = partition_queries(list(queries), n_parts, dictionary,
+                                         shared=shared)
+    sizes = partition.part_sizes()
+    return [
+        AreaReport(
+            scenario=scenario,
+            n_queries=int(sizes[p]),
+            n_states=nfa.n_states,
+            bit_cost=nfa_bit_cost(nfa, chardec=chardec),
+            part=p,
+        )
+        for p, nfa in enumerate(parts)
+    ]
 
 
 def engine_table_bytes(nfa: NFA) -> dict[str, int]:

@@ -14,11 +14,34 @@ Every engine implements the same two-method interface
   wire bytes*, parsed on device (:mod:`repro.kernels.parse`); the
   streaming engine fuses parse+filter into one jitted program.
 
+The **sharded contract** scales the query axis (the paper's
+profiles-across-chips replication, §3.5):
+
+* ``plan_sharded(n_parts) -> ShardedPlan`` — partition the profile set
+  into balanced sub-NFAs (:func:`repro.core.nfa.partition_queries`,
+  shared-prefix trie groups kept together) and compile each part at
+  *uniform* state/query pad targets, so per-part tables stack into one
+  leading-axis ``(P, ...)`` array.
+* ``filter_batch_sharded(batch, sharded, mesh=None) -> FilterResult``
+  — all parts in ONE device program: ``vmap`` over the part axis, or
+  ``jax.shard_map`` over the mesh ``"model"`` axis when a mesh
+  (:func:`repro.launch.mesh.make_filter_mesh`) is given.  Host engines
+  (oracle, yfilter) loop parts instead and serve as the equivalence
+  oracle.  Results cover live global query ids in ascending order —
+  bit-identical to the unsharded ``filter_batch``.
+* ``ShardedPlan.add_queries / remove_queries`` — incremental
+  subscription churn: adds recompile only the least-loaded part
+  (O(n_queries / n_parts) steady state), removals tombstone a column
+  with no recompile at all.
+* ``filter_bytes_sharded(bb, sharded)`` — the device-ingest twin.
+
 Engines self-register under a string key, so construction is uniform::
 
     from repro.core import engines
     eng = engines.create("levelwise", nfa)            # or any name below
     res = eng.filter_batch(EventBatch.from_streams(docs))
+    sp = eng.plan_sharded(4)                          # query-axis scaling
+    res = eng.filter_batch_sharded(batch, sp)
 
 Registered implementations of the paper's filtering semantics:
 
@@ -42,7 +65,8 @@ To add an engine, subclass :class:`base.FilterEngine` and decorate with
 ``@base.register("name")`` — see the ``base`` module docstring.
 """
 from . import base  # noqa: F401
-from .base import FilterEngine, FilterPlan, create, get, names, register  # noqa: F401
+from .base import (FilterEngine, FilterPlan, ShardedPlan, create, get,  # noqa: F401
+                   names, register)
 from .result import NO_MATCH, FilterResult  # noqa: F401
 
 # importing the implementation modules populates the registry

@@ -36,13 +36,24 @@ Adding an engine::
 from __future__ import annotations
 
 import abc
-from typing import Any, ClassVar, Mapping
+import dataclasses
+from typing import Any, ClassVar, Mapping, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from ...sharding.compat import shard_map_compat as _shard_map
 from ..events import ByteBatch, EventBatch, EventStream
-from ..nfa import NFA
-from .result import FilterResult
+from ..nfa import NFA, QueryPartition, compile_queries, pad_states, \
+    partition_queries
+from ..xpath import Query, parse as parse_xpath
+from .result import NO_MATCH, FilterResult
+
+
+def _round_up(n: int, multiple: int) -> int:
+    multiple = max(1, int(multiple))
+    return max(multiple, -(-n // multiple) * multiple)
 
 
 # ----------------------------------------------------------------- the plan
@@ -106,6 +117,244 @@ jax.tree_util.register_pytree_node(
     FilterPlan, FilterPlan._flatten, FilterPlan._unflatten)
 
 
+# ------------------------------------------------------------ sharded plans
+class ShardedPlan:
+    """Frozen pytree of per-part :class:`FilterPlan`\\ s — the query axis
+    as a scaling axis.
+
+    The paper scales in the number of profiles by replicating query
+    blocks across FPGA area and chips (§3.5/§4); here the subscription
+    set is partitioned (:func:`repro.core.nfa.partition_queries`) and
+    each part compiled to its own plan.  Device engines compile every
+    part with **uniform state/query padding** (the engine's
+    :meth:`FilterEngine.part_pads` targets), so the per-part tables
+    stack into one leading-axis ``(P, ...)`` array program —
+    ``jax.vmap`` on one device, ``jax.shard_map`` over the mesh
+    ``"model"`` axis when one is provided.  Host engines keep raw
+    per-part plans and loop them.
+
+    Instances are immutable; subscription churn returns a **new** plan:
+
+    * :meth:`add_queries` — appends to the least-loaded part and
+      recompiles *only that part* (other parts re-pad only when the new
+      part overflows a shared pad bucket), so steady-state subscribe
+      cost is O(n_queries / n_parts) instead of O(n_queries);
+    * :meth:`remove_queries` — pure metadata: the column is tombstoned
+      in the partition index and masked out of results; the dead column
+      is reclaimed the next time its part recompiles.
+
+    Global query ids are stable across churn (see
+    :class:`repro.core.nfa.QueryPartition`); results are reported over
+    the *live* ids in ascending order — for a freshly planned set this
+    is exactly the original query order, so sharded and unsharded
+    verdicts are directly comparable.
+
+    Pytree note: the leaves are the per-part plans' tables (so a
+    ``ShardedPlan`` can cross ``jax.jit`` boundaries like any pytree);
+    the partition/query bookkeeping rides in aux data and compares by
+    identity — pass :meth:`stacked` (a plain :class:`FilterPlan`) into
+    jitted code instead of the ``ShardedPlan`` itself.
+    """
+
+    __slots__ = ("engine", "plans", "part_cols", "part_queries",
+                 "part_nfas", "pads", "n_global", "query_bucket", "shared",
+                 "_engine_obj", "_stacked", "_partition")
+
+    def __init__(self, engine_obj: "FilterEngine",
+                 plans: Sequence[FilterPlan],
+                 part_cols: Sequence[Sequence[int]],
+                 part_queries: Sequence[Sequence[Query | None]],
+                 part_nfas: Sequence[NFA],
+                 pads: Mapping[str, int],
+                 n_global: int,
+                 query_bucket: int,
+                 shared: bool) -> None:
+        object.__setattr__(self, "engine", engine_obj.name)
+        object.__setattr__(self, "plans", tuple(plans))
+        object.__setattr__(self, "part_cols",
+                           tuple(tuple(c) for c in part_cols))
+        object.__setattr__(self, "part_queries",
+                           tuple(tuple(q) for q in part_queries))
+        object.__setattr__(self, "part_nfas", tuple(part_nfas))
+        object.__setattr__(self, "pads", dict(pads))
+        object.__setattr__(self, "n_global", int(n_global))
+        object.__setattr__(self, "query_bucket", int(query_bucket))
+        object.__setattr__(self, "shared", bool(shared))
+        object.__setattr__(self, "_engine_obj", engine_obj)
+        object.__setattr__(self, "_stacked", None)
+        object.__setattr__(self, "_partition", None)
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        raise AttributeError("ShardedPlan is frozen")
+
+    # ----------------------------------------------------------- structure
+    @property
+    def n_parts(self) -> int:
+        return len(self.plans)
+
+    @property
+    def n_queries(self) -> int:
+        """Live (subscribed) query count."""
+        return sum(1 for cols in self.part_cols for g in cols if g >= 0)
+
+    @property
+    def partition(self) -> QueryPartition:
+        """Global id ↔ (part, local column) index of the current layout."""
+        if self._partition is None:
+            part_of = np.full(self.n_global, -1, np.int32)
+            local_of = np.zeros(self.n_global, np.int32)
+            for p, cols in enumerate(self.part_cols):
+                for c, gid in enumerate(cols):
+                    if gid >= 0:
+                        part_of[gid] = p
+                        local_of[gid] = c
+            object.__setattr__(self, "_partition",
+                               QueryPartition(part_of, local_of,
+                                              self.n_parts))
+        return self._partition
+
+    def live_ids(self) -> np.ndarray:
+        return self.partition.live_ids()
+
+    def live_queries(self) -> tuple[Query, ...]:
+        """Subscribed queries in global-id order — compiling these from
+        scratch must reproduce this plan's verdicts exactly (the churn
+        equivalence invariant)."""
+        by_gid: dict[int, Query] = {}
+        for cols, qs in zip(self.part_cols, self.part_queries):
+            for gid, q in zip(cols, qs):
+                if gid >= 0:
+                    by_gid[gid] = q
+        return tuple(by_gid[g] for g in sorted(by_gid))
+
+    def index_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """(part, local) gather index over live ids in global order."""
+        part = self.partition
+        live = part.live_ids()
+        return part.part_of[live], part.local_of[live]
+
+    def stacked(self) -> FilterPlan:
+        """All parts as ONE plan with leading part axis (device engines).
+
+        Uniform padding makes every per-part table the same shape, so
+        table ``k`` stacks to ``(P, ...)`` — the array program form that
+        ``vmap``/``shard_map`` partition over the mesh ``"model"`` axis.
+        Cached: churn builds new ``ShardedPlan`` instances, so a cached
+        stack can never go stale.
+        """
+        if self._stacked is None:
+            names = list(self.plans[0].tables)
+            tables = {k: jnp.stack([p[k] for p in self.plans])
+                      for k in names}
+            meta = dict(self.plans[0].meta)
+            meta["n_parts"] = self.n_parts
+            object.__setattr__(
+                self, "_stacked", FilterPlan(self.engine, tables, meta))
+        return self._stacked
+
+    def part_sizes(self) -> np.ndarray:
+        return self.partition.part_sizes()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"ShardedPlan({self.engine!r}, parts={self.n_parts}, "
+                f"queries={self.n_queries}, pads={self.pads})")
+
+    # ------------------------------------------------------ incremental churn
+    def add_queries(self, queries: Sequence[Query | str]
+                    ) -> tuple["ShardedPlan", list[int]]:
+        """Subscribe new profiles; recompile only the least-loaded part.
+
+        Returns ``(new_plan, new_global_ids)``.  The target part is
+        compacted on the way (its tombstoned columns are dropped), and
+        the other parts' plans are reused untouched unless the grown
+        part overflows a shared pad bucket — only then is every part
+        re-padded (a table rebuild from the stored sub-NFAs, not a
+        query recompile).
+        """
+        eng = self._engine_obj
+        new_qs = [parse_xpath(q) if isinstance(q, str) else q
+                  for q in queries]
+        if not new_qs:
+            return self, []
+        sizes = self.partition.part_sizes()
+        p = int(np.argmin(sizes))
+        live = [(g, q) for g, q in
+                zip(self.part_cols[p], self.part_queries[p]) if g >= 0]
+        new_gids = list(range(self.n_global, self.n_global + len(new_qs)))
+        cols_p = tuple(g for g, _ in live) + tuple(new_gids)
+        qs_p = tuple(q for _, q in live) + tuple(new_qs)
+        nfa_p = compile_queries(qs_p, eng.dictionary, shared=self.shared)
+        part_nfas = list(self.part_nfas)
+        part_nfas[p] = nfa_p
+        pads = eng.part_pads(part_nfas, query_bucket=self.query_bucket)
+        plans = list(self.plans)
+        stacked = None
+        if all(pads.get(k, 0) <= self.pads.get(k, 0) for k in pads):
+            pads = self.pads  # fits the existing buckets: touch one part
+            plans[p] = eng.plan_part(nfa_p, pads)
+            if self._stacked is not None:
+                # incremental restack: overwrite one row of the cached
+                # (P, ...) tables instead of restacking all parts — the
+                # device-side cost of a subscribe stays O(1/P)
+                tables = {k: self._stacked[k].at[p].set(plans[p][k])
+                          for k in self._stacked.tables}
+                stacked = FilterPlan(self.engine, tables,
+                                     self._stacked.meta)
+        else:
+            pads = {k: max(pads.get(k, 0), self.pads.get(k, 0))
+                    for k in set(pads) | set(self.pads)}
+            plans = [eng.plan_part(nfa, pads) for nfa in part_nfas]
+        part_cols = list(self.part_cols)
+        part_queries = list(self.part_queries)
+        part_cols[p] = cols_p
+        part_queries[p] = qs_p
+        sp = ShardedPlan(eng, plans, part_cols, part_queries, part_nfas,
+                         pads, self.n_global + len(new_qs),
+                         self.query_bucket, self.shared)
+        if stacked is not None:
+            object.__setattr__(sp, "_stacked", stacked)
+        return sp, new_gids
+
+    def remove_queries(self, gids: Sequence[int]) -> "ShardedPlan":
+        """Unsubscribe by global id — O(1) metadata, no recompilation.
+
+        The columns stay in the compiled plans (tombstoned: excluded
+        from the partition index and from every result) and are
+        physically dropped the next time their part recompiles.
+        """
+        dead = set(int(g) for g in gids)
+        part = self.partition
+        for g in dead:
+            if not (0 <= g < self.n_global) or part.part_of[g] < 0:
+                raise KeyError(f"query id {g} is not subscribed")
+        part_cols = [tuple(-1 if g in dead else g for g in cols)
+                     for cols in self.part_cols]
+        sp = ShardedPlan(self._engine_obj, self.plans, part_cols,
+                         self.part_queries, self.part_nfas, self.pads,
+                         self.n_global, self.query_bucket, self.shared)
+        # plans are identical (tombstoning lives in the index), so the
+        # stacked tables carry over — a removal never restacks
+        object.__setattr__(sp, "_stacked", self._stacked)
+        return sp
+
+    # pytree protocol -----------------------------------------------------
+    def _flatten(self):
+        aux = (self._engine_obj, self.part_cols, self.part_queries,
+               self.part_nfas, tuple(sorted(self.pads.items())),
+               self.n_global, self.query_bucket, self.shared)
+        return self.plans, aux
+
+    @classmethod
+    def _unflatten(cls, aux, plans):
+        engine_obj, cols, qs, nfas, pads, n_global, bucket, shared = aux
+        return cls(engine_obj, tuple(plans), cols, qs, nfas, dict(pads),
+                   n_global, bucket, shared)
+
+
+jax.tree_util.register_pytree_node(
+    ShardedPlan, ShardedPlan._flatten, ShardedPlan._unflatten)
+
+
 # --------------------------------------------------------------- the engine
 class FilterEngine(abc.ABC):
     """Uniform engine interface: compile once, filter batches forever.
@@ -119,9 +368,23 @@ class FilterEngine(abc.ABC):
     #: registry key, set by the :func:`register` decorator
     name: ClassVar[str] = ""
 
+    #: state-axis pad multiple this engine's plan tables require (32-state
+    #: packed words, 128-lane MXU tiles, 1 = no padding).  Overridable per
+    #: instance via the ``state_multiple=`` engine option and recorded in
+    #: plan metadata — :func:`repro.core.nfa.pad_states` is always called
+    #: with this value, never a hard-coded constant.
+    state_multiple: ClassVar[int] = 1
+
+    #: True when the engine runs per-part plans as ONE stacked device
+    #: program (vmap/shard_map over the leading part axis); False (host
+    #: engines) loops parts in python.
+    device_sharded: ClassVar[bool] = False
+
     def __init__(self, nfa: NFA, dictionary=None, **options: Any) -> None:
         self.nfa = nfa
         self.dictionary = dictionary
+        if "state_multiple" in options:
+            self.state_multiple = int(options.pop("state_multiple"))
         self.options = options
         self.n_queries = nfa.n_queries
         self.plan_: FilterPlan = self.plan(nfa)
@@ -134,6 +397,192 @@ class FilterEngine(abc.ABC):
     @abc.abstractmethod
     def filter_batch(self, batch: EventBatch) -> FilterResult:
         """Filter a document batch; returns a ``(B, Q)`` result."""
+
+    # ------------------------------------------------- explicit-plan filter
+    def _prep(self, batch: EventBatch) -> tuple:
+        """Plan-independent document-side preparation (device engines).
+
+        Whatever the engine's compiled program consumes — event arrays,
+        level buckets, chunk layouts.  Shared across every part of a
+        sharded plan: the document structure does not depend on which
+        queries are asked of it.
+        """
+        raise NotImplementedError(
+            f"{self.name}: no device prep (host engine)")
+
+    def _run_with_plan(self, plan: FilterPlan, prep: tuple):
+        """Pure-jax body: explicit plan + prepped batch → (matched, first).
+
+        Must be vmappable over the plan's tables — the sharded path maps
+        it over the leading part axis of :meth:`ShardedPlan.stacked`.
+        """
+        raise NotImplementedError(
+            f"{self.name}: no device run (host engine)")
+
+    def filter_batch_with_plan(self, plan: FilterPlan,
+                               batch: EventBatch) -> FilterResult:
+        """:meth:`filter_batch` against an explicit plan (any compiled
+        profile set, not just ``self.plan_``) — the primitive both the
+        unsharded and the per-part sharded paths are built from."""
+        matched, first = self._run_with_plan(plan, self._prep(batch))
+        return FilterResult(np.asarray(matched), np.asarray(first))
+
+    # ------------------------------------------------------- sharded plans
+    def part_pads(self, parts: Sequence[NFA], *,
+                  query_bucket: int = 8) -> dict[str, int]:
+        """Uniform pad targets for a set of partition NFAs.
+
+        Device engines pad every part to common bucket sizes so the
+        per-part tables stack (state axis to the engine's
+        ``state_multiple``, query axis to ``query_bucket``); subclass
+        engines extend with their own table axes (e.g. matscan's
+        ``kmax``, levelwise's tag space).  Host engines return ``{}``
+        (parts are looped, shapes never need to agree).  Buckets give
+        churn headroom: an added query only forces a global re-pad when
+        its part overflows a bucket boundary.
+        """
+        if not self.device_sharded:
+            return {}
+        s = max((nfa.n_states for nfa in parts), default=1)
+        q = max((nfa.n_queries for nfa in parts), default=1)
+        return {"n_states": _round_up(s, self.state_multiple),
+                "n_queries": _round_up(max(q, 1), query_bucket)}
+
+    def plan_part(self, nfa: NFA, pads: Mapping[str, int]) -> FilterPlan:
+        """Compile one partition's NFA at the shared pad targets."""
+        if not pads:
+            return self.plan(nfa)
+        if "n_tags" in pads and pads["n_tags"] > nfa.n_tags:
+            nfa = dataclasses.replace(nfa, n_tags=pads["n_tags"])
+        nfa = pad_states(nfa, to=pads["n_states"])
+        return self._pad_plan_queries(self.plan(nfa), pads["n_queries"])
+
+    def _pad_plan_queries(self, plan: FilterPlan,
+                          n_queries: int) -> FilterPlan:
+        """Pad the plan's query axis with never-matching columns.
+
+        Default handles engines whose only per-query table is
+        ``accept_state``: padding columns accept at state 0 (the root,
+        which no OPEN event ever activates), so they report unmatched
+        forever — inert by construction, like pad states.
+        """
+        acc = plan["accept_state"]
+        extra = n_queries - int(acc.shape[0])
+        if extra <= 0:
+            return plan
+        tables = plan.tables
+        # pad on the host: a device concatenate would XLA-compile once
+        # per novel shape, dominating per-op churn latency
+        acc_h = np.asarray(acc)
+        tables["accept_state"] = jnp.asarray(
+            np.concatenate([acc_h, np.zeros(extra, acc_h.dtype)]))
+        return FilterPlan(plan.engine, tables, plan.meta)
+
+    def plan_sharded(self, n_parts: int, *,
+                     query_bucket: int = 8) -> ShardedPlan:
+        """Partition this engine's profile set and compile per-part plans.
+
+        The counterpart of :meth:`plan` for the sharded contract: split
+        the subscription set (:func:`repro.core.nfa.partition_queries`),
+        compile each part at uniform pad targets, and return the frozen
+        :class:`ShardedPlan` that :meth:`filter_batch_sharded` executes
+        and whose ``add_queries``/``remove_queries`` absorb churn.
+        """
+        parts, partition = partition_queries(
+            list(self.nfa.queries), n_parts, self.dictionary,
+            shared=self.nfa.shared)
+        # local ids are assigned in ascending gid order within each part,
+        # so appending in gid order reproduces the column layout
+        part_cols: list[list[int]] = [[] for _ in range(n_parts)]
+        for gid in range(len(self.nfa.queries)):
+            part_cols[int(partition.part_of[gid])].append(gid)
+        part_queries = [[self.nfa.queries[g] for g in cols]
+                        for cols in part_cols]
+        pads = self.part_pads(parts, query_bucket=query_bucket)
+        plans = [self.plan_part(nfa, pads) for nfa in parts]
+        return ShardedPlan(self, plans, part_cols, part_queries, parts,
+                           pads, len(self.nfa.queries), query_bucket,
+                           self.nfa.shared)
+
+    def filter_batch_sharded(self, batch: EventBatch, sharded: ShardedPlan,
+                             *, mesh=None) -> FilterResult:
+        """Filter through a partitioned plan; ``(B, Q_live)`` result.
+
+        Device engines run every part in ONE compiled program: the
+        stacked ``(P, ...)`` tables are vmapped over the part axis, and
+        when ``mesh`` is given (see
+        :func:`repro.launch.mesh.make_filter_mesh`) the part axis is
+        partitioned over the mesh ``"model"`` axis with ``shard_map`` —
+        each device advances only its slice of the subscription set,
+        the paper's profiles-across-chips scaling.  Host engines loop
+        parts.  Columns come back in live-global-id order (original
+        query order for an unchurned plan), tombstones excluded.
+        """
+        part_of, local_of = sharded.index_arrays()
+        if self.device_sharded:
+            matched, first = self._run_sharded(batch, sharded, mesh)
+            matched = np.asarray(matched)   # (P, B, Qpad)
+            first = np.asarray(first)
+            return FilterResult(matched[part_of, :, local_of].T,
+                                first[part_of, :, local_of].T)
+        outs = [self.filter_batch_with_plan(plan, batch)
+                for plan in sharded.plans]
+        b = batch.batch_size
+        matched = np.zeros((b, part_of.shape[0]), bool)
+        first = np.full((b, part_of.shape[0]), NO_MATCH, np.int32)
+        for j, (p, c) in enumerate(zip(part_of, local_of)):
+            matched[:, j] = outs[p].matched[:, c]
+            first[:, j] = outs[p].first_event[:, c]
+        return FilterResult(matched, first)
+
+    def _run_sharded(self, batch: EventBatch, sharded: ShardedPlan, mesh):
+        """Stacked-parts execution: vmap, or shard_map over the mesh.
+
+        The compiled callable is cached per mesh (jit keys on the plan's
+        pytree structure and the prep shapes, so pad-bucket growth or a
+        new batch shape retraces exactly once).
+        """
+        prep = self._prep(batch)
+        stacked = sharded.stacked()
+        if mesh is not None:
+            axis = dict(mesh.shape).get("model", 1)
+            if axis > 1 and sharded.n_parts % axis != 0:
+                raise ValueError(
+                    f"n_parts={sharded.n_parts} not divisible by mesh "
+                    f"model axis {axis}")
+        cache = getattr(self, "_sharded_exec", None)
+        if cache is None:
+            cache = {}
+            self._sharded_exec = cache
+        fn = cache.get(mesh)
+        if fn is None:
+            def vmapped(plan, *prep_args):
+                return jax.vmap(
+                    lambda pl: self._run_with_plan(pl, prep_args))(plan)
+
+            if mesh is not None:
+                ps = jax.sharding.PartitionSpec
+                n_prep = len(prep)
+                fn = jax.jit(_shard_map(
+                    vmapped, mesh,
+                    in_specs=(ps("model"),) + (ps(),) * n_prep,
+                    out_specs=(ps("model"), ps("model"))))
+            else:
+                fn = jax.jit(vmapped)
+            cache[mesh] = fn
+        return fn(stacked, *prep)
+
+    def filter_bytes_sharded(self, bb: ByteBatch, sharded: ShardedPlan, *,
+                             bucket: int = 128, mesh=None) -> FilterResult:
+        """Sharded twin of :meth:`filter_bytes`: device parse once, then
+        one stacked parts program — bytes in, ``(B, Q_live)`` out."""
+        from ...kernels.parse import DEFAULT_MAX_DEPTH, parse_batch
+
+        max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
+        return self.filter_batch_sharded(
+            parse_batch(bb, n_events=bb.event_bound(bucket=bucket),
+                        max_depth=max_depth),
+            sharded, mesh=mesh)
 
     # ------------------------------------------------------ byte ingestion
     def filter_bytes(self, bb: ByteBatch, *,

@@ -194,8 +194,10 @@ def _leveldocs_of_batch(batch) -> list[LevelDoc]:
 # ------------------------------------------------------------------- engine
 def _level_plan(engine: str, nfa: NFA, lane: int = 128) -> base.FilterPlan:
     """Shared compile step for the levelwise-family engines: lane-pad the
-    state space and materialize the dense MXU tables (REQ pre-decoder,
-    parent one-hot, accept map) once."""
+    state space (``lane`` is the engine's ``state_multiple`` — 128 MXU
+    lanes by default, smaller when the caller opts out of MXU tiling)
+    and materialize the dense tables (REQ pre-decoder, parent one-hot,
+    accept map) once."""
     nfa = pad_states(nfa, lane)
     t = nfa.tables
     return base.FilterPlan(
@@ -210,7 +212,8 @@ def _level_plan(engine: str, nfa: NFA, lane: int = 128) -> base.FilterPlan:
             wild=jnp.asarray(nfa.wild_vector()),
             parent_1h=jnp.asarray(nfa.parent_onehot()),
         ),
-        meta={"n_states": int(t.in_state.shape[0]), "n_tags": nfa.n_tags},
+        meta={"n_states": int(t.in_state.shape[0]), "n_tags": nfa.n_tags,
+              "state_multiple": lane},
     )
 
 
@@ -402,9 +405,26 @@ def _run_wavefront_kernel(tags, parent_idx, valid, event_idx,
     return matched, first
 
 
+class _LevelShardedMixin:
+    """Shared sharded-contract bits of the levelwise family: the REQ
+    pre-decoder is (T, S), so uniform stacking also needs a uniform tag
+    space — pad ``n_tags`` to a bucket so churn that introduces new tags
+    rarely forces a global re-pad."""
+
+    def part_pads(self, parts, *, query_bucket: int = 8):
+        pads = super().part_pads(parts, query_bucket=query_bucket)
+        if pads:
+            pads["n_tags"] = base._round_up(
+                max((nfa.n_tags for nfa in parts), default=1), 16)
+        return pads
+
+
 @base.register("wavefront")
-class WavefrontEngine(base.FilterEngine):
+class WavefrontEngine(_LevelShardedMixin, base.FilterEngine):
     """Chunked-wavefront levelwise engine (§Perf-filter iteration 1)."""
+
+    state_multiple = 128
+    device_sharded = True
 
     def __init__(self, nfa: NFA, dictionary=None, chunk: int = 128,
                  use_kernel: bool = False, **options) -> None:
@@ -413,31 +433,29 @@ class WavefrontEngine(base.FilterEngine):
         super().__init__(nfa, dictionary, **options)
 
     def plan(self, nfa: NFA) -> base.FilterPlan:
-        return _level_plan("wavefront", nfa)
+        return _level_plan("wavefront", nfa, self.state_multiple)
 
-    def _call(self, cd_tags, cd_parent, cd_valid, cd_eidx):
-        p = self.plan_
+    def _run_one(self, plan, cd_tags, cd_parent, cd_valid, cd_eidx):
         if self.use_kernel:
             return _run_wavefront_kernel(
-                jnp.asarray(cd_tags), jnp.asarray(cd_parent),
-                jnp.asarray(cd_valid), jnp.asarray(cd_eidx),
-                p["selfloop"], p["init"], p["accept_state"], p["req"],
-                p["wild"], p["parent_1h"],
-                n_states=p.meta["n_states"], n_tags=p.meta["n_tags"])
+                cd_tags, cd_parent, cd_valid, cd_eidx,
+                plan["selfloop"], plan["init"], plan["accept_state"],
+                plan["req"], plan["wild"], plan["parent_1h"],
+                n_states=plan.meta["n_states"], n_tags=plan.meta["n_tags"])
         return _run_wavefront(
-            jnp.asarray(cd_tags), jnp.asarray(cd_parent),
-            jnp.asarray(cd_valid), jnp.asarray(cd_eidx),
-            p["in_state"], p["in_tag"], p["selfloop"], p["init"],
-            p["accept_state"],
-            n_states=p.meta["n_states"], n_tags=p.meta["n_tags"])
+            cd_tags, cd_parent, cd_valid, cd_eidx,
+            plan["in_state"], plan["in_tag"], plan["selfloop"],
+            plan["init"], plan["accept_state"],
+            n_states=plan.meta["n_states"], n_tags=plan.meta["n_tags"])
 
     def filter_document(self, ev: EventStream) -> FilterResult:
         cd = chunkize(ev, self.chunk)
-        matched, first = self._call(cd.tags, cd.parent_idx, cd.valid,
-                                    cd.event_idx)
+        matched, first = self._run_one(
+            self.plan_, jnp.asarray(cd.tags), jnp.asarray(cd.parent_idx),
+            jnp.asarray(cd.valid), jnp.asarray(cd.event_idx))
         return FilterResult(np.asarray(matched), np.asarray(first))
 
-    def filter_batch(self, batch: EventBatch) -> FilterResult:
+    def _prep(self, batch: EventBatch) -> tuple:
         # precomputed batch structure → no per-event host re-walk
         cds = [chunkize_level(ld, self.chunk)
                for ld in _leveldocs_of_batch(batch)]
@@ -471,13 +489,17 @@ class WavefrontEngine(base.FilterEngine):
             parent = np.where(c.parent_idx >= nc * c.chunk, nc * c.chunk,
                               c.parent_idx)
             fixed.append(ChunkDoc(c.tags, parent, c.valid, c.event_idx))
-        fn = jax.vmap(self._call, in_axes=(0, 0, 0, 0))
-        matched, first = fn(
-            np.stack([c.tags for c in fixed]),
-            np.stack([c.parent_idx for c in fixed]),
-            np.stack([c.valid for c in fixed]),
-            np.stack([c.event_idx for c in fixed]))
-        return FilterResult(np.asarray(matched), np.asarray(first))
+        return (jnp.asarray(np.stack([c.tags for c in fixed])),
+                jnp.asarray(np.stack([c.parent_idx for c in fixed])),
+                jnp.asarray(np.stack([c.valid for c in fixed])),
+                jnp.asarray(np.stack([c.event_idx for c in fixed])))
+
+    def _run_with_plan(self, plan: base.FilterPlan, prep: tuple):
+        return jax.vmap(
+            lambda t, p_, v, e: self._run_one(plan, t, p_, v, e))(*prep)
+
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        return self.filter_batch_with_plan(self.plan_, batch)
 
     def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
         """Legacy list API (prefer :meth:`filter_batch`)."""
@@ -486,7 +508,10 @@ class WavefrontEngine(base.FilterEngine):
 
 
 @base.register("levelwise")
-class LevelwiseEngine(base.FilterEngine):
+class LevelwiseEngine(_LevelShardedMixin, base.FilterEngine):
+    state_multiple = 128
+    device_sharded = True
+
     def __init__(self, nfa: NFA, dictionary=None, use_matmul: bool = True,
                  use_kernel: bool = False, **options) -> None:
         self.use_matmul = use_matmul
@@ -494,30 +519,36 @@ class LevelwiseEngine(base.FilterEngine):
         super().__init__(nfa, dictionary, **options)
 
     def plan(self, nfa: NFA) -> base.FilterPlan:
-        return _level_plan("levelwise", nfa)
+        return _level_plan("levelwise", nfa, self.state_multiple)
 
-    def _call(self, ld_tags, ld_parent, ld_valid, ld_eidx):
-        p = self.plan_
+    def _run_one(self, plan, ld_tags, ld_parent, ld_valid, ld_eidx):
         return _run_level(
-            jnp.asarray(ld_tags), jnp.asarray(ld_parent),
-            jnp.asarray(ld_valid), jnp.asarray(ld_eidx),
-            p["in_state"], p["in_tag"], p["selfloop"], p["init"],
-            p["accept_state"], p["req"], p["wild"], p["parent_1h"],
-            n_states=p.meta["n_states"], n_tags=p.meta["n_tags"],
+            ld_tags, ld_parent, ld_valid, ld_eidx,
+            plan["in_state"], plan["in_tag"], plan["selfloop"],
+            plan["init"], plan["accept_state"], plan["req"], plan["wild"],
+            plan["parent_1h"],
+            n_states=plan.meta["n_states"], n_tags=plan.meta["n_tags"],
             use_matmul=self.use_matmul, use_kernel=self.use_kernel)
 
     def filter_document(self, ev: EventStream) -> FilterResult:
         ld = levelize(ev)
-        matched, first = self._call(ld.tags, ld.parent_slot, ld.valid,
-                                    ld.event_idx)
+        matched, first = self._run_one(
+            self.plan_, jnp.asarray(ld.tags), jnp.asarray(ld.parent_slot),
+            jnp.asarray(ld.valid), jnp.asarray(ld.event_idx))
         return FilterResult(np.asarray(matched), np.asarray(first))
 
-    def filter_batch(self, batch: EventBatch) -> FilterResult:
+    def _prep(self, batch: EventBatch) -> tuple:
         # precomputed batch structure → no per-event host re-walk
         ld = _stack_leveldocs(_leveldocs_of_batch(batch))
-        fn = jax.vmap(self._call, in_axes=(0, 0, 0, 0))
-        matched, first = fn(ld.tags, ld.parent_slot, ld.valid, ld.event_idx)
-        return FilterResult(np.asarray(matched), np.asarray(first))
+        return (jnp.asarray(ld.tags), jnp.asarray(ld.parent_slot),
+                jnp.asarray(ld.valid), jnp.asarray(ld.event_idx))
+
+    def _run_with_plan(self, plan: base.FilterPlan, prep: tuple):
+        return jax.vmap(
+            lambda t, p_, v, e: self._run_one(plan, t, p_, v, e))(*prep)
+
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        return self.filter_batch_with_plan(self.plan_, batch)
 
     def filter_documents_batched(self, docs: list[EventStream]) -> list[FilterResult]:
         """Legacy list API (prefer :meth:`filter_batch`)."""

@@ -108,6 +108,8 @@ def _scan_batch(step_tags: jax.Array, accept_idx: jax.Array,
 class MatscanEngine(base.FilterEngine):
     """Batched per-query (k+1)×(k+1) transition-matrix scans."""
 
+    device_sharded = True
+
     def __init__(self, nfa: NFA | list[Query],
                  dictionary: TagDictionary | None = None, **options) -> None:
         if dictionary is None:
@@ -119,23 +121,60 @@ class MatscanEngine(base.FilterEngine):
         super().__init__(nfa, dictionary, **options)
 
     def plan(self, nfa: NFA) -> base.FilterPlan:
+        return self._build_plan(nfa, kmax=None, n_queries=None)
+
+    def _build_plan(self, nfa: NFA, kmax: int | None,
+                    n_queries: int | None) -> base.FilterPlan:
+        """Plan with optional uniform pads (the sharded-part compile).
+
+        Padding queries carry no matchable steps (all ``-1``) and accept
+        at index ``kmax`` — unreachable, since getting there would need a
+        step-``kmax`` tag match that ``-1`` never produces; padding step
+        columns likewise never advance or negate anything.
+        """
         queries = list(nfa.queries)
-        kmax = max(q.length for q in queries)
-        # step_tags[q, i] = tag id of step i (or -1 past the end)
-        step_tags = np.full((len(queries), kmax), -1, np.int32)
+        for q in queries:
+            _check_supported(q)  # churn-added queries re-checked here
+        kmax = max([q.length for q in queries] + [kmax or 1])
+        nq = max(n_queries or 0, len(queries))
+        step_tags = np.full((nq, kmax), -1, np.int32)
+        accept_idx = np.full(nq, kmax, np.int32)
         for qi, q in enumerate(queries):
             for i, st in enumerate(q.steps):
                 step_tags[qi, i] = self.dictionary.add(st.tag)
+            accept_idx[qi] = q.length  # accept index = its own length
         return base.FilterPlan(
             "matscan",
             tables=dict(
                 step_tags=jnp.asarray(step_tags),
-                # accept index per query = its own length
-                accept_idx=jnp.asarray(
-                    np.array([q.length for q in queries], np.int32)),
+                accept_idx=jnp.asarray(accept_idx),
             ),
-            meta={"kmax": kmax, "n_queries": len(queries)},
+            meta={"kmax": kmax, "n_queries": nq},
         )
+
+    # ------------------------------------------------------- sharded hooks
+    def part_pads(self, parts, *, query_bucket: int = 8):
+        """Uniform (Q, kmax) table shape across parts; no state axis —
+        matscan's 'states' are per-query step indices."""
+        kmax = max((q.length for nfa in parts for q in nfa.queries),
+                   default=1)
+        nq = max((nfa.n_queries for nfa in parts), default=1)
+        return {"kmax": kmax,
+                "n_queries": base._round_up(max(nq, 1), query_bucket)}
+
+    def plan_part(self, nfa: NFA, pads) -> base.FilterPlan:
+        if not pads:
+            return self.plan(nfa)
+        return self._build_plan(nfa, kmax=pads["kmax"],
+                                n_queries=pads["n_queries"])
+
+    def _prep(self, batch: EventBatch) -> tuple:
+        return (jnp.asarray(batch.kind.astype(np.int32)),
+                jnp.asarray(batch.tag_id))
+
+    def _run_with_plan(self, plan: base.FilterPlan, prep: tuple):
+        kind, tag = prep
+        return _scan_batch(plan["step_tags"], plan["accept_idx"], kind, tag)
 
     def filter_document(self, ev: EventStream) -> FilterResult:
         p = self.plan_
@@ -145,12 +184,7 @@ class MatscanEngine(base.FilterEngine):
         return FilterResult(np.asarray(matched), np.asarray(first))
 
     def filter_batch(self, batch: EventBatch) -> FilterResult:
-        p = self.plan_
-        matched, first = _scan_batch(
-            p["step_tags"], p["accept_idx"],
-            jnp.asarray(batch.kind.astype(np.int32)),
-            jnp.asarray(batch.tag_id))
-        return FilterResult(np.asarray(matched), np.asarray(first))
+        return self.filter_batch_with_plan(self.plan_, batch)
 
 
 def exact_class(ev: EventStream) -> bool:

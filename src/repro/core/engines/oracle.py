@@ -78,7 +78,9 @@ class OracleEngine(base.FilterEngine):
     """Registry adapter over the recursive ground truth.
 
     Needs the tag dictionary (queries carry tag *names*); "compilation"
-    is just resolving names to ids once.
+    is just resolving names to ids once.  Host engine: sharded plans are
+    looped part by part (the equivalence oracle for the device engines'
+    stacked execution).
     """
 
     def __init__(self, nfa: NFA, dictionary: TagDictionary | None = None,
@@ -99,6 +101,12 @@ class OracleEngine(base.FilterEngine):
         # resolution happened once, in plan()
         return _filter_resolved(self._steps, ev)
 
-    def filter_batch(self, batch: EventBatch) -> FilterResult:
+    def filter_batch_with_plan(self, plan: base.FilterPlan,
+                               batch: EventBatch) -> FilterResult:
+        steps = plan.meta["steps"]
         return FilterResult.stack(
-            [self.filter_document(ev) for ev in batch.to_host().streams()])
+            [_filter_resolved(steps, ev)
+             for ev in batch.to_host().streams()])
+
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        return self.filter_batch_with_plan(self.plan_, batch)

@@ -133,13 +133,22 @@ def _run_bytes_batch(plan: base.FilterPlan, data: jax.Array,
 class StreamingEngine(base.FilterEngine):
     """Public API: compile once (``plan``), filter many documents."""
 
+    #: packed-word layout: the state axis must tile into 32-bit words
+    state_multiple = 32
+    device_sharded = True
+
     def __init__(self, nfa: NFA, dictionary=None, max_depth: int = 64,
                  **options) -> None:
         self.max_depth = max_depth
+        sm = int(options.get("state_multiple", self.state_multiple))
+        if sm % 32 != 0:
+            raise ValueError(
+                f"streaming packs 32-state words; state_multiple={sm} "
+                f"is not a multiple of 32")
         super().__init__(nfa, dictionary, **options)
 
     def plan(self, nfa: NFA) -> base.FilterPlan:
-        nfa = pad_states(nfa, 32)
+        nfa = pad_states(nfa, self.state_multiple)
         t = nfa.tables
         init_words = jax.device_get(
             _pack_words(jnp.asarray(t.init.astype(np.int32))))
@@ -153,8 +162,18 @@ class StreamingEngine(base.FilterEngine):
                 accept_state=jnp.asarray(t.accept_state),
             ),
             meta={"n_states": int(t.in_state.shape[0]),
-                  "max_depth": self.max_depth},
+                  "max_depth": self.max_depth,
+                  "state_multiple": self.state_multiple},
         )
+
+    # --------------------------------------------------- explicit-plan body
+    def _prep(self, batch: EventBatch) -> tuple:
+        return (jnp.asarray(batch.kind.astype(np.int32)),
+                jnp.asarray(batch.tag_id))
+
+    def _run_with_plan(self, plan: base.FilterPlan, prep: tuple):
+        kind, tag = prep
+        return _run_batch(plan, kind, tag)
 
     def filter_document(self, ev: EventStream) -> FilterResult:
         p = self.plan_
@@ -167,11 +186,7 @@ class StreamingEngine(base.FilterEngine):
         return FilterResult(np.asarray(matched), np.asarray(first))
 
     def filter_batch(self, batch: EventBatch) -> FilterResult:
-        matched, first = _run_batch(
-            self.plan_,
-            jnp.asarray(batch.kind.astype(np.int32)),
-            jnp.asarray(batch.tag_id))
-        return FilterResult(np.asarray(matched), np.asarray(first))
+        return self.filter_batch_with_plan(self.plan_, batch)
 
     def filter_bytes(self, bb: ByteBatch, *,
                      bucket: int = 128) -> FilterResult:

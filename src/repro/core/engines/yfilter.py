@@ -43,7 +43,12 @@ def _adjacency(nfa: NFA):
 
 @base.register("yfilter")
 class YFilterEngine(base.FilterEngine):
-    """Precompiled adjacency-list execution of the shared NFA."""
+    """Precompiled adjacency-list execution of the shared NFA.
+
+    Host engine: sharded plans are looped part by part — the software
+    baseline doubles as a second equivalence oracle for the stacked
+    device execution.
+    """
 
     def plan(self, nfa: NFA) -> base.FilterPlan:
         # host tables, not device arrays — the plan never enters jit
@@ -52,9 +57,13 @@ class YFilterEngine(base.FilterEngine):
 
     # ------------------------------------------------------------------ run
     def filter_document(self, ev: EventStream) -> FilterResult:
-        p = self.plan_
-        matched = np.zeros(self.n_queries, dtype=bool)
-        first = np.full(self.n_queries, NO_MATCH, dtype=np.int32)
+        return self._run_document(self.plan_, ev)
+
+    def _run_document(self, p: base.FilterPlan,
+                      ev: EventStream) -> FilterResult:
+        n_q = p.meta["n_queries"]
+        matched = np.zeros(n_q, dtype=bool)
+        first = np.full(n_q, NO_MATCH, dtype=np.int32)
         stack: list[frozenset[int]] = [p["init"]]
         kinds = ev.kind
         tags = ev.tag_id
@@ -90,6 +99,11 @@ class YFilterEngine(base.FilterEngine):
                     stack.pop()
         return FilterResult(matched, first)
 
-    def filter_batch(self, batch: EventBatch) -> FilterResult:
+    def filter_batch_with_plan(self, plan: base.FilterPlan,
+                               batch: EventBatch) -> FilterResult:
         return FilterResult.stack(
-            [self.filter_document(ev) for ev in batch.to_host().streams()])
+            [self._run_document(plan, ev)
+             for ev in batch.to_host().streams()])
+
+    def filter_batch(self, batch: EventBatch) -> FilterResult:
+        return self.filter_batch_with_plan(self.plan_, batch)

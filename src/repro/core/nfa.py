@@ -224,15 +224,28 @@ def compile_queries(
                n_tags=max(len(dictionary), 1))
 
 
-def pad_states(nfa: NFA, multiple: int = 128) -> NFA:
+def pad_states(nfa: NFA, multiple: int = 128, *, to: int | None = None) -> NFA:
     """Pad the state space to a lane-aligned multiple (TPU tiling).
+
+    ``multiple`` comes from the engine's plan metadata
+    (:attr:`repro.core.engines.base.FilterEngine.state_multiple`): the
+    streaming engine packs 32-state words, the MXU engines want 128-lane
+    tiles, host engines need no padding at all.  ``to`` pads to an exact
+    state count instead (used by sharded plans, where every partition
+    must share one padded state space so per-part tables stack along a
+    leading axis).
 
     Padding states are inert: parent = self? No — parent 0 with NEVER tag
     and no selfloop, never active.
     """
     t = nfa.tables
     s = t.in_state.shape[0]
-    padded = -s % multiple
+    if to is not None:
+        if to < s:
+            raise ValueError(f"cannot pad {s} states into {to}")
+        padded = to - s
+    else:
+        padded = -s % multiple
     if padded == 0:
         return nfa
     tables = NFATables(
@@ -245,3 +258,126 @@ def pad_states(nfa: NFA, multiple: int = 128) -> NFA:
     )
     return NFA(tables=tables, queries=nfa.queries, shared=nfa.shared,
                n_tags=nfa.n_tags)
+
+
+# ---------------------------------------------------------------- partitioning
+@dataclass(frozen=True)
+class QueryPartition:
+    """Global query id ↔ (part, local column) index of a partitioned set.
+
+    The query axis is the paper's scaling axis (§3.5: replicate query
+    blocks across FPGA area/chips); this index is the software form of
+    "which chip holds which profile".  Global ids are stable across
+    subscription churn — a removed query's id is never reused, its column
+    is tombstoned (``part_of[gid] = -1``) until the owning part is next
+    recompiled.
+
+    ``part_of[gid]``  — owning part, or -1 for removed/dead ids.
+    ``local_of[gid]`` — column inside the owning part's plan.
+    """
+
+    part_of: np.ndarray    # (Qg,) int32, -1 = dead
+    local_of: np.ndarray   # (Qg,) int32
+    n_parts: int
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "part_of",
+                           np.asarray(self.part_of, np.int32))
+        object.__setattr__(self, "local_of",
+                           np.asarray(self.local_of, np.int32))
+        assert self.part_of.shape == self.local_of.shape
+
+    @property
+    def n_global(self) -> int:
+        """Total ids ever issued (alive + tombstoned)."""
+        return int(self.part_of.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return int((self.part_of >= 0).sum())
+
+    def live_ids(self) -> np.ndarray:
+        """Alive global ids, sorted — the canonical global query order."""
+        return np.nonzero(self.part_of >= 0)[0].astype(np.int32)
+
+    def lookup(self, gid: int) -> tuple[int, int]:
+        """(part, local column) of a global id; raises on dead ids."""
+        p = int(self.part_of[gid])
+        if p < 0:
+            raise KeyError(f"query id {gid} is not subscribed")
+        return p, int(self.local_of[gid])
+
+    def part_sizes(self) -> np.ndarray:
+        """(P,) live query count per part — the load-balance view."""
+        alive = self.part_of[self.part_of >= 0]
+        return np.bincount(alive, minlength=self.n_parts).astype(np.int64)
+
+
+def _prefix_key(q: Query) -> tuple[int, str]:
+    """Trie-sharing group key: queries sharing their leading step share
+    the root fan-out of the prefix trie (§3.3), so the partitioner keeps
+    each group on one part instead of splitting the shared prefix."""
+    st = q.steps[0]
+    return (st.axis, st.tag)
+
+
+def _query_weight(q: Query) -> int:
+    """State-count estimate of one profile: a match state per step plus
+    a waiting state per descendant step (the unshared upper bound)."""
+    return q.length + sum(1 for st in q.steps if st.axis == DESC)
+
+
+def partition_queries(
+    queries: Sequence[Query],
+    n_parts: int,
+    dictionary: TagDictionary,
+    *,
+    shared: bool = True,
+) -> tuple[list[NFA], QueryPartition]:
+    """Split a subscription set into ``n_parts`` balanced sub-NFAs.
+
+    The split respects shared-prefix trie groups: queries with the same
+    leading step stay on the same part (their prefix states dedup inside
+    that part's trie), and groups are greedily packed onto the least
+    loaded part by estimated state weight — the multi-chip layout of
+    §3.5 where each chip carries a balanced slice of the profile set.
+
+    All tag names are registered in ``dictionary`` *before* any part is
+    compiled, so every sub-NFA sees the same ``n_tags`` — a requirement
+    for stacking per-part tables into one leading-axis device array.
+
+    Returns the per-part NFAs plus the :class:`QueryPartition` index
+    (global query id = position in ``queries``).
+    """
+    if n_parts < 1:
+        raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+    queries = list(queries)
+    # uniform tag-id space across parts (see docstring)
+    for q in queries:
+        for st in q.steps:
+            if st.tag != WILDCARD:
+                dictionary.add(st.tag)
+    # group by shared prefix, heaviest groups first, least-loaded part wins
+    groups: dict[tuple, list[int]] = {}
+    for gid, q in enumerate(queries):
+        groups.setdefault(_prefix_key(q), []).append(gid)
+    weight = {k: sum(_query_weight(queries[g]) for g in gids)
+              for k, gids in groups.items()}
+    order = sorted(groups, key=lambda k: (-weight[k], k))
+    load = [0] * n_parts
+    members: list[list[int]] = [[] for _ in range(n_parts)]
+    for k in order:
+        p = min(range(n_parts), key=lambda i: (load[i], i))
+        members[p].extend(groups[k])
+        load[p] += weight[k]
+    part_of = np.full(len(queries), -1, np.int32)
+    local_of = np.zeros(len(queries), np.int32)
+    parts: list[NFA] = []
+    for p, gids in enumerate(members):
+        gids.sort()  # deterministic local order = global order restricted
+        for c, gid in enumerate(gids):
+            part_of[gid] = p
+            local_of[gid] = c
+        parts.append(compile_queries([queries[g] for g in gids], dictionary,
+                                     shared=shared))
+    return parts, QueryPartition(part_of, local_of, n_parts)

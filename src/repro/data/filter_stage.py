@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Iterable, Iterator, Sequence
+from typing import Any, Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -64,6 +64,15 @@ class FilterStage:
     padded to the next multiple, capping the number of distinct shapes
     the device engines compile for; ``byte_bucket`` does the same for the
     raw-byte axis of the device-ingest path (:meth:`route_bytes`).
+
+    ``query_shards > 1`` partitions the subscription set into that many
+    balanced parts (:meth:`FilterEngine.plan_sharded`) and filters
+    through the sharded path — all parts in one stacked device program,
+    spread over ``mesh``'s ``"model"`` axis when one is given.  Routing
+    is by **global query id** through the partition index, so documents
+    fan out to data shards identically with and without query sharding.
+    Subscriptions can then churn live: :meth:`subscribe` recompiles only
+    the least-loaded part, :meth:`unsubscribe` is pure metadata.
     """
 
     profiles: Sequence[Query]
@@ -74,21 +83,89 @@ class FilterStage:
     batch_size: int = 32
     bucket: int = 128
     byte_bucket: int = 1024
+    query_shards: int = 1
+    mesh: Any = None
     shard_of_profile: np.ndarray = field(default=None)  # type: ignore
     stats: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if isinstance(self.profiles[0], str):
             self.profiles = [parse(p) for p in self.profiles]
+        # live subscription set, keyed by stable global query id;
+        # ids are never reused (monotonic counter), matching ShardedPlan
+        self._live: dict[int, Query] = dict(enumerate(self.profiles))
+        self._next_gid = len(self.profiles)
+        self._gids = np.arange(len(self.profiles), dtype=np.int32)
         self.nfa: NFA = compile_queries(list(self.profiles), self.dictionary,
                                         shared=True)
         self._eng = engines.create(self.engine, self.nfa,
                                    dictionary=self.dictionary)
+        self.sharded_ = (self._eng.plan_sharded(self.query_shards)
+                         if self.query_shards > 1 else None)
         if self.shard_of_profile is None:
             self.shard_of_profile = (
                 np.arange(len(self.profiles)) % self.n_shards).astype(np.int32)
         self.stats = {"batches": 0, "docs": 0, "bytes": 0,
                       "seconds": 0.0, "pair_matches": 0, "pairs": 0}
+
+    # --------------------------------------------------- subscription churn
+    def subscribe(self, profile: Query | str, shard: int | None = None) -> int:
+        """Add a standing profile live; returns its global query id.
+
+        Sharded stages recompile only the least-loaded part
+        (:meth:`ShardedPlan.add_queries`); unsharded stages pay the full
+        recompile — the cost gap is the point of query sharding.
+        """
+        q = parse(profile) if isinstance(profile, str) else profile
+        if self.sharded_ is not None:
+            self.sharded_, new = self.sharded_.add_queries([q])
+            gid = new[0]
+            self._live[gid] = q
+            self._gids = self.sharded_.live_ids()
+        else:
+            gid = self._next_gid
+            self._live[gid] = q
+            try:
+                self._recompile()
+            except Exception:
+                # a rejected profile (e.g. matscan's supported subset)
+                # must not poison the stage: restore the previous set
+                del self._live[gid]
+                self._recompile()
+                raise
+        self._next_gid = max(self._next_gid, gid + 1)
+        self._grow_shard_map(gid, shard)
+        return gid
+
+    def unsubscribe(self, gid: int) -> None:
+        """Remove a subscription by global id (live, no re-plan when
+        sharded — the column is tombstoned)."""
+        if gid not in self._live:
+            raise KeyError(f"query id {gid} is not subscribed")
+        del self._live[gid]
+        if self.sharded_ is not None:
+            self.sharded_ = self.sharded_.remove_queries([gid])
+            self._gids = self.sharded_.live_ids()
+        else:
+            self._recompile()
+
+    def _recompile(self) -> None:
+        """Unsharded churn path: from-scratch compile of the live set."""
+        gids = sorted(self._live)
+        self.nfa = compile_queries([self._live[g] for g in gids],
+                                   self.dictionary, shared=True)
+        self._eng = engines.create(self.engine, self.nfa,
+                                   dictionary=self.dictionary)
+        self._gids = np.asarray(gids, np.int32)
+
+    def _grow_shard_map(self, gid: int, shard: int | None) -> None:
+        if gid >= len(self.shard_of_profile):
+            extra = np.arange(len(self.shard_of_profile), gid + 1)
+            self.shard_of_profile = np.concatenate(
+                [self.shard_of_profile,
+                 (extra % self.n_shards).astype(np.int32)])
+        if shard is not None:
+            self.shard_of_profile[gid] = shard
 
     # ----------------------------------------------------------------- run
     def _filter_batch(self, docs: list[EventStream],
@@ -99,7 +176,11 @@ class FilterStage:
         cumulative routing stats."""
         batch = EventBatch.from_streams(docs, bucket=self.bucket)
         t0 = time.perf_counter()
-        res = self._eng.filter_batch(batch)
+        if self.sharded_ is not None:
+            res = self._eng.filter_batch_sharded(batch, self.sharded_,
+                                                 mesh=self.mesh)
+        else:
+            res = self._eng.filter_batch(batch)
         dt = time.perf_counter() - t0
         if record:
             self._record(res, batch.batch_size,
@@ -124,7 +205,12 @@ class FilterStage:
         per-event host Python between payload and verdict."""
         bb = ByteBatch.from_buffers(bufs, bucket=self.byte_bucket)
         t0 = time.perf_counter()
-        res = self._eng.filter_bytes(bb, bucket=self.bucket)
+        if self.sharded_ is not None:
+            res = self._eng.filter_bytes_sharded(bb, self.sharded_,
+                                                 bucket=self.bucket,
+                                                 mesh=self.mesh)
+        else:
+            res = self._eng.filter_bytes(bb, bucket=self.bucket)
         dt = time.perf_counter() - t0
         if record:
             self._record(res, bb.batch_size, bb.nbytes_total(), dt)
@@ -174,13 +260,16 @@ class FilterStage:
                  base: int) -> list[RoutedDocument]:
         out: list[RoutedDocument] = []
         for i, nb in enumerate(nbytes):
-            qids = results[i].matching_queries()
-            if len(qids) == 0:
+            # result columns are live-query columns; route by global id
+            # through the partition index so churn/sharding never change
+            # which data shard a profile delivers to
+            gids = self._gids[results[i].matching_queries()]
+            if len(gids) == 0:
                 if self.keep_unmatched:
-                    out.append(RoutedDocument(base + i, qids, 0, nb))
+                    out.append(RoutedDocument(base + i, gids, 0, nb))
                 continue
-            for shard in np.unique(self.shard_of_profile[qids]):
-                mine = qids[self.shard_of_profile[qids] == shard]
+            for shard in np.unique(self.shard_of_profile[gids]):
+                mine = gids[self.shard_of_profile[gids] == shard]
                 out.append(RoutedDocument(base + i, mine, int(shard), nb))
         return out
 
@@ -197,6 +286,7 @@ class FilterStage:
         dt = max(s["seconds"], 1e-9)
         return {
             "engine": self.engine,
+            "query_shards": self.query_shards,
             "docs": s["docs"],
             "docs_per_s": s["docs"] / dt,
             "mb_per_s": s["bytes"] / 1e6 / dt,

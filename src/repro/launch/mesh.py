@@ -24,5 +24,32 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(model: int = 1):
     """Debug mesh over whatever devices exist (tests, examples)."""
     n = len(jax.devices())
-    assert n % model == 0
+    if model < 1 or n % model != 0:
+        # a real error, not an assert: asserts vanish under ``python -O``
+        raise ValueError(
+            f"cannot build host mesh: {n} devices not divisible by "
+            f"model={model}")
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_filter_mesh(n_parts: int | None = None):
+    """1-D mesh for query-sharded filtering: every device on ``"model"``.
+
+    The filtering stack scales along the *query* axis (the paper's
+    profiles-across-chips replication, §3.5): a
+    :class:`repro.core.engines.base.ShardedPlan` stacks per-part tables
+    on a leading axis and ``shard_map``\\ s them over this mesh's
+    ``"model"`` axis, so each device advances only its slice of the
+    subscription set while documents are replicated.
+
+    ``n_parts`` (when given) shrinks the mesh to the largest device
+    count that divides the part count, so any partition is placeable —
+    e.g. 6 parts on 4 devices yields a 3-device mesh, never an error.
+    """
+    n = len(jax.devices())
+    if n_parts is not None:
+        if n_parts < 1:
+            raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+        while n_parts % n != 0:
+            n -= 1
+    return jax.make_mesh((n,), ("model",))

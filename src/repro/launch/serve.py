@@ -51,6 +51,10 @@ def main() -> None:
                     choices=("events", "bytes"),
                     help="request payload form: pre-parsed event streams "
                          "(host parse) or raw wire bytes parsed on device")
+    ap.add_argument("--query-shards", type=int, default=1,
+                    help="partition the subscription set into this many "
+                         "parts run as one stacked program over the mesh "
+                         "'model' axis (1 = monolithic plan)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced).with_(vocab=256)
@@ -64,9 +68,14 @@ def main() -> None:
     d = TagDictionary()
     dtd.register(d)
     profiles = gen_profiles(dtd, n=32, length=3, seed=0)
+    mesh = None
+    if args.query_shards > 1:
+        from repro.launch.mesh import make_filter_mesh
+        mesh = make_filter_mesh(args.query_shards)
     stage = FilterStage(profiles, d, n_shards=args.replicas,
                         engine=args.filter_engine, keep_unmatched=True,
-                        batch_size=args.batch)
+                        batch_size=args.batch,
+                        query_shards=args.query_shards, mesh=mesh)
     payloads = gen_corpus(dtd, n_docs=args.requests, nodes_per_doc=60,
                           seed=1)
 
@@ -88,8 +97,25 @@ def main() -> None:
     tp = stage.throughput()
     print(f"[serve] routed {args.requests} requests ({args.ingest} ingest) → "
           f"{[len(q) for q in queues]} per replica ({t_route*1e3:.1f} ms; "
-          f"{tp['engine']}: {tp['docs_per_s']:.0f} docs/s, "
-          f"{tp['mb_per_s']:.2f} MB/s)")
+          f"{tp['engine']}×{tp['query_shards']}: "
+          f"{tp['docs_per_s']:.0f} docs/s, {tp['mb_per_s']:.2f} MB/s)")
+
+    # live subscription churn — the defining pub-sub operation, served
+    # without stopping the stream: sharded stages recompile only one
+    # partition per op (O(n_queries / query_shards) steady state)
+    churn = gen_profiles(dtd, n=4, length=3, seed=99)
+    t0 = time.perf_counter()
+    gids = [stage.subscribe(q) for q in churn]
+    t_sub = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for gid in gids[:2]:
+        stage.unsubscribe(gid)
+    t_unsub = time.perf_counter() - t0
+    re_routed = sum(len(r) for r in stage.route(payloads[:args.batch]))
+    print(f"[serve] live churn: +{len(gids)} subscriptions "
+          f"({t_sub/len(gids)*1e3:.1f} ms/op), -2 "
+          f"({t_unsub/2*1e3:.1f} ms/op); re-routed {args.batch} requests "
+          f"→ {re_routed} deliveries under the updated subscription set")
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()

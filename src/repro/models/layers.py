@@ -16,26 +16,10 @@ import numpy as np
 from jax.ad_checkpoint import checkpoint_name
 
 from ..sharding import constrain
+from ..sharding.compat import shard_map_compat as _shard_map
 from .config import ModelConfig
 
 Params = dict[str, Any]
-
-
-def _shard_map(f, mesh, in_specs, out_specs):
-    """Version-compat shard_map with replication checking off.
-
-    Newer jax exposes ``jax.shard_map`` taking ``check_vma``; some
-    releases expose ``jax.shard_map`` still taking ``check_rep``; older
-    ones only have the experimental module.  Probe the kwarg instead of
-    trusting the attribute's presence."""
-    sm = getattr(jax, "shard_map", None)
-    if sm is None:
-        from jax.experimental.shard_map import shard_map as sm
-    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    try:
-        return sm(f, **kwargs, check_vma=False)
-    except TypeError:
-        return sm(f, **kwargs, check_rep=False)
 
 
 def dtype_of(cfg: ModelConfig):

@@ -1,0 +1,22 @@
+"""Version-compat wrappers over moving jax APIs."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, across jax versions.
+
+    Newer jax exposes ``jax.shard_map`` taking ``check_vma``; some
+    releases expose ``jax.shard_map`` still taking ``check_rep``; older
+    ones only have the experimental module.  Probe the kwarg instead of
+    trusting the attribute's presence.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return sm(f, **kwargs, check_vma=False)
+    except TypeError:
+        return sm(f, **kwargs, check_rep=False)

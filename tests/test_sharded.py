@@ -1,0 +1,466 @@
+"""Sharded query plans: partitioning, stacked execution, churn.
+
+PR-level contract: for every registered engine, ``filter_batch_sharded``
+over {1, 2, 4} parts is bit-identical to the unsharded ``filter_batch``
+and to the oracle; a random subscribe/unsubscribe sequence keeps a
+``ShardedPlan``'s verdicts equal to a from-scratch compile of the final
+query set.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI
+multi-device step) the same tests exercise the real ``shard_map`` path
+with a >1-device mesh; single-device runs cover the vmap fallback.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core import engines
+from repro.core.area import SCENARIOS, area_report, area_report_sharded
+from repro.core.dictionary import TagDictionary
+from repro.core.engines.matscan import exact_class
+from repro.core.engines.oracle import filter_document as oracle_filter
+from repro.core.events import EventBatch, ByteBatch, encode_bytes
+from repro.core.nfa import compile_queries, pad_states, partition_queries
+from repro.core.xpath import parse
+from repro.data.filter_stage import FilterStage
+from repro.data.generator import DTD, gen_corpus, gen_document, gen_profiles
+from repro.launch.mesh import make_filter_mesh, make_host_mesh
+
+ALL_ENGINES = ("levelwise", "matscan", "oracle", "streaming", "wavefront",
+               "yfilter")
+
+
+def _workload(engine: str, seed: int = 0, n_docs: int = 5, n_queries: int = 18):
+    """Profiles + docs valid for ``engine`` (matscan: descendant-only
+    concrete-tag profiles on exact-class documents)."""
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    if engine == "matscan":
+        profiles = gen_profiles(dtd, n=n_queries, length=3, p_desc=1.0,
+                                p_wild=0.0, seed=seed)
+        docs = [doc for i in range(40 * n_docs)
+                if exact_class(doc := gen_document(dtd, target_nodes=20,
+                                                   max_depth=4,
+                                                   seed=seed + i))][:n_docs]
+        assert len(docs) == n_docs, "not enough exact-class documents"
+    else:
+        profiles = gen_profiles(dtd, n=n_queries, length=3, p_desc=0.4,
+                                p_wild=0.15, seed=seed)
+        docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=60, seed=seed)
+    return profiles, docs, d
+
+
+# -------------------------------------------------------------- partitioning
+class TestPartitionQueries:
+    def _parts(self, n_parts, n=20, seed=0):
+        dtd = DTD.generate(n_tags=24, seed=seed)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=n, length=3, seed=seed)
+        return qs, *partition_queries(qs, n_parts, d)
+
+    def test_round_trip_mapping(self):
+        qs, parts, part = self._parts(3)
+        assert part.n_parts == 3
+        assert part.n_global == len(qs)
+        assert part.n_live == len(qs)
+        for gid in range(len(qs)):
+            p, c = part.lookup(gid)
+            assert parts[p].queries[c] == qs[gid]
+
+    def test_partition_is_balanced(self):
+        qs, parts, part = self._parts(4, n=40)
+        sizes = part.part_sizes()
+        assert sizes.sum() == 40
+        # greedy packing cannot be off by more than one prefix group
+        group_sizes: dict = {}
+        for q in qs:
+            key = (q.steps[0].axis, q.steps[0].tag)
+            group_sizes[key] = group_sizes.get(key, 0) + 1
+        assert sizes.max() - sizes.min() <= max(group_sizes.values())
+
+    def test_shared_prefix_groups_stay_together(self):
+        qs, parts, part = self._parts(4, n=40)
+        group_part = {}
+        for gid, q in enumerate(qs):
+            key = (q.steps[0].axis, q.steps[0].tag)
+            p = int(part.part_of[gid])
+            assert group_part.setdefault(key, p) == p, \
+                "prefix group split across parts"
+
+    def test_all_tags_registered_uniformly(self):
+        qs, parts, part = self._parts(3)
+        assert len({nfa.n_tags for nfa in parts}) == 1
+
+    def test_n_parts_validation(self):
+        with pytest.raises(ValueError, match="n_parts"):
+            self._parts(0)
+
+    def test_more_parts_than_groups_leaves_empty_parts_working(self):
+        d = TagDictionary()
+        qs = [parse("a//b"), parse("a/c")]  # one prefix group
+        parts, part = partition_queries(qs, 3, d)
+        assert part.part_sizes().sum() == 2
+        assert sum(nfa.n_queries == 0 for nfa in parts) == 2
+
+
+# ------------------------------------------------------------- pad threading
+class TestPadStates:
+    def test_pad_to_exact(self):
+        d = TagDictionary.build(["a", "b"])
+        nfa = compile_queries([parse("a//b")], d)
+        assert pad_states(nfa, to=nfa.n_states).n_states == nfa.n_states
+        assert pad_states(nfa, to=50).n_states == 50
+        with pytest.raises(ValueError):
+            pad_states(nfa, to=1)
+
+    def test_engine_threads_state_multiple(self):
+        """The pad multiple comes from the engine, not a hard-coded 128:
+        a small profile set on a lane-8 engine stays small."""
+        d = TagDictionary.build(["a", "b"])
+        nfa = compile_queries([parse("a//b")], d)
+        small = engines.create("levelwise", nfa, dictionary=d,
+                               state_multiple=8)
+        big = engines.create("levelwise", nfa, dictionary=d)
+        assert small.plan_.meta["state_multiple"] == 8
+        assert small.plan_.meta["n_states"] == 8
+        assert big.plan_.meta["n_states"] == 128
+        profiles, docs, dd = _workload("levelwise", seed=2)
+        nfa2 = compile_queries(profiles, dd, shared=True)
+        a = engines.create("levelwise", nfa2, dictionary=dd,
+                           state_multiple=8)
+        b = engines.create("levelwise", nfa2, dictionary=dd)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        ra, rb = a.filter_batch(batch), b.filter_batch(batch)
+        np.testing.assert_array_equal(ra.matched, rb.matched)
+
+    def test_streaming_rejects_unpacked_multiple(self):
+        d = TagDictionary.build(["a", "b"])
+        nfa = compile_queries([parse("a//b")], d)
+        with pytest.raises(ValueError, match="multiple of 32"):
+            engines.create("streaming", nfa, dictionary=d, state_multiple=8)
+
+
+# ----------------------------------------------------------------- the mesh
+class TestMesh:
+    def test_make_host_mesh_raises_value_error(self):
+        import jax
+        n = len(jax.devices())
+        with pytest.raises(ValueError, match=f"{n} devices"):
+            make_host_mesh(n + 1)
+
+    def test_make_filter_mesh_is_1d_model(self):
+        mesh = make_filter_mesh()
+        assert tuple(mesh.axis_names) == ("model",)
+
+    def test_make_filter_mesh_divides_parts(self):
+        import jax
+        mesh = make_filter_mesh(3)  # 3 parts always placeable
+        assert 3 % dict(mesh.shape)["model"] == 0
+        assert dict(make_filter_mesh(
+            len(jax.devices())).shape)["model"] == len(jax.devices())
+
+
+# ------------------------------------------- sharded-vs-unsharded equivalence
+class TestShardedEquivalence:
+    """Acceptance: every engine, {1,2,4} parts, bit-identical to the
+    unsharded batched path and to the per-document oracle."""
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    @pytest.mark.parametrize("n_parts", [1, 2, 4])
+    def test_sharded_equals_unsharded_and_oracle(self, name, n_parts):
+        profiles, docs, d = _workload(name, seed=1)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        want = eng.filter_batch(batch)
+        sp = eng.plan_sharded(n_parts)
+        got = eng.filter_batch_sharded(batch, sp)
+        np.testing.assert_array_equal(got.matched, want.matched,
+                                      err_msg=f"{name}/{n_parts} matched")
+        np.testing.assert_array_equal(got.first_event, want.first_event,
+                                      err_msg=f"{name}/{n_parts} location")
+        for i, doc in enumerate(docs):
+            ref = oracle_filter(nfa, doc, d)
+            np.testing.assert_array_equal(got[i].matched, ref.matched,
+                                          err_msg=f"{name}/{n_parts} oracle")
+
+    @pytest.mark.parametrize("name", ("streaming", "levelwise", "wavefront",
+                                      "matscan"))
+    def test_sharded_over_mesh(self, name):
+        """shard_map path: parts spread over the mesh "model" axis (with
+        XLA_FLAGS=--xla_force_host_platform_device_count=4 this runs on
+        a real 4-device mesh; single-device runs still cross shard_map)."""
+        profiles, docs, d = _workload(name, seed=4)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        want = eng.filter_batch(batch)
+        mesh = make_filter_mesh(4)
+        sp = eng.plan_sharded(4)
+        got = eng.filter_batch_sharded(batch, sp, mesh=mesh)
+        np.testing.assert_array_equal(got.matched, want.matched)
+        np.testing.assert_array_equal(got.first_event, want.first_event)
+
+    def test_sharded_bytes_path(self):
+        profiles, docs, d = _workload("streaming", seed=3)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d)
+        sp = eng.plan_sharded(2)
+        bb = ByteBatch.from_buffers(
+            [encode_bytes(x, text_fill=8) for x in docs], bucket=1024)
+        got = eng.filter_bytes_sharded(bb, sp)
+        want = eng.filter_batch(EventBatch.from_streams(docs, bucket=128))
+        np.testing.assert_array_equal(got.matched, want.matched)
+
+    def test_mesh_part_mismatch_raises(self):
+        import jax
+        if len(jax.devices()) == 1:
+            pytest.skip("needs >1 device for an indivisible mesh")
+        profiles, docs, d = _workload("streaming", seed=0)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d)
+        sp = eng.plan_sharded(3)
+        mesh = make_filter_mesh()  # all devices
+        if 3 % dict(mesh.shape)["model"] == 0:
+            pytest.skip("device count divides 3")
+        with pytest.raises(ValueError, match="not divisible"):
+            eng.filter_batch_sharded(
+                EventBatch.from_streams(docs), sp, mesh=mesh)
+
+
+# ----------------------------------------------------------- churn semantics
+def _fresh_verdict(engine, queries, d, batch):
+    nfa = compile_queries(list(queries), d, shared=True)
+    eng = engines.create(engine, nfa, dictionary=d)
+    return eng.filter_batch(batch)
+
+
+class TestChurn:
+    def _setup(self, engine="streaming", seed=0, n=16):
+        profiles, docs, d = _workload(engine, seed=seed, n_queries=n)
+        pool = gen_profiles(DTD.generate(n_tags=24, seed=seed), n=40,
+                            length=3, p_desc=0.4, p_wild=0.15,
+                            seed=seed + 31)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(engine, nfa, dictionary=d)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        return eng, eng.plan_sharded(4), pool, d, batch
+
+    def test_add_recompiles_one_part(self):
+        eng, sp, pool, d, batch = self._setup()
+        sp2, gids = sp.add_queries(pool[:2])
+        assert len(gids) == 2
+        # only the least-loaded part's plan object changed (no re-pad)
+        changed = [i for i, (a, b) in enumerate(zip(sp.plans, sp2.plans))
+                   if a is not b]
+        if sp2.pads == sp.pads:
+            assert len(changed) == 1
+        res = eng.filter_batch_sharded(batch, sp2)
+        want = _fresh_verdict("streaming", sp2.live_queries(), d, batch)
+        np.testing.assert_array_equal(res.matched, want.matched)
+
+    def test_churn_with_hot_stacked_cache(self):
+        """Filtering before churn populates the cached stacked tables;
+        adds must update them incrementally (one row overwritten) and
+        removals carry them over — verdicts stay equal to fresh compile."""
+        eng, sp, pool, d, batch = self._setup()
+        eng.filter_batch_sharded(batch, sp)  # hot cache
+        assert sp._stacked is not None
+        sp2, _ = sp.add_queries(pool[:1])
+        if sp2.pads == sp.pads:
+            assert sp2._stacked is not None, "add must restack incrementally"
+        res = eng.filter_batch_sharded(batch, sp2)
+        want = _fresh_verdict("streaming", sp2.live_queries(), d, batch)
+        np.testing.assert_array_equal(res.matched, want.matched)
+        np.testing.assert_array_equal(res.first_event, want.first_event)
+        sp3 = sp2.remove_queries([int(sp2.live_ids()[0])])
+        assert sp3._stacked is sp2._stacked, "remove must not restack"
+        res3 = eng.filter_batch_sharded(batch, sp3)
+        want3 = _fresh_verdict("streaming", sp3.live_queries(), d, batch)
+        np.testing.assert_array_equal(res3.matched, want3.matched)
+
+    def test_remove_is_metadata_only(self):
+        eng, sp, pool, d, batch = self._setup()
+        sp2 = sp.remove_queries([3, 7])
+        assert all(a is b for a, b in zip(sp.plans, sp2.plans)), \
+            "remove must not recompile any part"
+        assert sp2.n_queries == sp.n_queries - 2
+        res = eng.filter_batch_sharded(batch, sp2)
+        want = _fresh_verdict("streaming", sp2.live_queries(), d, batch)
+        np.testing.assert_array_equal(res.matched, want.matched)
+        np.testing.assert_array_equal(res.first_event, want.first_event)
+
+    def test_remove_unknown_raises(self):
+        _, sp, _, _, _ = self._setup()
+        with pytest.raises(KeyError):
+            sp.remove_queries([999])
+        sp2 = sp.remove_queries([0])
+        with pytest.raises(KeyError):
+            sp2.remove_queries([0])  # double-unsubscribe
+
+    def test_tombstone_reclaimed_on_next_add(self):
+        _, sp, pool, _, _ = self._setup()
+        # remove from the currently smallest part → it is strictly the
+        # least loaded, so the next add recompiles it and compacts
+        p = int(np.argmin(sp.part_sizes()))
+        gid = next(int(g) for g in sp.live_ids()
+                   if int(sp.partition.part_of[g]) == p)
+        sp2 = sp.remove_queries([gid])
+        assert -1 in sp2.part_cols[p]
+        sp3, _ = sp2.add_queries([pool[0]])
+        assert -1 not in sp3.part_cols[p], "tombstone not reclaimed"
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_fifty_op_churn_equals_fresh_compile(self, name):
+        """Acceptance: 50 random subscribe/unsubscribe ops ≡ from-scratch
+        compile of the final query set, for every registered engine."""
+        if name == "matscan":
+            dtd = DTD.generate(n_tags=24, seed=2)
+            d = TagDictionary()
+            dtd.register(d)
+            base_qs = gen_profiles(dtd, n=12, length=3, p_desc=1.0,
+                                   p_wild=0.0, seed=2)
+            pool = gen_profiles(dtd, n=60, length=3, p_desc=1.0,
+                                p_wild=0.0, seed=33)
+            docs = [doc for i in range(400)
+                    if exact_class(doc := gen_document(
+                        dtd, target_nodes=20, max_depth=4, seed=i))][:4]
+        else:
+            base_qs, docs, d = _workload(name, seed=2, n_docs=4,
+                                         n_queries=12)
+            pool = gen_profiles(DTD.generate(n_tags=24, seed=2), n=60,
+                                length=3, p_desc=0.4, p_wild=0.15, seed=33)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        eng = engines.create(name,
+                             compile_queries(base_qs, d, shared=True),
+                             dictionary=d)
+        sp = eng.plan_sharded(4)
+        rng = np.random.default_rng(7)
+        live = list(sp.live_ids())
+        k = 0
+        for _ in range(50):
+            if live and rng.random() < 0.45:
+                sp = sp.remove_queries([live.pop(rng.integers(len(live)))])
+            else:
+                sp, gids = sp.add_queries([pool[k % len(pool)]])
+                k += 1
+                live += gids
+        res = eng.filter_batch_sharded(batch, sp)
+        want = _fresh_verdict(name, sp.live_queries(), d, batch)
+        np.testing.assert_array_equal(res.matched, want.matched,
+                                      err_msg=f"{name} churn matched")
+        np.testing.assert_array_equal(res.first_event, want.first_event,
+                                      err_msg=f"{name} churn location")
+
+    @settings(max_examples=8, deadline=None)
+    @given(ops=st.lists(st.integers(min_value=0, max_value=99),
+                        min_size=1, max_size=25),
+           seed=st.integers(min_value=0, max_value=3))
+    def test_property_random_churn_equals_fresh_compile(self, ops, seed):
+        """Hypothesis: ANY add/remove sequence keeps sharded verdicts
+        equal to a from-scratch compile of the surviving query set."""
+        profiles, docs, d = _workload("streaming", seed=seed, n_docs=3,
+                                      n_queries=8)
+        pool = gen_profiles(DTD.generate(n_tags=24, seed=seed), n=50,
+                            length=3, p_desc=0.4, p_wild=0.15,
+                            seed=seed + 13)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        eng = engines.create("streaming",
+                             compile_queries(profiles, d, shared=True),
+                             dictionary=d)
+        sp = eng.plan_sharded(2)
+        live = list(sp.live_ids())
+        k = 0
+        for op in ops:
+            if live and op % 2:
+                sp = sp.remove_queries([live.pop(op % len(live))])
+            else:
+                sp, gids = sp.add_queries([pool[k % len(pool)]])
+                k += 1
+                live += gids
+        res = eng.filter_batch_sharded(batch, sp)
+        want = _fresh_verdict("streaming", sp.live_queries(), d, batch)
+        np.testing.assert_array_equal(res.matched, want.matched)
+        np.testing.assert_array_equal(res.first_event, want.first_event)
+
+
+# --------------------------------------------------------- stage integration
+class TestShardedFilterStage:
+    def _routes(self, stage, docs):
+        got = [r for b in stage.route(docs) for r in b]
+        return {(r.doc_index, r.shard): tuple(r.matched_profiles)
+                for r in got}
+
+    def test_routing_identical_with_and_without_query_shards(self):
+        profiles, docs, _ = _workload("streaming", seed=5, n_docs=8)
+        d1 = TagDictionary()
+        d2 = TagDictionary()
+        mono = FilterStage(profiles, d1, n_shards=3, engine="streaming",
+                           batch_size=3)
+        shard = FilterStage(profiles, d2, n_shards=3, engine="streaming",
+                            batch_size=3, query_shards=4)
+        assert self._routes(mono, docs) == self._routes(shard, docs)
+
+    def test_live_subscribe_unsubscribe_route_parity(self):
+        profiles, docs, _ = _workload("streaming", seed=6, n_docs=6)
+        extra = gen_profiles(DTD.generate(n_tags=24, seed=6), n=3,
+                             length=3, seed=77)
+        d1 = TagDictionary()
+        d2 = TagDictionary()
+        mono = FilterStage(profiles, d1, n_shards=2, engine="streaming",
+                           batch_size=3)
+        shard = FilterStage(profiles, d2, n_shards=2, engine="streaming",
+                            batch_size=3, query_shards=2)
+        for stage in (mono, shard):
+            gids = [stage.subscribe(q) for q in extra]
+            assert gids == sorted(gids)
+            stage.unsubscribe(gids[0])
+            stage.unsubscribe(1)
+        assert self._routes(mono, docs) == self._routes(shard, docs)
+
+    @pytest.mark.parametrize("query_shards", [1, 2])
+    def test_gids_never_reused(self, query_shards):
+        """A freed global id must not be handed to a later subscriber
+        (a stale caller holding it would act on the wrong profile)."""
+        profiles, _, _ = _workload("streaming", seed=0, n_queries=6)
+        extra = gen_profiles(DTD.generate(n_tags=24, seed=0), n=2,
+                             length=3, seed=55)
+        stage = FilterStage(profiles, TagDictionary(), engine="streaming",
+                            query_shards=query_shards)
+        stage.unsubscribe(5)
+        gid = stage.subscribe(extra[0])
+        assert gid == 6, "freed id must not be reused"
+        assert stage.subscribe(extra[1]) == 7
+
+    def test_unsubscribe_unknown_raises(self):
+        profiles, _, _ = _workload("streaming", seed=0)
+        stage = FilterStage(profiles, TagDictionary(), query_shards=2,
+                            engine="streaming")
+        with pytest.raises(KeyError):
+            stage.unsubscribe(10**6)
+
+
+# --------------------------------------------------------------- area model
+class TestShardedArea:
+    def test_one_row_per_part(self):
+        dtd = DTD.generate(n_tags=24, seed=0)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=32, length=3, seed=0)
+        for scenario in SCENARIOS:
+            rows = area_report_sharded(qs, TagDictionary(), scenario, 4)
+            assert len(rows) == 4
+            assert [r.part for r in rows] == [0, 1, 2, 3]
+            assert sum(r.n_queries for r in rows) == 32
+            whole = area_report(qs, TagDictionary(), scenario)
+            # each chip pays its own fixed blocks (char decoder, stack);
+            # net of those, the partitioned total stays within 2× of the
+            # monolithic chip (prefix groups kept together bound the
+            # sharing lost to the split)
+            from repro.core.area import CHARDEC_COST
+            fixed = CHARDEC_COST if scenario.endswith("CharDec") else 0
+            assert sum(r.bit_cost - fixed for r in rows) < 2 * whole.bit_cost
+            assert all(r.bit_cost < whole.bit_cost + fixed for r in rows)
