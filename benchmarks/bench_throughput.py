@@ -223,6 +223,60 @@ def run_query_scaling(query_counts=(100, 1000, 10000),
     return rows
 
 
+def run_doc_scaling(batch_sizes=(8, 32), data_shard_counts=(1, 2, 4),
+                    query_shard_counts=(1, 2), n_queries=128, path_len=3,
+                    nodes_per_doc=200, seed=0, engine="streaming",
+                    repeat=3):
+    """Scaling the *document* axis: the paper's second replication
+    dimension (§3.5 — the stream fanned across replicated filter
+    hardware), measured as a (batch × data-shard × query-shard) grid.
+
+    One row per grid point: raw wire bytes → verdict through the 2-D
+    ``("data", "model")`` program (``filter_bytes_sharded2d``), docs/s
+    and MB/s end to end.  ``data_shards`` records the *placed* mesh
+    axis (the request shrinks to what the host offers — on one device
+    every row is the same program, measuring stacking overhead; on a
+    multi-device host docs/s grows with the data axis because each
+    replica parses and filters only its slice of the stream).
+    """
+    from repro.launch.mesh import make_filter_mesh
+
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    qs = gen_profiles(dtd, n=n_queries, length=path_len, seed=seed + path_len)
+    nfa = compile_queries(qs, d, shared=True)
+    eng = engines.create(engine, nfa, dictionary=d)
+    rows = []
+    for b in batch_sizes:
+        docs = gen_corpus(dtd, n_docs=b, nodes_per_doc=nodes_per_doc,
+                          seed=seed)
+        payloads = [encode_bytes(doc, text_fill=TEXT_FILL) for doc in docs]
+        bb = ByteBatch.from_buffers(payloads, bucket=1024)
+        mb = sum(len(p) for p in payloads) / 1e6
+        for qshards in query_shard_counts:
+            sp = eng.plan_sharded(qshards)
+            for dshards in data_shard_counts:
+                mesh = make_filter_mesh(qshards, data_shards=dshards)
+                shape = dict(mesh.shape)
+                fn = lambda: eng.filter_bytes_sharded2d(  # noqa: E731
+                    bb, sp, mesh=mesh)
+                fn()  # compile warmup
+                t = _time(fn, repeat=repeat)
+                rows.append(
+                    {"bench": "doc_scaling", "engine": engine,
+                     "batch": b, "n_queries": n_queries,
+                     "path_len": path_len,
+                     "data_shards_requested": dshards,
+                     "data_shards": shape["data"],
+                     "query_shards": qshards,
+                     "model_shards": shape["model"],
+                     "doc_mb": round(mb, 3),
+                     "docs_per_s": round(b / t, 2),
+                     "mb_s": round(mb / t, 3)})
+    return rows
+
+
 def run_churn(n_queries=512, n_parts=4, n_ops=16, path_len=3, seed=0,
               engine="streaming"):
     """Subscription-churn latency: the pub-sub system's defining op.
@@ -296,8 +350,24 @@ def main() -> None:
     ap.add_argument("--churn", action="store_true",
                     help="run the subscription-churn latency section "
                          "instead of the Fig-9 sweep")
+    ap.add_argument("--data-shards", type=int, nargs="+", default=None,
+                    metavar="D",
+                    help="run the document-axis scaling grid (batch × "
+                         "data-shard × query-shard, bytes → verdict over "
+                         "the 2-D mesh) instead of the Fig-9 sweep")
     args = ap.parse_args()
     import json
+    if args.data_shards:
+        rows = run_doc_scaling(
+            data_shard_counts=tuple(args.data_shards),
+            query_shard_counts=tuple(args.query_shards or (1, 2)),
+            n_queries=(args.queries or [128])[0],
+            path_len=(args.path_lengths or [3])[0],
+            nodes_per_doc=args.nodes, seed=args.seed,
+            engine=(args.engine or ["streaming"])[0], repeat=args.repeat)
+        for r in rows:
+            print(json.dumps(r))
+        return
     if args.query_shards:
         rows = run_query_scaling(
             query_counts=tuple(args.queries or (100, 1000, 10000)),

@@ -1,0 +1,189 @@
+"""Bench-regression gate: fresh rows vs the committed baseline.
+
+CI runs the bench smoke (``python -m benchmarks.run --json
+BENCH_fresh.json``) and then::
+
+    python benchmarks/compare_baseline.py BENCH_filtering.json \
+        BENCH_fresh.json [BENCH_fresh2.json ...] --threshold 0.25
+
+Rows are matched by their *identity* fields (everything except the
+measured metrics and metric-derived ratios); for every matched row the
+throughput metrics (``docs_per_s``, ``mb_s``) are compared and the gate
+fails when any fresh value regresses more than ``--threshold`` (default
+25%) below the baseline.  Several fresh files may be given — the gate
+takes each row's best measurement across runs, so one noisy run on a
+shared CI machine cannot fail the gate alone (throughput noise is
+one-sided: a machine can only be spuriously *slow*).  Rows present on
+only one side (new benchmark sections, machine-dependent mesh shapes)
+are reported but never fail the gate — adding a benchmark must not
+require regenerating every baseline.
+
+The committed baseline is machine-specific: a CI runner class slower
+than the machine that produced it shifts *every* ratio down together.
+The median ratio is the machine-delta diagnostic, and the gate uses it:
+a row fails only when it regresses beyond the threshold *both* in
+absolute terms and relative to the median (``ratio / median``).  On a
+same-speed machine the median sits at ≈ 1 and the gate is exactly the
+plain per-row check; on a uniformly slower runner the whole-suite shift
+is reported as a baseline-refresh warning instead of failing every row
+at once — a genuine code regression still shows up as an outlier
+against whatever the machine trend is.
+
+A markdown trend table is written to ``$GITHUB_STEP_SUMMARY`` when that
+variable is set (the CI job summary), or to ``--summary PATH``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: measured throughput metrics the gate compares (higher is better)
+METRICS = ("docs_per_s", "mb_s")
+
+#: measurement outputs and derived ratios — never part of a row's identity
+NON_IDENTITY = frozenset(METRICS) | {
+    "speedup_vs_yfilter", "vs_events", "speedup_vs_recompile",
+    "seconds_per_op",
+}
+
+
+def row_key(row: dict) -> str:
+    """Stable identity of a measurement row (config fields only)."""
+    ident = {k: v for k, v in row.items() if k not in NON_IDENTITY}
+    return json.dumps(ident, sort_keys=True)
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    out: dict[str, dict] = {}
+    for row in rows:
+        if any(m in row for m in METRICS):
+            out[row_key(row)] = row
+    return out
+
+
+def merge_best(runs: list[dict[str, dict]]) -> dict[str, dict]:
+    """Per-row best-of across fresh runs (max of each metric)."""
+    out: dict[str, dict] = {}
+    for run in runs:
+        for key, row in run.items():
+            best = out.setdefault(key, dict(row))
+            for metric in METRICS:
+                if metric in row and metric in best:
+                    best[metric] = max(best[metric], row[metric])
+    return out
+
+
+def compare(baseline: dict[str, dict], fresh: dict[str, dict],
+            threshold: float):
+    """→ (table_rows, regressions).
+
+    A row regresses when its ratio is below ``1 - threshold`` both
+    absolutely and after normalizing by the median ratio (the
+    machine-delta correction — see the module docstring).
+    """
+    table = []
+    for key in sorted(baseline.keys() & fresh.keys()):
+        b, f = baseline[key], fresh[key]
+        for metric in METRICS:
+            if metric not in b or metric not in f:
+                continue
+            if not b[metric]:
+                continue  # zero baseline: no ratio to gate on
+            ratio = f[metric] / b[metric]
+            label = "{} {}".format(
+                b.get("bench", "?"),
+                " ".join(f"{k}={v}" for k, v in sorted(b.items())
+                         if k not in NON_IDENTITY and k != "bench"))
+            table.append((label, metric, b[metric], f[metric], ratio))
+    med = median_ratio(table)
+    cut = 1.0 - threshold
+    regressions = [e for e in table
+                   if e[4] < cut and e[4] / max(med, 1e-9) < cut]
+    return table, regressions
+
+
+def median_ratio(table) -> float:
+    """Median fresh/baseline ratio — the machine-delta diagnostic."""
+    ratios = sorted(e[4] for e in table)
+    if not ratios:
+        return 1.0
+    mid = len(ratios) // 2
+    return (ratios[mid] if len(ratios) % 2
+            else (ratios[mid - 1] + ratios[mid]) / 2)
+
+
+def write_summary(path: str, table, regressions, unmatched: int,
+                  threshold: float) -> None:
+    lines = ["## Bench-regression gate", ""]
+    verdict = ("❌ **{} regression(s) beyond {:.0%}**".format(
+        len(regressions), threshold) if regressions
+        else "✅ no regression beyond {:.0%}".format(threshold))
+    med = median_ratio(table)
+    lines += [f"{verdict} ({len(table)} compared metrics, "
+              f"median ratio {med:.2f}×, "
+              f"{unmatched} fresh rows without a baseline)", ""]
+    if med < 1.0 - threshold:
+        lines += ["> The *median* ratio is below the threshold — a "
+                  "runner-class/machine delta, so per-row gating is "
+                  "median-normalized.  Refresh the committed baseline "
+                  "from a green main run's `BENCH_fresh.json` artifact.",
+                  ""]
+    lines += ["| row | metric | baseline | fresh | ratio |",
+              "|---|---|---:|---:|---:|"]
+    # regressions first, then the slowest-trending rows
+    ranked = sorted(table, key=lambda e: e[4])
+    for label, metric, b, f, ratio in ranked[:40]:
+        flag = " ⚠️" if ratio < 1.0 - threshold else ""
+        lines.append(f"| {label} | {metric} | {b:.2f} | {f:.2f} | "
+                     f"{ratio:.2f}×{flag} |")
+    if len(ranked) > 40:
+        lines.append(f"| … {len(ranked) - 40} more | | | | |")
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("baseline", help="committed BENCH_filtering.json")
+    ap.add_argument("fresh", nargs="+",
+                    help="freshly measured rows; several files are "
+                         "merged best-of per row")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional regression "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--summary", default=None,
+                    help="markdown summary path "
+                         "(default: $GITHUB_STEP_SUMMARY when set)")
+    args = ap.parse_args()
+
+    baseline = load_rows(args.baseline)
+    fresh = merge_best([load_rows(p) for p in args.fresh])
+    unmatched = len(fresh.keys() - baseline.keys())
+    table, regressions = compare(baseline, fresh, args.threshold)
+
+    summary = args.summary or os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        write_summary(summary, table, regressions, unmatched,
+                      args.threshold)
+
+    print(f"compared {len(table)} metrics over "
+          f"{len(baseline.keys() & fresh.keys())} matched rows "
+          f"(median ratio {median_ratio(table):.2f}x, "
+          f"{unmatched} fresh rows without a baseline)")
+    for label, metric, b, f, ratio in regressions:
+        print(f"REGRESSION {label} {metric}: {b:.2f} -> {f:.2f} "
+              f"({ratio:.2f}x)", file=sys.stderr)
+    if regressions:
+        print(f"FAIL: {len(regressions)} metric(s) regressed more than "
+              f"{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print(f"OK: no regression beyond {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,6 +11,10 @@ Sections:
   qscale — query_scaling: docs/s as the standing profile set grows
            10²→10⁴, monolithic vs sharded query plans (the paper's
            scalability-in-profiles claim, §3.5)
+  docscale — doc_scaling: docs/s over the (batch × data-shard ×
+           query-shard) grid, bytes → verdict through the 2-D
+           ("data", "model") mesh program (the paper's document-stream
+           replication, §3.5 second axis)
   churn  — churn_latency: per-op subscribe/unsubscribe on a sharded
            plan vs a full recompile
   twig   — twig-pattern filtering cost structure (paper §5 extension)
@@ -37,7 +41,8 @@ def main() -> None:
                     help="paper-scale sweeps (slower)")
     ap.add_argument("--only", default=None,
                     help="run a single section: "
-                         "fig8|fig9|ingest|qscale|churn|twig|roofline")
+                         "fig8|fig9|ingest|qscale|docscale|churn|twig|"
+                         "roofline")
     ap.add_argument("--json", nargs="?", const="BENCH_filtering.json",
                     default=None, metavar="PATH",
                     help="also write rows to a JSON file "
@@ -45,8 +50,8 @@ def main() -> None:
     args = ap.parse_args()
 
     sections = [args.only] if args.only else ["fig8", "fig9", "ingest",
-                                              "qscale", "churn", "twig",
-                                              "roofline"]
+                                              "qscale", "docscale", "churn",
+                                              "twig", "roofline"]
     rows = []
 
     if "fig8" in sections:
@@ -82,6 +87,20 @@ def main() -> None:
             rows += bench_throughput.run_query_scaling(
                 query_counts=(100, 1000, 10000), shard_counts=(1, 2, 4),
                 n_docs=4, nodes_per_doc=120, repeat=1)
+
+    if "docscale" in sections:
+        from benchmarks import bench_throughput
+        if args.full:
+            rows += bench_throughput.run_doc_scaling(
+                batch_sizes=(16, 64), nodes_per_doc=400)
+        else:
+            # acceptance grid: docs/s per (batch, data, query) shard
+            # point — batches big enough that per-shard work dominates
+            # dispatch overhead, so the data-axis slope is visible
+            rows += bench_throughput.run_doc_scaling(
+                batch_sizes=(16,), data_shard_counts=(1, 2, 4),
+                query_shard_counts=(1, 2), n_queries=64,
+                nodes_per_doc=200, repeat=2)
 
     if "churn" in sections:
         from benchmarks import bench_throughput

@@ -35,6 +35,24 @@ profiles-across-chips replication, §3.5):
   with no recompile at all.
 * ``filter_bytes_sharded(bb, sharded)`` — the device-ingest twin.
 
+The **2-D contract** composes both of §3.5's replication axes on one
+``("data", "model")`` mesh (:func:`repro.launch.mesh.make_filter_mesh`
+with ``data_shards=``):
+
+* ``filter_batch_sharded2d(batch, sharded, mesh=...)`` — ONE
+  ``shard_map`` program with the stacked plan tables partitioned over
+  ``"model"`` and the document batch rows over ``"data"``; ragged
+  batches are padded with inert all-PAD documents and sliced back off.
+* ``filter_bytes_sharded2d(bb, sharded, mesh=...)`` — bytes → verdict;
+  engines whose plan metadata records ``prep == "events-device"``
+  (streaming, matscan) fuse the device parse INTO the same per-device
+  body, the paper's same-chip parser+filter replicated in both
+  dimensions.  Host engines loop parts (the bit-equivalence oracle).
+* ``dispatch_batch_sharded2d / dispatch_bytes_sharded2d`` — async
+  forms returning a materializer; the double-buffered serve loop
+  (:meth:`repro.data.filter_stage.FilterStage.route_bytes_pipelined`)
+  overlaps the next batch's ``ByteBatch.device_put`` against them.
+
 Engines self-register under a string key, so construction is uniform::
 
     from repro.core import engines

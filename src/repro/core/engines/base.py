@@ -535,42 +535,53 @@ class FilterEngine(abc.ABC):
             first[:, j] = outs[p].first_event[:, c]
         return FilterResult(matched, first)
 
-    def _run_sharded(self, batch: EventBatch, sharded: ShardedPlan, mesh):
-        """Stacked-parts execution: vmap, or shard_map over the mesh.
-
-        The compiled callable is cached per mesh (jit keys on the plan's
-        pytree structure and the prep shapes, so pad-bucket growth or a
-        new batch shape retraces exactly once).
-        """
-        prep = self._prep(batch)
-        stacked = sharded.stacked()
-        if mesh is not None:
-            axis = dict(mesh.shape).get("model", 1)
-            if axis > 1 and sharded.n_parts % axis != 0:
-                raise ValueError(
-                    f"n_parts={sharded.n_parts} not divisible by mesh "
-                    f"model axis {axis}")
+    def _cached_exec(self, key, build):
+        """Per-engine cache of compiled sharded callables, keyed on the
+        execution form (1d/2d/bytes2d × mesh × static shape knobs); jit
+        keys on the plan pytree structure and prep shapes on top, so
+        pad-bucket growth or a new batch shape retraces exactly once."""
         cache = getattr(self, "_sharded_exec", None)
         if cache is None:
             cache = {}
             self._sharded_exec = cache
-        fn = cache.get(mesh)
+        fn = cache.get(key)
         if fn is None:
-            def vmapped(plan, *prep_args):
-                return jax.vmap(
-                    lambda pl: self._run_with_plan(pl, prep_args))(plan)
+            fn = build()
+            cache[key] = fn
+        return fn
 
+    def _check_model_axis(self, sharded: ShardedPlan, mesh) -> None:
+        if mesh is None:
+            return
+        axis = dict(mesh.shape).get("model", 1)
+        if axis > 1 and sharded.n_parts % axis != 0:
+            raise ValueError(
+                f"n_parts={sharded.n_parts} not divisible by mesh "
+                f"model axis {axis}")
+
+    def _vmapped_parts(self):
+        def vmapped(plan, *prep_args):
+            return jax.vmap(
+                lambda pl: self._run_with_plan(pl, prep_args))(plan)
+        return vmapped
+
+    def _run_sharded(self, batch: EventBatch, sharded: ShardedPlan, mesh):
+        """Stacked-parts execution: vmap, or shard_map over the mesh."""
+        prep = self._prep(batch)
+        stacked = sharded.stacked()
+        self._check_model_axis(sharded, mesh)
+
+        def build():
+            vmapped = self._vmapped_parts()
             if mesh is not None:
                 ps = jax.sharding.PartitionSpec
-                n_prep = len(prep)
-                fn = jax.jit(_shard_map(
+                return jax.jit(_shard_map(
                     vmapped, mesh,
-                    in_specs=(ps("model"),) + (ps(),) * n_prep,
+                    in_specs=(ps("model"),) + (ps(),) * len(prep),
                     out_specs=(ps("model"), ps("model"))))
-            else:
-                fn = jax.jit(vmapped)
-            cache[mesh] = fn
-        return fn(stacked, *prep)
+            return jax.jit(vmapped)
+
+        return self._cached_exec(("1d", mesh), build)(stacked, *prep)
 
     def filter_bytes_sharded(self, bb: ByteBatch, sharded: ShardedPlan, *,
                              bucket: int = 128, mesh=None) -> FilterResult:
@@ -583,6 +594,168 @@ class FilterEngine(abc.ABC):
             parse_batch(bb, n_events=bb.event_bound(bucket=bucket),
                         max_depth=max_depth),
             sharded, mesh=mesh)
+
+    # ------------------------------------------------ 2-D (data × model)
+    def _prep_arrays(self, kind, tag, depth, parent, valid, n_events):
+        """Device-side document prep straight from parse outputs.
+
+        Implemented by engines whose plan metadata records ``prep ==
+        "events-device"`` (streaming, matscan: their compiled program
+        consumes the raw event stream) — what lets the fused
+        bytes→verdict shard_map program run parse *and* filter inside
+        one per-device body.  Engines with host-side prep (the levelwise
+        family buckets by depth in numpy) or host execution never get
+        here.
+        """
+        raise NotImplementedError(
+            f"{self.name}: no device parse prep "
+            f"(plan meta 'prep' is not 'events-device')")
+
+    def _mesh_axes2d(self, mesh) -> tuple[int, int]:
+        if mesh is None:
+            raise ValueError(
+                "the 2-D path needs a ('data', 'model') mesh — see "
+                "repro.launch.mesh.make_filter_mesh(data_shards=...)")
+        shape = dict(mesh.shape)
+        if "data" not in shape or "model" not in shape:
+            raise ValueError(
+                f"2-D filtering needs a ('data', 'model') mesh, got axes "
+                f"{tuple(shape)}")
+        return shape["data"], shape["model"]
+
+    def _gather2d(self, matched, first, sharded: ShardedPlan, b0: int):
+        """Zero-arg materializer over the raw (P, Bpad, Qpad) outputs.
+
+        Calling it blocks on the async device computation, gathers live
+        columns in global-id order and slices off batch-pad rows — the
+        deferred half of :meth:`dispatch_batch_sharded2d`.
+        """
+        part_of, local_of = sharded.index_arrays()
+
+        def materialize() -> FilterResult:
+            m = np.asarray(matched)[part_of, :, local_of].T[:b0]
+            f = np.asarray(first)[part_of, :, local_of].T[:b0]
+            return FilterResult(m, f)
+
+        return materialize
+
+    def dispatch_batch_sharded2d(self, batch: EventBatch,
+                                 sharded: ShardedPlan, *, mesh):
+        """Launch the 2-D (data × model) program; returns a zero-arg
+        materializer — call it to block and get the ``(B, Q_live)``
+        :class:`FilterResult`.
+
+        Both of the paper's replication axes (§3.5) in ONE ``shard_map``
+        program: the stacked per-part plan tables are partitioned over
+        the mesh ``"model"`` axis (each device advances 1/P of the
+        subscription set) and the document batch over ``"data"`` (each
+        replica row sees 1/D of the stream).  The batch axis is padded
+        to a multiple of the data axis with inert all-PAD documents
+        (sliced back off the result), so any batch size is servable.
+
+        Dispatch is asynchronous — the returned callable is the
+        synchronization point, which is what the double-buffered ingest
+        loop overlaps the next batch's ``device_put`` against.  Host
+        engines compute eagerly (the part loop is the bit-equivalence
+        oracle for this path) and return an already-resolved thunk.
+        """
+        if not self.device_sharded:
+            res = self.filter_batch_sharded(batch, sharded)
+            return lambda: res
+        data_ax, _ = self._mesh_axes2d(mesh)
+        self._check_model_axis(sharded, mesh)
+        b0 = batch.batch_size
+        batch = batch.pad_batch_to(_round_up(b0, data_ax))
+        prep = self._prep(batch)
+        stacked = sharded.stacked()
+
+        def build():
+            ps = jax.sharding.PartitionSpec
+            return jax.jit(_shard_map(
+                self._vmapped_parts(), mesh,
+                in_specs=(ps("model"),) + (ps("data"),) * len(prep),
+                out_specs=(ps("model", "data"), ps("model", "data"))))
+
+        matched, first = self._cached_exec(("2d", mesh), build)(
+            stacked, *prep)
+        return self._gather2d(matched, first, sharded, b0)
+
+    def filter_batch_sharded2d(self, batch: EventBatch,
+                               sharded: ShardedPlan, *,
+                               mesh) -> FilterResult:
+        """Blocking convenience over :meth:`dispatch_batch_sharded2d`."""
+        return self.dispatch_batch_sharded2d(batch, sharded, mesh=mesh)()
+
+    def dispatch_bytes_sharded2d(self, bb: ByteBatch, sharded: ShardedPlan,
+                                 *, bucket: int = 128, mesh,
+                                 n_events: int | None = None):
+        """ByteBatch twin of :meth:`dispatch_batch_sharded2d`.
+
+        When the plan's document prep is device-resident (plan metadata
+        ``prep == "events-device"``), this is ONE shard_map bytes→verdict
+        program: each device parses its ``"data"`` slice of the wire
+        bytes locally (the parse kernels inline into the body) and runs
+        its ``"model"`` slice of the stacked plan — the paper's same-chip
+        parser+filter, replicated in both dimensions, with no host hop
+        between payload and verdict.  Engines with host-side prep parse
+        on device then run the 2-D event program; host engines loop
+        parts (the bit-equivalence oracle).
+
+        ``n_events`` is the static compacted event bound; pass a
+        precomputed one when ``bb`` is device-resident (the pipelined
+        ingest loop computes it from the host copy before ``device_put``
+        — computing it here would force a device→host read of the byte
+        tensor).  The fused path trusts the engine's ``max_depth`` bound
+        (a pure-device program cannot host-check depth); the parse-first
+        path keeps ``parse_batch``'s raise-on-overflow check.
+        """
+        from ...kernels.parse import (DEFAULT_MAX_DEPTH, parse_arrays,
+                                      parse_batch)
+
+        max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
+        if n_events is None:
+            n_events = bb.event_bound(bucket=bucket)
+        if not self.device_sharded:
+            # part-loop oracle; the explicit n_events keeps a placed
+            # byte tensor from being read back just to re-derive it
+            res = self.filter_batch_sharded(
+                parse_batch(bb, n_events=n_events, max_depth=max_depth),
+                sharded)
+            return lambda: res
+        if sharded.plans[0].meta.get("prep") != "events-device":
+            eb = parse_batch(bb, n_events=n_events, max_depth=max_depth)
+            return self.dispatch_batch_sharded2d(eb, sharded, mesh=mesh)
+        data_ax, _ = self._mesh_axes2d(mesh)
+        self._check_model_axis(sharded, mesh)
+        b0 = bb.batch_size
+        bb = bb.pad_batch_to(_round_up(b0, data_ax))
+        stacked = sharded.stacked()
+
+        def build():
+            def body(plan, data):
+                parsed = parse_arrays(data, n_events=n_events,
+                                      max_depth=max_depth)
+                prep = self._prep_arrays(*parsed)
+                return jax.vmap(
+                    lambda pl: self._run_with_plan(pl, prep))(plan)
+
+            ps = jax.sharding.PartitionSpec
+            return jax.jit(_shard_map(
+                body, mesh,
+                in_specs=(ps("model"), ps("data")),
+                out_specs=(ps("model", "data"), ps("model", "data"))))
+
+        matched, first = self._cached_exec(
+            ("bytes2d", mesh, n_events, max_depth), build)(
+                stacked, jnp.asarray(bb.data))
+        return self._gather2d(matched, first, sharded, b0)
+
+    def filter_bytes_sharded2d(self, bb: ByteBatch, sharded: ShardedPlan,
+                               *, bucket: int = 128, mesh,
+                               n_events: int | None = None) -> FilterResult:
+        """Blocking convenience over :meth:`dispatch_bytes_sharded2d`."""
+        return self.dispatch_bytes_sharded2d(
+            bb, sharded, bucket=bucket, mesh=mesh, n_events=n_events)()
 
     # ------------------------------------------------------ byte ingestion
     def filter_bytes(self, bb: ByteBatch, *,

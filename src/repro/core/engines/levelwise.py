@@ -213,7 +213,11 @@ def _level_plan(engine: str, nfa: NFA, lane: int = 128) -> base.FilterPlan:
             parent_1h=jnp.asarray(nfa.parent_onehot()),
         ),
         meta={"n_states": int(t.in_state.shape[0]), "n_tags": nfa.n_tags,
-              "state_multiple": lane},
+              "state_multiple": lane,
+              # document prep (depth-major bucketing) is a host numpy
+              # pass, so the 2-D bytes route parses on device and
+              # buckets on host before the shard_map program
+              "prep": "levels-host"},
     )
 
 

@@ -149,17 +149,22 @@ class MatscanEngine(base.FilterEngine):
                 step_tags=jnp.asarray(step_tags),
                 accept_idx=jnp.asarray(accept_idx),
             ),
-            meta={"kmax": kmax, "n_queries": nq},
+            meta={"kmax": kmax, "n_queries": nq,
+                  # the associative scan consumes the raw event stream,
+                  # so the 2-D mesh path can fuse parse+filter
+                  "prep": "events-device"},
         )
 
     # ------------------------------------------------------- sharded hooks
     def part_pads(self, parts, *, query_bucket: int = 8):
         """Uniform (Q, kmax) table shape across parts; no state axis —
-        matscan's 'states' are per-query step indices."""
+        matscan's 'states' are per-query step indices.  ``kmax`` is
+        bucketed like the other pad axes so subscribing a slightly
+        longer query does not force an all-parts replan."""
         kmax = max((q.length for nfa in parts for q in nfa.queries),
                    default=1)
         nq = max((nfa.n_queries for nfa in parts), default=1)
-        return {"kmax": kmax,
+        return {"kmax": base._round_up(kmax, 4),
                 "n_queries": base._round_up(max(nq, 1), query_bucket)}
 
     def plan_part(self, nfa: NFA, pads) -> base.FilterPlan:
@@ -171,6 +176,9 @@ class MatscanEngine(base.FilterEngine):
     def _prep(self, batch: EventBatch) -> tuple:
         return (jnp.asarray(batch.kind.astype(np.int32)),
                 jnp.asarray(batch.tag_id))
+
+    def _prep_arrays(self, kind, tag, depth, parent, valid, n_events):
+        return (kind.astype(jnp.int32), tag)
 
     def _run_with_plan(self, plan: base.FilterPlan, prep: tuple):
         kind, tag = prep

@@ -95,7 +95,11 @@ class OracleEngine(base.FilterEngine):
                       for q in nfa.queries)
         return base.FilterPlan("oracle", tables={},
                                meta={"steps": steps,
-                                     "n_queries": nfa.n_queries})
+                                     "n_queries": nfa.n_queries,
+                                     # host engine: the 2-D mesh paths
+                                     # fall back to the part loop (the
+                                     # bit-equivalence oracle)
+                                     "prep": "host"})
 
     def filter_document(self, ev: EventStream) -> FilterResult:
         # resolution happened once, in plan()

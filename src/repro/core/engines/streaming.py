@@ -163,13 +163,22 @@ class StreamingEngine(base.FilterEngine):
             ),
             meta={"n_states": int(t.in_state.shape[0]),
                   "max_depth": self.max_depth,
-                  "state_multiple": self.state_multiple},
+                  "state_multiple": self.state_multiple,
+                  # document prep is pure-device (the scan consumes the
+                  # raw event stream), so the 2-D mesh path can fuse
+                  # parse+filter into one shard_map program
+                  "prep": "events-device"},
         )
 
     # --------------------------------------------------- explicit-plan body
     def _prep(self, batch: EventBatch) -> tuple:
         return (jnp.asarray(batch.kind.astype(np.int32)),
                 jnp.asarray(batch.tag_id))
+
+    def _prep_arrays(self, kind, tag, depth, parent, valid, n_events):
+        # the scan reads only (kind, tag); depth/parent/valid are
+        # dead-code-eliminated out of the fused program
+        return (kind.astype(jnp.int32), tag)
 
     def _run_with_plan(self, plan: base.FilterPlan, prep: tuple):
         kind, tag = prep

@@ -53,7 +53,10 @@ class YFilterEngine(base.FilterEngine):
     def plan(self, nfa: NFA) -> base.FilterPlan:
         # host tables, not device arrays — the plan never enters jit
         return base.FilterPlan("yfilter", tables=_adjacency(nfa),
-                               meta={"n_queries": nfa.n_queries})
+                               meta={"n_queries": nfa.n_queries,
+                                     # host engine: 2-D mesh paths loop
+                                     # parts (second equivalence oracle)
+                                     "prep": "host"})
 
     # ------------------------------------------------------------------ run
     def filter_document(self, ev: EventStream) -> FilterResult:

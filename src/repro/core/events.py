@@ -269,6 +269,35 @@ class EventBatch:
             self.n_events,
         )
 
+    def pad_batch_to(self, b: int) -> "EventBatch":
+        """Grow the *batch* axis to ``b`` with inert all-PAD documents.
+
+        The 2-D mesh path (``filter_batch_sharded2d``) partitions the
+        batch axis over the mesh ``"data"`` axis, which requires the row
+        count to divide evenly; pad documents carry zero events, so no
+        engine can ever report a match for them, and callers slice the
+        pad rows back off the result.
+        """
+        cur = self.batch_size
+        if b < cur:
+            raise ValueError(f"cannot pad batch of {cur} docs into {b}")
+        if b == cur:
+            return self
+        extra, n = b - cur, self.length
+        if self.is_device:
+            import jax.numpy as jnp
+            cat, full, zeros = jnp.concatenate, jnp.full, jnp.zeros
+        else:
+            cat, full, zeros = np.concatenate, np.full, np.zeros
+        return EventBatch(
+            cat([self.kind, full((extra, n), PAD, np.int8)]),
+            cat([self.tag_id, full((extra, n), -1, np.int32)]),
+            cat([self.depth, zeros((extra, n), np.int32)]),
+            cat([self.parent, full((extra, n), -1, np.int32)]),
+            cat([self.valid, zeros((extra, n), bool)]),
+            cat([self.n_events, zeros(extra, np.int32)]),
+        )
+
     # ------------------------------------------------------------ recovery
     def stream(self, i: int) -> "EventStream":
         """Document ``i`` as an un-padded :class:`EventStream`."""
@@ -325,6 +354,58 @@ class ByteBatch:
 
     def __len__(self) -> int:
         return self.batch_size
+
+    @property
+    def is_device(self) -> bool:
+        """True when ``data`` is a device (jax) array, not numpy."""
+        return not isinstance(self.data, np.ndarray)
+
+    def to_host(self) -> "ByteBatch":
+        """Materialize on the host (no-op for numpy-backed batches)."""
+        if not self.is_device:
+            return self
+        return ByteBatch(np.asarray(self.data), np.asarray(self.n_bytes))
+
+    def pad_batch_to(self, b: int) -> "ByteBatch":
+        """Grow the batch axis to ``b`` zero-byte rows (see
+        :meth:`EventBatch.pad_batch_to`): byte 0 decodes to no events, so
+        pad rows are inert by construction."""
+        cur = self.batch_size
+        if b < cur:
+            raise ValueError(f"cannot pad batch of {cur} docs into {b}")
+        if b == cur:
+            return self
+        extra = b - cur
+        if self.is_device:
+            import jax.numpy as jnp
+            data = jnp.concatenate(
+                [self.data, jnp.zeros((extra, self.length), jnp.uint8)])
+        else:
+            data = np.concatenate(
+                [self.data, np.zeros((extra, self.length), np.uint8)])
+        return ByteBatch(data, np.concatenate(
+            [np.asarray(self.n_bytes), np.zeros(extra, np.int32)]))
+
+    def device_put(self, mesh, axis: str = "data") -> "ByteBatch":
+        """Sharding-aware placement: rows spread over a mesh axis.
+
+        Pads the batch to a multiple of the mesh ``axis`` size (sharded
+        placement needs even rows) and issues an *asynchronous*
+        ``jax.device_put`` against a ``NamedSharding`` — the H2D transfer
+        of batch *k+1* overlaps the filter step still running on batch
+        *k*, which is what the double-buffered serve loop
+        (:meth:`repro.data.filter_stage.FilterStage.route_bytes_pipelined`)
+        builds on.  ``n_bytes`` stays host-side: it is batch metadata,
+        read only by host accounting.
+        """
+        import jax
+
+        ax = dict(mesh.shape).get(axis, 1)
+        bb = self.pad_batch_to(bucket_length(self.batch_size, ax))
+        sharding = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(axis, None))
+        return ByteBatch(jax.device_put(bb.data, sharding),
+                         np.asarray(bb.n_bytes))
 
     @property
     def max_events(self) -> int:

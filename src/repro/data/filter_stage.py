@@ -68,11 +68,22 @@ class FilterStage:
     ``query_shards > 1`` partitions the subscription set into that many
     balanced parts (:meth:`FilterEngine.plan_sharded`) and filters
     through the sharded path — all parts in one stacked device program,
-    spread over ``mesh``'s ``"model"`` axis when one is given.  Routing
+    spread over the mesh ``"model"`` axis (auto-built when none is
+    given, shrunk to what the host can place).  Routing
     is by **global query id** through the partition index, so documents
     fan out to data shards identically with and without query sharding.
     Subscriptions can then churn live: :meth:`subscribe` recompiles only
     the least-loaded part, :meth:`unsubscribe` is pure metadata.
+
+    ``data_shards > 1`` adds the second scaling axis: batches run
+    through the 2-D ``("data", "model")`` program
+    (:meth:`FilterEngine.filter_batch_sharded2d`), documents spread over
+    the mesh ``"data"`` axis while each device keeps its 1/P slice of
+    the queries — the paper's §3.5 replication in both dimensions.  A
+    mesh is built automatically when none is given.  The bytes path gets
+    an async double-buffered serve loop on top:
+    :meth:`route_bytes_pipelined` overlaps the ``jax.device_put`` of
+    batch *k+1* with the filter step still running on batch *k*.
     """
 
     profiles: Sequence[Query]
@@ -84,6 +95,7 @@ class FilterStage:
     bucket: int = 128
     byte_bucket: int = 1024
     query_shards: int = 1
+    data_shards: int = 1
     mesh: Any = None
     shard_of_profile: np.ndarray = field(default=None)  # type: ignore
     stats: dict = field(default_factory=dict)
@@ -100,13 +112,24 @@ class FilterStage:
                                         shared=True)
         self._eng = engines.create(self.engine, self.nfa,
                                    dictionary=self.dictionary)
-        self.sharded_ = (self._eng.plan_sharded(self.query_shards)
-                         if self.query_shards > 1 else None)
+        if (self.query_shards > 1 or self.data_shards > 1) \
+                and self.mesh is None:
+            from ..launch.mesh import make_filter_mesh
+            # n_parts caps the model axis at the part count (a monolithic
+            # plan gets a 1-wide model axis, all devices on "data")
+            self.mesh = make_filter_mesh(max(1, self.query_shards),
+                                         data_shards=self.data_shards)
+        # the data axis needs a sharded plan even with one query part
+        # (the 2-D program executes a stacked ShardedPlan)
+        self.sharded_ = (self._eng.plan_sharded(max(1, self.query_shards))
+                         if self.query_shards > 1 or self.data_shards > 1
+                         else None)
         if self.shard_of_profile is None:
             self.shard_of_profile = (
                 np.arange(len(self.profiles)) % self.n_shards).astype(np.int32)
         self.stats = {"batches": 0, "docs": 0, "bytes": 0,
-                      "seconds": 0.0, "pair_matches": 0, "pairs": 0}
+                      "seconds": 0.0, "pair_matches": 0, "pairs": 0,
+                      "put_seconds": 0.0, "overlapped_batches": 0}
 
     # --------------------------------------------------- subscription churn
     def subscribe(self, profile: Query | str, shard: int | None = None) -> int:
@@ -176,7 +199,10 @@ class FilterStage:
         cumulative routing stats."""
         batch = EventBatch.from_streams(docs, bucket=self.bucket)
         t0 = time.perf_counter()
-        if self.sharded_ is not None:
+        if self.data_shards > 1:
+            res = self._eng.filter_batch_sharded2d(batch, self.sharded_,
+                                                   mesh=self.mesh)
+        elif self.sharded_ is not None:
             res = self._eng.filter_batch_sharded(batch, self.sharded_,
                                                  mesh=self.mesh)
         else:
@@ -205,7 +231,11 @@ class FilterStage:
         per-event host Python between payload and verdict."""
         bb = ByteBatch.from_buffers(bufs, bucket=self.byte_bucket)
         t0 = time.perf_counter()
-        if self.sharded_ is not None:
+        if self.data_shards > 1:
+            res = self._eng.filter_bytes_sharded2d(bb, self.sharded_,
+                                                   bucket=self.bucket,
+                                                   mesh=self.mesh)
+        elif self.sharded_ is not None:
             res = self._eng.filter_bytes_sharded(bb, self.sharded_,
                                                  bucket=self.bucket,
                                                  mesh=self.mesh)
@@ -216,34 +246,99 @@ class FilterStage:
             self._record(res, bb.batch_size, bb.nbytes_total(), dt)
         return res
 
-    def route(self, docs: Iterable[EventStream]) -> Iterator[list[RoutedDocument]]:
-        """Yield routed batches; each doc may fan out to several shards."""
-        batch: list[EventStream] = []
-        base = 0
-        for doc in docs:
-            batch.append(doc)
+    def _chunks(self, items: Iterable) -> Iterator[list]:
+        """Accumulate an (unbounded) iterable into batch_size chunks —
+        the one batching loop all three routing paths share."""
+        batch: list = []
+        for item in items:
+            batch.append(item)
             if len(batch) == self.batch_size:
-                yield self._route_batch(batch, base)
-                base += len(batch)
+                yield batch
                 batch = []
         if batch:
+            yield batch
+
+    def route(self, docs: Iterable[EventStream]) -> Iterator[list[RoutedDocument]]:
+        """Yield routed batches; each doc may fan out to several shards."""
+        base = 0
+        for batch in self._chunks(docs):
             yield self._route_batch(batch, base)
+            base += len(batch)
 
     def route_bytes(self, payloads: Iterable[bytes]
                     ) -> Iterator[list[RoutedDocument]]:
         """Route raw paper-format byte payloads (device-ingest twin of
         :meth:`route`): each batch is parsed *and* filtered on device,
         then fanned out to shards exactly like the event path."""
-        batch: list[bytes] = []
         base = 0
-        for buf in payloads:
-            batch.append(buf)
-            if len(batch) == self.batch_size:
-                yield self._route_byte_batch(batch, base)
-                base += len(batch)
-                batch = []
-        if batch:
+        for batch in self._chunks(payloads):
             yield self._route_byte_batch(batch, base)
+            base += len(batch)
+
+    # ------------------------------------------- double-buffered serve loop
+    def _stage_in(self, bufs: list[bytes]):
+        """Host-side staging of one batch: pack, take the event bound
+        (a host metadata scan — done BEFORE placement so the device copy
+        is never read back), then issue the async ``device_put`` against
+        the mesh ``"data"`` axis."""
+        bb = ByteBatch.from_buffers(bufs, bucket=self.byte_bucket)
+        n_events = bb.event_bound(bucket=self.bucket)
+        t0 = time.perf_counter()
+        placed = bb.device_put(self.mesh)
+        # device_put is async: this times dispatch, not the transfer —
+        # the transfer itself overlaps the previous batch's filter step
+        self.stats["put_seconds"] += time.perf_counter() - t0
+        return bufs, bb, placed, n_events
+
+    def route_bytes_pipelined(self, payloads: Iterable[bytes]
+                              ) -> Iterator[list[RoutedDocument]]:
+        """Async double-buffered twin of :meth:`route_bytes` for the 2-D
+        mesh: while the bytes→verdict program runs on batch *k*, batch
+        *k+1* is already packed and its H2D transfer in flight.
+
+        Per batch: (1) dispatch the 2-D filter program on the staged
+        device batch (:meth:`FilterEngine.dispatch_bytes_sharded2d` —
+        asynchronous, returns a materializer); (2) stage batch *k+1*
+        (pack + async ``ByteBatch.device_put``), overlapping its
+        transfer with the compute in flight; (3) block on batch *k*'s
+        verdicts and fan out.  Routed output is identical to
+        :meth:`route_bytes`; throughput and overlap accounting land in
+        ``stats`` (``put_seconds``, ``overlapped_batches``).  Falls back
+        to :meth:`route_bytes` when the stage has no mesh to overlap
+        against.
+        """
+        if self.mesh is None or self.sharded_ is None:
+            yield from self.route_bytes(payloads)
+            return
+
+        # streaming double buffer: only the in-flight batch and its
+        # staged successor are ever held — an unbounded payload stream
+        # yields verdicts batch by batch, exactly like route_bytes
+        it = self._chunks(payloads)
+        nxt = next(it, None)
+        if nxt is None:
+            return
+        base = 0
+        staged = self._stage_in(nxt)
+        while staged is not None:
+            bufs, bb, placed, n_events = staged
+            t0 = time.perf_counter()
+            materialize = self._eng.dispatch_bytes_sharded2d(
+                placed, self.sharded_, mesh=self.mesh, n_events=n_events)
+            nxt = next(it, None)
+            if nxt is not None:
+                staged = self._stage_in(nxt)
+                self.stats["overlapped_batches"] += 1
+            else:
+                staged = None
+            res = materialize()
+            # slice off data-axis pad rows before accounting/fan-out
+            res = FilterResult(res.matched[:len(bufs)],
+                               res.first_event[:len(bufs)])
+            self._record(res, bb.batch_size, bb.nbytes_total(),
+                         time.perf_counter() - t0)
+            yield self._fan_out(res, [len(b) for b in bufs], base)
+            base += len(bufs)
 
     def _route_batch(self, docs: list[EventStream],
                      base: int) -> list[RoutedDocument]:
@@ -281,14 +376,33 @@ class FilterStage:
         return self._filter_batch(list(docs), record=False).selectivity()
 
     def throughput(self) -> dict:
-        """Cumulative filtering throughput over everything routed so far."""
+        """Cumulative filtering throughput over everything routed so far.
+
+        Per-axis view: ``mesh_data``/``mesh_model`` are the *placed*
+        mesh axis sizes (the requested shard counts shrink to what the
+        host can place — see ``make_filter_mesh``);
+        ``docs_per_s_per_data_shard`` is each document replica's share
+        of the stream, and ``queries_per_model_shard`` each device's
+        slice of the subscription set.
+        """
         s = self.stats
         dt = max(s["seconds"], 1e-9)
+        axes = dict(self.mesh.shape) if self.mesh is not None else {}
+        mesh_data = axes.get("data", 1)
+        mesh_model = axes.get("model", 1)
+        n_live = len(self._gids)
         return {
             "engine": self.engine,
             "query_shards": self.query_shards,
+            "data_shards": self.data_shards,
+            "mesh_data": mesh_data,
+            "mesh_model": mesh_model,
             "docs": s["docs"],
             "docs_per_s": s["docs"] / dt,
+            "docs_per_s_per_data_shard": s["docs"] / dt / mesh_data,
+            "queries_per_model_shard": -(-n_live // max(mesh_model, 1)),
             "mb_per_s": s["bytes"] / 1e6 / dt,
+            "put_s": s["put_seconds"],
+            "overlapped_batches": s["overlapped_batches"],
             "selectivity": s["pair_matches"] / max(s["pairs"], 1),
         }

@@ -32,24 +32,40 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
-def make_filter_mesh(n_parts: int | None = None):
-    """1-D mesh for query-sharded filtering: every device on ``"model"``.
+def make_filter_mesh(n_parts: int | None = None, *, data_shards: int = 1):
+    """2-D ``("data", "model")`` mesh for filtering: both scaling axes.
 
-    The filtering stack scales along the *query* axis (the paper's
-    profiles-across-chips replication, §3.5): a
-    :class:`repro.core.engines.base.ShardedPlan` stacks per-part tables
-    on a leading axis and ``shard_map``\\ s them over this mesh's
-    ``"model"`` axis, so each device advances only its slice of the
-    subscription set while documents are replicated.
+    The paper's scalability argument (§3.5) is replication in *two*
+    dimensions: profiles are spread across chips AND the document stream
+    is fanned across replicas.  The software form is one mesh:
 
-    ``n_parts`` (when given) shrinks the mesh to the largest device
-    count that divides the part count, so any partition is placeable —
-    e.g. 6 parts on 4 devices yields a 3-device mesh, never an error.
+    * ``"model"`` — the query axis.  A
+      :class:`repro.core.engines.base.ShardedPlan` stacks per-part tables
+      on a leading axis and ``shard_map``\\ s them over ``"model"``, so
+      each device advances only its slice of the subscription set.
+    * ``"data"`` — the document axis.  ``filter_batch_sharded2d`` /
+      ``filter_bytes_sharded2d`` partition the batch (``EventBatch`` /
+      ``ByteBatch``) rows over ``"data"``, so each replica row of the
+      mesh sees only its slice of the document stream.
+
+    ``data_shards`` is a *request*: it is shrunk to the largest value
+    that divides the device count, so any setting is placeable on any
+    host (1 device ⇒ a ``(1, 1)`` mesh; the degenerate shapes are what
+    the CI device-count matrix exercises).  The remaining devices form
+    the ``"model"`` axis; ``n_parts`` (when given) shrinks that axis to
+    the largest count dividing the part count — e.g. 6 parts on 4
+    devices yields a 3-wide model axis, never an error.
     """
     n = len(jax.devices())
+    if data_shards < 1:
+        raise ValueError(f"data_shards must be >= 1, got {data_shards}")
+    if n_parts is not None and n_parts < 1:
+        raise ValueError(f"n_parts must be >= 1, got {n_parts}")
+    data = min(int(data_shards), n)
+    while n % data != 0:
+        data -= 1
+    model = n // data
     if n_parts is not None:
-        if n_parts < 1:
-            raise ValueError(f"n_parts must be >= 1, got {n_parts}")
-        while n_parts % n != 0:
-            n -= 1
-    return jax.make_mesh((n,), ("model",))
+        while n_parts % model != 0:
+            model -= 1
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -14,10 +14,18 @@ paper-format byte strings and are parsed on device
 per-event host Python — the full same-chip dataflow.  ``--ingest
 events`` is the pre-parsed host path.
 
+``--data-shards N`` turns on the second scaling axis: the stage builds
+a 2-D ``("data", "model")`` mesh, documents are fanned over the
+``"data"`` axis while each device keeps its slice of the subscription
+set, and byte ingest runs the async double-buffered serve loop
+(``FilterStage.route_bytes_pipelined``: the ``device_put`` of batch
+k+1 overlaps the filter step on batch k).
+
 Usage::
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
-      --requests 32 --replicas 2 --ingest bytes
+      --requests 32 --replicas 2 --ingest bytes --query-shards 2 \
+      --data-shards 2
 """
 import argparse
 import time
@@ -33,6 +41,48 @@ from repro.data.filter_stage import TEXT_FILL, FilterStage
 from repro.data.generator import DTD, gen_corpus, gen_profiles
 from repro.models import transformer as T
 from repro.serve.engine import ServeEngine
+
+
+def build_stage(n_replicas: int, *, engine: str = "levelwise",
+                batch_size: int = 8, query_shards: int = 1,
+                data_shards: int = 1, seed: int = 0):
+    """The serving driver's pub-sub routing layer, as a reusable piece.
+
+    Deterministic for a given ``seed`` (the CLI smoke tests rebuild it
+    to assert routed-output parity against ``main``'s printed queues).
+    Returns ``(stage, dtd)`` — the workload generator is needed again
+    for payloads and churn profiles.
+    """
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    profiles = gen_profiles(dtd, n=32, length=3, seed=seed)
+    # the stage builds its own ("data", "model") mesh when sharded
+    stage = FilterStage(profiles, d, n_shards=n_replicas, engine=engine,
+                        keep_unmatched=True, batch_size=batch_size,
+                        query_shards=query_shards, data_shards=data_shards)
+    return stage, dtd
+
+
+def route_requests(stage: FilterStage, payloads, *, ingest: str = "events",
+                   raw=None) -> list[list[int]]:
+    """Fan requests out to replica queues through the stage.
+
+    ``ingest="bytes"`` routes ``raw`` wire payloads — through the async
+    double-buffered loop when the stage has a 2-D data axis, the plain
+    device-ingest path otherwise.
+    """
+    queues: list[list[int]] = [[] for _ in range(stage.n_shards)]
+    if ingest == "bytes":
+        routed_batches = (stage.route_bytes_pipelined(raw)
+                          if stage.data_shards > 1 else
+                          stage.route_bytes(raw))
+    else:
+        routed_batches = stage.route(payloads)
+    for routed in routed_batches:
+        for r in routed:
+            queues[r.shard].append(r.doc_index)
+    return queues
 
 
 def main() -> None:
@@ -55,6 +105,11 @@ def main() -> None:
                     help="partition the subscription set into this many "
                          "parts run as one stacked program over the mesh "
                          "'model' axis (1 = monolithic plan)")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="fan the document stream over this many mesh "
+                         "'data' replicas (2-D data × model program with "
+                         "the async double-buffered byte-ingest loop; "
+                         "shrinks to what the host can place)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced).with_(vocab=256)
@@ -64,41 +119,32 @@ def main() -> None:
                        for _ in range(args.replicas)]
 
     # pub-sub routing layer: profiles → replicas
-    dtd = DTD.generate(n_tags=24, seed=0)
-    d = TagDictionary()
-    dtd.register(d)
-    profiles = gen_profiles(dtd, n=32, length=3, seed=0)
-    mesh = None
-    if args.query_shards > 1:
-        from repro.launch.mesh import make_filter_mesh
-        mesh = make_filter_mesh(args.query_shards)
-    stage = FilterStage(profiles, d, n_shards=args.replicas,
-                        engine=args.filter_engine, keep_unmatched=True,
-                        batch_size=args.batch,
-                        query_shards=args.query_shards, mesh=mesh)
+    stage, dtd = build_stage(args.replicas, engine=args.filter_engine,
+                             batch_size=args.batch,
+                             query_shards=args.query_shards,
+                             data_shards=args.data_shards)
     payloads = gen_corpus(dtd, n_docs=args.requests, nodes_per_doc=60,
                           seed=1)
 
     # serialization is request *arrival* (real deployments receive bytes),
     # so it happens outside the routing timer
-    if args.ingest == "bytes":
-        raw = [encode_bytes(doc, text_fill=TEXT_FILL) for doc in payloads]
+    raw = ([encode_bytes(doc, text_fill=TEXT_FILL) for doc in payloads]
+           if args.ingest == "bytes" else None)
     t0 = time.perf_counter()
-    queues: list[list[int]] = [[] for _ in range(args.replicas)]
-    if args.ingest == "bytes":
-        # requests arrive as raw paper-format bytes; parse runs on device
-        routed_batches = stage.route_bytes(raw)
-    else:
-        routed_batches = stage.route(payloads)
-    for routed in routed_batches:
-        for r in routed:
-            queues[r.shard].append(r.doc_index)
+    queues = route_requests(stage, payloads, ingest=args.ingest, raw=raw)
     t_route = time.perf_counter() - t0
     tp = stage.throughput()
     print(f"[serve] routed {args.requests} requests ({args.ingest} ingest) → "
           f"{[len(q) for q in queues]} per replica ({t_route*1e3:.1f} ms; "
           f"{tp['engine']}×{tp['query_shards']}: "
           f"{tp['docs_per_s']:.0f} docs/s, {tp['mb_per_s']:.2f} MB/s)")
+    if args.data_shards > 1:
+        print(f"[serve] 2-D mesh data×model = "
+              f"{tp['mesh_data']}×{tp['mesh_model']}: "
+              f"{tp['docs_per_s_per_data_shard']:.0f} docs/s per data "
+              f"shard, {tp['queries_per_model_shard']} queries per model "
+              f"shard, {tp['overlapped_batches']} overlapped transfers "
+              f"({tp['put_s']*1e3:.1f} ms staging)")
 
     # live subscription churn — the defining pub-sub operation, served
     # without stopping the stream: sharded stages recompile only one

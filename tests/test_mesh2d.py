@@ -1,0 +1,354 @@
+"""2-D (data × model) mesh filtering: both scaling axes in one program.
+
+PR-level contract: for every registered engine, ``filter_batch_sharded2d``
+and ``filter_bytes_sharded2d`` over a ``("data", "model")`` mesh are
+bit-identical to the unsharded single-device path — including ragged
+batches (padded to the data axis) and the fused bytes→verdict route —
+and the async double-buffered serve loop routes identically to the
+synchronous one.
+
+The CI device-count matrix runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count={1,4,8}`` so the
+degenerate (1×1), square (2×2) and non-square (4×1, 8×2…) mesh shapes
+are all exercised on CPU runners.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import engines
+from repro.core.dictionary import TagDictionary
+from repro.core.events import ByteBatch, EventBatch, encode_bytes
+from repro.core.nfa import compile_queries
+from repro.data.filter_stage import FilterStage
+from repro.data.generator import DTD, gen_corpus, gen_profiles
+from repro.launch.mesh import make_filter_mesh
+
+from test_sharded import ALL_ENGINES, _workload
+
+DEVICE_ENGINES = ("levelwise", "matscan", "streaming", "wavefront")
+
+
+def _engine_with_workload(name, seed=0, n_docs=5, n_queries=18):
+    profiles, docs, d = _workload(name, seed=seed, n_docs=n_docs,
+                                  n_queries=n_queries)
+    nfa = compile_queries(profiles, d, shared=True)
+    return engines.create(name, nfa, dictionary=d), docs, d
+
+
+# ------------------------------------------------------------------ the mesh
+class TestFilterMesh2D:
+    def test_axes_are_data_model(self):
+        mesh = make_filter_mesh(2, data_shards=2)
+        assert tuple(mesh.axis_names) == ("data", "model")
+
+    def test_data_shards_shrink_to_divisor(self):
+        """Any request is placeable: the data axis shrinks to the largest
+        divisor of the device count, never an error."""
+        n = len(jax.devices())
+        for req in (1, 2, 3, 4, 7, 8, n + 3):
+            mesh = make_filter_mesh(data_shards=req)
+            shape = dict(mesh.shape)
+            assert n % shape["data"] == 0
+            assert shape["data"] <= max(req, 1)
+            assert shape["data"] * shape["model"] <= n
+
+    def test_model_axis_divides_parts(self):
+        for parts in (1, 2, 3, 5, 6):
+            shape = dict(make_filter_mesh(parts, data_shards=2).shape)
+            assert parts % shape["model"] == 0
+
+    def test_invalid_arguments_raise(self):
+        with pytest.raises(ValueError, match="data_shards"):
+            make_filter_mesh(data_shards=0)
+        with pytest.raises(ValueError, match="n_parts"):
+            make_filter_mesh(0)
+
+    def test_full_device_grid(self):
+        """data × model covers every device when both axes are asked for."""
+        n = len(jax.devices())
+        mesh = make_filter_mesh(n, data_shards=n)
+        shape = dict(mesh.shape)
+        assert shape["data"] * shape["model"] == n
+
+
+# -------------------------------------------------------- plan metadata
+class TestPlanPrepMetadata:
+    """Every engine's plan records its document-prep form — what the 2-D
+    bytes route keys the fused-vs-parse-first decision on."""
+
+    EXPECTED = {"streaming": "events-device", "matscan": "events-device",
+                "levelwise": "levels-host", "wavefront": "levels-host",
+                "oracle": "host", "yfilter": "host"}
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_prep_recorded(self, name):
+        eng, _, _ = _engine_with_workload(name)
+        assert eng.plan_.meta["prep"] == self.EXPECTED[name]
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_prep_survives_sharded_stacking(self, name):
+        eng, _, _ = _engine_with_workload(name)
+        sp = eng.plan_sharded(2)
+        assert sp.plans[0].meta["prep"] == self.EXPECTED[name]
+        if eng.device_sharded:
+            assert sp.stacked().meta["prep"] == self.EXPECTED[name]
+
+
+# ------------------------------------------------------- 2-D equivalence
+class Test2DEquivalence:
+    """Acceptance: every engine, multiple (parts × data-shard) shapes,
+    bit-identical to the unsharded single-device path."""
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    @pytest.mark.parametrize("n_parts,data_req", [(1, 2), (2, 2), (4, 4)])
+    def test_2d_equals_unsharded(self, name, n_parts, data_req):
+        eng, docs, _ = _engine_with_workload(name, seed=1)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        want = eng.filter_batch(batch)
+        sp = eng.plan_sharded(n_parts)
+        mesh = make_filter_mesh(n_parts, data_shards=data_req)
+        got = eng.filter_batch_sharded2d(batch, sp, mesh=mesh)
+        np.testing.assert_array_equal(
+            got.matched, want.matched,
+            err_msg=f"{name}/{n_parts}p/{dict(mesh.shape)} matched")
+        np.testing.assert_array_equal(
+            got.first_event, want.first_event,
+            err_msg=f"{name}/{n_parts}p/{dict(mesh.shape)} location")
+
+    @pytest.mark.parametrize("name", ("oracle", "yfilter"))
+    def test_host_engine_bytes_dispatch_honours_n_events(self, name):
+        """The host-engine oracle fallback must respect an explicit
+        event bound (the pipelined loop passes one so a device-placed
+        byte tensor is never read back)."""
+        eng, docs, _ = _engine_with_workload(name, seed=6)
+        sp = eng.plan_sharded(2)
+        mesh = make_filter_mesh(2, data_shards=2)
+        bb = ByteBatch.from_buffers(
+            [encode_bytes(x, text_fill=8) for x in docs], bucket=1024)
+        n_events = bb.event_bound(bucket=128)
+        handle = eng.dispatch_bytes_sharded2d(bb, sp, mesh=mesh,
+                                              n_events=n_events)
+        got = handle()
+        want = eng.filter_batch(EventBatch.from_streams(docs, bucket=128))
+        np.testing.assert_array_equal(got.matched, want.matched)
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_bytes_2d_equals_unsharded(self, name):
+        """The bytes→verdict route (fused single-program for
+        device-prep engines, parse-then-filter otherwise, part loop for
+        host engines) is bit-identical to the unsharded event path."""
+        eng, docs, _ = _engine_with_workload(name, seed=3)
+        sp = eng.plan_sharded(2)
+        mesh = make_filter_mesh(2, data_shards=2)
+        bb = ByteBatch.from_buffers(
+            [encode_bytes(x, text_fill=8) for x in docs], bucket=1024)
+        got = eng.filter_bytes_sharded2d(bb, sp, mesh=mesh)
+        want = eng.filter_batch(EventBatch.from_streams(docs, bucket=128))
+        np.testing.assert_array_equal(got.matched, want.matched)
+        np.testing.assert_array_equal(got.first_event, want.first_event)
+
+    @pytest.mark.parametrize("name", DEVICE_ENGINES)
+    def test_ragged_batch_is_padded_and_sliced(self, name):
+        """A batch size that does not divide the data axis gains inert
+        pad documents on the way in and loses them on the way out."""
+        eng, docs, _ = _engine_with_workload(name, seed=2, n_docs=5)
+        assert len(docs) == 5  # stays ragged vs any data axis > 1
+        batch = EventBatch.from_streams(docs, bucket=32)
+        sp = eng.plan_sharded(2)
+        mesh = make_filter_mesh(2, data_shards=4)
+        got = eng.filter_batch_sharded2d(batch, sp, mesh=mesh)
+        want = eng.filter_batch(batch)
+        assert got.matched.shape == want.matched.shape
+        np.testing.assert_array_equal(got.matched, want.matched)
+
+    def test_dispatch_is_deferred_and_correct(self):
+        """dispatch_* returns a materializer: calling it yields the same
+        verdicts as the blocking convenience."""
+        eng, docs, _ = _engine_with_workload("streaming", seed=4)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        sp = eng.plan_sharded(2)
+        mesh = make_filter_mesh(2, data_shards=2)
+        handle = eng.dispatch_batch_sharded2d(batch, sp, mesh=mesh)
+        assert callable(handle)
+        res = handle()
+        want = eng.filter_batch_sharded2d(batch, sp, mesh=mesh)
+        np.testing.assert_array_equal(res.matched, want.matched)
+        np.testing.assert_array_equal(res.first_event, want.first_event)
+
+    def test_2d_after_churn_matches_fresh_compile(self):
+        """The 2-D program executes a churned plan identically to a
+        from-scratch compile of the surviving query set."""
+        from test_sharded import _fresh_verdict
+        eng, docs, d = _engine_with_workload("streaming", seed=5)
+        pool = gen_profiles(DTD.generate(n_tags=24, seed=5), n=10,
+                            length=3, seed=77)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        sp = eng.plan_sharded(2)
+        sp, gids = sp.add_queries(pool[:3])
+        sp = sp.remove_queries([int(sp.live_ids()[0]), gids[1]])
+        mesh = make_filter_mesh(2, data_shards=2)
+        got = eng.filter_batch_sharded2d(batch, sp, mesh=mesh)
+        want = _fresh_verdict("streaming", sp.live_queries(), d, batch)
+        np.testing.assert_array_equal(got.matched, want.matched)
+        np.testing.assert_array_equal(got.first_event, want.first_event)
+
+    def test_mesh_without_axes_raises(self):
+        eng, docs, _ = _engine_with_workload("streaming")
+        sp = eng.plan_sharded(1)
+        batch = EventBatch.from_streams(docs, bucket=32)
+        bad = jax.make_mesh((1,), ("model",))
+        with pytest.raises(ValueError, match="data"):
+            eng.filter_batch_sharded2d(batch, sp, mesh=bad)
+        with pytest.raises(ValueError, match="mesh"):
+            eng.filter_batch_sharded2d(batch, sp, mesh=None)
+
+    def test_model_axis_part_mismatch_raises(self):
+        mesh = make_filter_mesh(4, data_shards=1)
+        if dict(mesh.shape)["model"] == 1:
+            pytest.skip("needs >1 model axis for a mismatch")
+        eng, docs, _ = _engine_with_workload("streaming")
+        sp = eng.plan_sharded(3)
+        with pytest.raises(ValueError, match="not divisible"):
+            eng.filter_batch_sharded2d(
+                EventBatch.from_streams(docs, bucket=32), sp, mesh=mesh)
+
+
+# -------------------------------------------------- batch-axis padding
+class TestBatchAxisPadding:
+    def test_event_batch_pad_batch_to(self):
+        _, docs, _ = _engine_with_workload("streaming")
+        batch = EventBatch.from_streams(docs, bucket=32)
+        padded = batch.pad_batch_to(8)
+        assert padded.batch_size == 8
+        assert padded.length == batch.length
+        np.testing.assert_array_equal(padded.kind[:len(docs)], batch.kind)
+        assert not padded.valid[len(docs):].any()
+        assert (padded.n_events[len(docs):] == 0).all()
+        assert batch.pad_batch_to(batch.batch_size) is batch
+        with pytest.raises(ValueError):
+            batch.pad_batch_to(1)
+
+    def test_byte_batch_pad_batch_to(self):
+        bb = ByteBatch.from_buffers([b"<ab>x</ab>", b"<cd>"], bucket=16)
+        padded = bb.pad_batch_to(4)
+        assert padded.batch_size == 4
+        assert (np.asarray(padded.data[2:]) == 0).all()
+        assert (np.asarray(padded.n_bytes[2:]) == 0).all()
+        # zero bytes decode to zero events: the bound is unchanged
+        assert padded.event_bound() == bb.event_bound()
+        with pytest.raises(ValueError):
+            bb.pad_batch_to(1)
+
+    def test_byte_batch_device_put(self):
+        """Sharding-aware placement: padded to the data axis, device
+        resident, bytes preserved."""
+        _, docs, _ = _engine_with_workload("streaming", n_docs=3)
+        bb = ByteBatch.from_buffers(
+            [encode_bytes(x) for x in docs], bucket=256)
+        mesh = make_filter_mesh(data_shards=2)
+        placed = bb.device_put(mesh)
+        data_ax = dict(mesh.shape)["data"]
+        assert placed.is_device
+        assert placed.batch_size % data_ax == 0
+        host = placed.to_host()
+        assert not host.is_device
+        np.testing.assert_array_equal(host.data[:3], np.asarray(bb.data))
+
+
+# ------------------------------------------------------ stage integration
+class TestStage2D:
+    def _routes(self, batches):
+        return {(r.doc_index, r.shard): tuple(r.matched_profiles)
+                for b in batches for r in b}
+
+    def _workload(self, seed=6, n_docs=11):
+        profiles, docs, _ = _workload("streaming", seed=seed, n_docs=n_docs)
+        raw = [encode_bytes(x, text_fill=8) for x in docs]
+        return profiles, docs, raw
+
+    def test_routing_identical_with_and_without_data_shards(self):
+        profiles, docs, raw = self._workload()
+        mono = FilterStage(profiles, TagDictionary(), n_shards=3,
+                           engine="streaming", batch_size=4)
+        two_d = FilterStage(profiles, TagDictionary(), n_shards=3,
+                            engine="streaming", batch_size=4,
+                            query_shards=2, data_shards=2)
+        assert dict(two_d.mesh.shape).keys() == {"data", "model"}
+        assert self._routes(mono.route(docs)) == self._routes(
+            two_d.route(docs))
+        assert self._routes(mono.route_bytes(raw)) == self._routes(
+            two_d.route_bytes(raw))
+
+    def test_pipelined_routes_like_synchronous(self):
+        """The async double-buffered loop is an optimization, not a
+        semantic: routed output must equal route_bytes exactly."""
+        profiles, docs, raw = self._workload(seed=7)
+        a = FilterStage(profiles, TagDictionary(), n_shards=2,
+                        engine="streaming", batch_size=4, data_shards=2)
+        b = FilterStage(profiles, TagDictionary(), n_shards=2,
+                        engine="streaming", batch_size=4, data_shards=2)
+        # feed a generator: the loop must stream (stage one batch ahead,
+        # never materialize the whole payload iterable)
+        got = self._routes(a.route_bytes_pipelined(iter(raw)))
+        want = self._routes(b.route_bytes(raw))
+        assert got == want
+        # 3 batches of 4 → the first two had a successor staged while
+        # their filter step was in flight
+        assert a.stats["overlapped_batches"] == 2
+        assert a.stats["put_seconds"] >= 0.0
+
+    def test_pipelined_falls_back_without_mesh(self):
+        profiles, docs, raw = self._workload(seed=8, n_docs=5)
+        stage = FilterStage(profiles, TagDictionary(), n_shards=2,
+                            engine="streaming", batch_size=4)
+        assert stage.mesh is None
+        got = self._routes(stage.route_bytes_pipelined(raw))
+        want = self._routes(
+            FilterStage(profiles, TagDictionary(), n_shards=2,
+                        engine="streaming",
+                        batch_size=4).route_bytes(raw))
+        assert got == want
+
+    def test_data_shards_only_needs_no_query_shards(self):
+        """data_shards=2 with a monolithic query set still runs the 2-D
+        program (one part, stacked) and routes identically."""
+        profiles, docs, raw = self._workload(seed=9, n_docs=6)
+        mono = FilterStage(profiles, TagDictionary(), n_shards=2,
+                           engine="streaming", batch_size=3)
+        ds = FilterStage(profiles, TagDictionary(), n_shards=2,
+                         engine="streaming", batch_size=3, data_shards=2)
+        assert ds.sharded_ is not None and ds.sharded_.n_parts == 1
+        assert self._routes(mono.route(docs)) == self._routes(ds.route(docs))
+
+    def test_churn_on_2d_stage_route_parity(self):
+        profiles, docs, raw = self._workload(seed=10, n_docs=6)
+        extra = gen_profiles(DTD.generate(n_tags=24, seed=10), n=3,
+                             length=3, seed=55)
+        mono = FilterStage(profiles, TagDictionary(), n_shards=2,
+                           engine="streaming", batch_size=3)
+        two_d = FilterStage(profiles, TagDictionary(), n_shards=2,
+                            engine="streaming", batch_size=3,
+                            query_shards=2, data_shards=2)
+        for stage in (mono, two_d):
+            gids = [stage.subscribe(q) for q in extra]
+            stage.unsubscribe(gids[1])
+        assert self._routes(mono.route(docs)) == self._routes(
+            two_d.route(docs))
+
+    def test_throughput_reports_per_axis_stats(self):
+        profiles, docs, raw = self._workload(seed=11, n_docs=5)
+        stage = FilterStage(profiles, TagDictionary(), n_shards=2,
+                            engine="streaming", batch_size=4,
+                            query_shards=2, data_shards=2)
+        list(stage.route_bytes_pipelined(raw))
+        tp = stage.throughput()
+        shape = dict(stage.mesh.shape)
+        assert tp["data_shards"] == 2
+        assert tp["mesh_data"] == shape["data"]
+        assert tp["mesh_model"] == shape["model"]
+        assert tp["docs_per_s_per_data_shard"] == pytest.approx(
+            tp["docs_per_s"] / shape["data"])
+        assert tp["queries_per_model_shard"] >= len(profiles) // 2
+        assert "put_s" in tp and "overlapped_batches" in tp

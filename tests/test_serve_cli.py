@@ -1,0 +1,97 @@
+"""CLI smoke tests for the serving driver (`repro.launch.serve`).
+
+Each test drives ``main()`` end to end through ``sys.argv`` — model
+init, pub-sub routing (the flag under test), churn, generation — and
+asserts the *routed output parity* contract: whatever ingest path and
+shard configuration the flags select, the replica queues printed by the
+CLI must equal what a plain (monolithic, event-ingest) ``FilterStage``
+routes for the same deterministic workload.
+"""
+import re
+import sys
+
+import pytest
+
+import repro.launch.serve as serve
+from repro.core.events import encode_bytes
+from repro.data.filter_stage import TEXT_FILL, FilterStage
+from repro.data.generator import DTD, gen_corpus, gen_profiles
+
+REQUESTS, REPLICAS, BATCH = 8, 2, 4
+BASE_ARGS = ["--requests", str(REQUESTS), "--replicas", str(REPLICAS),
+             "--batch", str(BATCH), "--prompt-len", "4", "--gen-len", "2"]
+
+
+def _run_main(monkeypatch, capsys, extra):
+    monkeypatch.setattr(sys, "argv", ["serve"] + BASE_ARGS + list(extra))
+    serve.main()
+    return capsys.readouterr().out
+
+
+def _printed_queues(out: str) -> list[int]:
+    m = re.search(r"→ \[([0-9, ]*)\] per replica", out)
+    assert m, f"no routed-queues line in output:\n{out}"
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _reference_queues() -> list[int]:
+    """The parity oracle: a monolithic event-ingest FilterStage over the
+    same deterministic workload ``main`` builds (seed 0 profiles, seed 1
+    corpus)."""
+    dtd = DTD.generate(n_tags=24, seed=0)
+    from repro.core.dictionary import TagDictionary
+    d = TagDictionary()
+    dtd.register(d)
+    profiles = gen_profiles(dtd, n=32, length=3, seed=0)
+    stage = FilterStage(profiles, d, n_shards=REPLICAS, engine="levelwise",
+                        keep_unmatched=True, batch_size=BATCH)
+    payloads = gen_corpus(dtd, n_docs=REQUESTS, nodes_per_doc=60, seed=1)
+    queues = [0] * REPLICAS
+    for routed in stage.route(payloads):
+        for r in routed:
+            queues[r.shard] += 1
+    return queues
+
+
+@pytest.fixture(scope="module")
+def reference_queues():
+    return _reference_queues()
+
+
+@pytest.mark.parametrize("extra", [
+    ["--ingest", "bytes"],
+    ["--query-shards", "2"],
+    ["--data-shards", "2", "--ingest", "bytes"],
+    ["--query-shards", "2", "--data-shards", "2", "--ingest", "bytes"],
+], ids=["bytes", "qshards", "dshards-bytes", "2d-bytes"])
+def test_cli_routes_identically_to_filter_stage(monkeypatch, capsys,
+                                                reference_queues, extra):
+    out = _run_main(monkeypatch, capsys, extra)
+    assert f"[serve] routed {REQUESTS} requests" in out
+    assert _printed_queues(out) == reference_queues
+    # the full driver ran: churn served live, replicas generated tokens
+    assert "[serve] live churn" in out
+    assert "generated" in out
+
+
+def test_cli_data_shards_prints_per_axis_stats(monkeypatch, capsys,
+                                               reference_queues):
+    out = _run_main(monkeypatch, capsys,
+                    ["--data-shards", "2", "--ingest", "bytes"])
+    m = re.search(r"2-D mesh data×model = (\d+)×(\d+)", out)
+    assert m, f"no per-axis stats line in output:\n{out}"
+    assert "docs/s per data shard" in out
+    assert "queries per model shard" in out
+    assert "overlapped transfers" in out
+    assert _printed_queues(out) == reference_queues
+
+
+def test_route_requests_helper_matches_stage_routing():
+    """The CLI's routing helper (2-D pipelined bytes path) fans out to
+    the same queues as direct FilterStage routing."""
+    stage, dtd = serve.build_stage(REPLICAS, batch_size=BATCH,
+                                   query_shards=2, data_shards=2)
+    payloads = gen_corpus(dtd, n_docs=REQUESTS, nodes_per_doc=60, seed=1)
+    raw = [encode_bytes(doc, text_fill=TEXT_FILL) for doc in payloads]
+    got = serve.route_requests(stage, payloads, ingest="bytes", raw=raw)
+    assert [len(q) for q in got] == _reference_queues()

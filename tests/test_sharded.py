@@ -151,9 +151,12 @@ class TestMesh:
         with pytest.raises(ValueError, match=f"{n} devices"):
             make_host_mesh(n + 1)
 
-    def test_make_filter_mesh_is_1d_model(self):
+    def test_make_filter_mesh_axes(self):
+        """Default mesh: every device on "model", a degenerate data axis
+        (the 2-D composition is tested in tests/test_mesh2d.py)."""
         mesh = make_filter_mesh()
-        assert tuple(mesh.axis_names) == ("model",)
+        assert tuple(mesh.axis_names) == ("data", "model")
+        assert dict(mesh.shape)["data"] == 1
 
     def test_make_filter_mesh_divides_parts(self):
         import jax
