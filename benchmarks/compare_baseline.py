@@ -45,7 +45,7 @@ METRICS = ("docs_per_s", "mb_s")
 #: measurement outputs and derived ratios — never part of a row's identity
 NON_IDENTITY = frozenset(METRICS) | {
     "speedup_vs_yfilter", "vs_events", "speedup_vs_recompile",
-    "seconds_per_op",
+    "seconds_per_op", "speedup_vs_scan",
 }
 
 

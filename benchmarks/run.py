@@ -8,6 +8,10 @@ Sections:
   ingest — ingest_throughput: parse cost end-to-end over the three
            ingestion paths (events / bytes-host / bytes-device — the
            paper's same-chip parser+filter vs host parsing)
+  kernel — kernel_vs_scan: the streaming megakernel (bit-packed Pallas
+           hot path) vs the lax.scan oracle, events and fused-bytes
+           variants over a (batch × n_queries) grid; the ``backend``
+           field records compiled (TPU) vs interpret rows
   qscale — query_scaling: docs/s as the standing profile set grows
            10²→10⁴, monolithic vs sharded query plans (the paper's
            scalability-in-profiles claim, §3.5)
@@ -23,7 +27,10 @@ Sections:
 
 Output: JSON-lines to stdout (one row per measurement); ``--json``
 additionally writes the rows to a file (default ``BENCH_filtering.json``)
-so CI accumulates a perf trajectory.
+so CI accumulates a perf trajectory.  ``--profile [DIR]`` wraps the
+whole bench run (typically paired with ``--only``) in
+``jax.profiler.trace`` and prints the trace directory, so a kernel win
+is inspectable in the profiler instead of inferred from wall clocks.
 """
 from __future__ import annotations
 
@@ -34,25 +41,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+ALL_SECTIONS = ("fig8", "fig9", "ingest", "kernel", "qscale", "docscale",
+                "churn", "twig", "roofline")
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true",
-                    help="paper-scale sweeps (slower)")
-    ap.add_argument("--only", default=None,
-                    help="run a single section: "
-                         "fig8|fig9|ingest|qscale|docscale|churn|twig|"
-                         "roofline")
-    ap.add_argument("--json", nargs="?", const="BENCH_filtering.json",
-                    default=None, metavar="PATH",
-                    help="also write rows to a JSON file "
-                         "(default: BENCH_filtering.json)")
-    args = ap.parse_args()
 
-    sections = [args.only] if args.only else ["fig8", "fig9", "ingest",
-                                              "qscale", "docscale", "churn",
-                                              "twig", "roofline"]
-    rows = []
+def run_sections(sections, full: bool) -> list[dict]:
+    rows: list[dict] = []
 
     if "fig8" in sections:
         from benchmarks import bench_area
@@ -61,7 +55,7 @@ def main() -> None:
 
     if "fig9" in sections:
         from benchmarks import bench_throughput
-        if args.full:
+        if full:
             rows += bench_throughput.run(n_docs=32, nodes_per_doc=2000)
         else:
             rows += bench_throughput.run(
@@ -70,16 +64,30 @@ def main() -> None:
 
     if "ingest" in sections:
         from benchmarks import bench_throughput
-        if args.full:
+        if full:
             rows += bench_throughput.run_ingest(n_docs=32,
                                                 nodes_per_doc=2000)
         else:
             rows += bench_throughput.run_ingest(
                 query_counts=(16, 64), n_docs=8, nodes_per_doc=200)
 
+    if "kernel" in sections:
+        from benchmarks import bench_throughput
+        if full:
+            rows += bench_throughput.run_kernel_vs_scan(
+                query_counts=(64, 256, 1024), batch_sizes=(8, 32),
+                nodes_per_doc=400, repeat=3)
+        else:
+            # acceptance grid: megakernel vs scan, events + fused bytes
+            # (interpret-mode kernel rows are slow by design — small
+            # batches keep the section's unrolled-grid cost bounded)
+            rows += bench_throughput.run_kernel_vs_scan(
+                query_counts=(64, 256), batch_sizes=(4,),
+                nodes_per_doc=150, repeat=1)
+
     if "qscale" in sections:
         from benchmarks import bench_throughput
-        if args.full:
+        if full:
             rows += bench_throughput.run_query_scaling(
                 n_docs=16, nodes_per_doc=400)
         else:
@@ -90,7 +98,7 @@ def main() -> None:
 
     if "docscale" in sections:
         from benchmarks import bench_throughput
-        if args.full:
+        if full:
             rows += bench_throughput.run_doc_scaling(
                 batch_sizes=(16, 64), nodes_per_doc=400)
         else:
@@ -105,17 +113,49 @@ def main() -> None:
     if "churn" in sections:
         from benchmarks import bench_throughput
         rows += bench_throughput.run_churn(
-            n_queries=1024 if args.full else 256,
-            n_ops=32 if args.full else 8)
+            n_queries=1024 if full else 256,
+            n_ops=32 if full else 8)
 
     if "twig" in sections:
         from benchmarks import bench_twig
-        rows += bench_twig.run(n_docs=24 if args.full else 10,
-                               nodes_per_doc=300 if args.full else 120)
+        rows += bench_twig.run(n_docs=24 if full else 10,
+                               nodes_per_doc=300 if full else 120)
 
     if "roofline" in sections:
         from benchmarks import roofline
         rows += roofline.rows_from_artifacts()
+
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (slower)")
+    ap.add_argument("--only", default=None,
+                    help="run a single section: " + "|".join(ALL_SECTIONS))
+    ap.add_argument("--json", nargs="?", const="BENCH_filtering.json",
+                    default=None, metavar="PATH",
+                    help="also write rows to a JSON file "
+                         "(default: BENCH_filtering.json)")
+    ap.add_argument("--profile", nargs="?", const="/tmp/repro-bench-trace",
+                    default=None, metavar="DIR",
+                    help="wrap the bench run in jax.profiler.trace(DIR) "
+                         "and print the trace dir (pair with --only to "
+                         "profile one section)")
+    args = ap.parse_args()
+
+    sections = [args.only] if args.only else list(ALL_SECTIONS)
+
+    if args.profile:
+        import jax
+
+        with jax.profiler.trace(args.profile):
+            rows = run_sections(sections, args.full)
+        print(f"# profiler trace written to {args.profile} "
+              f"(tensorboard --logdir {args.profile})", file=sys.stderr)
+    else:
+        rows = run_sections(sections, args.full)
 
     for r in rows:
         print(json.dumps(r))

@@ -56,6 +56,12 @@ def _round_up(n: int, multiple: int) -> int:
     return max(multiple, -(-n // multiple) * multiple)
 
 
+#: default event-axis padding bucket for the byte-ingest paths; engines
+#: created with an ``event_bucket=`` option (``FilterStage`` threads its
+#: own ``bucket`` through it) override this per instance
+DEFAULT_EVENT_BUCKET = 128
+
+
 # ----------------------------------------------------------------- the plan
 class FilterPlan:
     """Frozen pytree: named device tables + static (hashable) metadata.
@@ -271,6 +277,8 @@ class ShardedPlan:
         re-padded (a table rebuild from the stored sub-NFAs, not a
         query recompile).
         """
+        from ...kernels.blocks import PadOverflow
+
         eng = self._engine_obj
         new_qs = [parse_xpath(q) if isinstance(q, str) else q
                   for q in queries]
@@ -286,12 +294,22 @@ class ShardedPlan:
         nfa_p = compile_queries(qs_p, eng.dictionary, shared=self.shared)
         part_nfas = list(self.part_nfas)
         part_nfas[p] = nfa_p
-        pads = eng.part_pads(part_nfas, query_bucket=self.query_bucket)
+        fresh = eng.part_pads(part_nfas, query_bucket=self.query_bucket)
         plans = list(self.plans)
         stacked = None
-        if all(pads.get(k, 0) <= self.pads.get(k, 0) for k in pads):
-            pads = self.pads  # fits the existing buckets: touch one part
-            plans[p] = eng.plan_part(nfa_p, pads)
+        one_part = None
+        if all(fresh.get(k, 0) <= self.pads.get(k, 0) for k in fresh):
+            # fits the existing buckets: touch one part.  Jointly-derived
+            # targets (e.g. the megakernel's block layout) can still be
+            # infeasible at the OLD buckets even when every key compares
+            # ≤ — a PadOverflow falls through to the full replan below.
+            try:
+                one_part = eng.plan_part(nfa_p, self.pads)
+            except PadOverflow:
+                one_part = None
+        if one_part is not None:
+            pads = self.pads
+            plans[p] = one_part
             if self._stacked is not None:
                 # incremental restack: overwrite one row of the cached
                 # (P, ...) tables instead of restacking all parts — the
@@ -301,8 +319,7 @@ class ShardedPlan:
                 stacked = FilterPlan(self.engine, tables,
                                      self._stacked.meta)
         else:
-            pads = {k: max(pads.get(k, 0), self.pads.get(k, 0))
-                    for k in set(pads) | set(self.pads)}
+            pads = eng.merge_pads(self.pads, fresh, part_nfas)
             plans = [eng.plan_part(nfa, pads) for nfa in part_nfas]
         part_cols = list(self.part_cols)
         part_queries = list(self.part_queries)
@@ -380,6 +397,11 @@ class FilterEngine(abc.ABC):
     #: engines) loops parts in python.
     device_sharded: ClassVar[bool] = False
 
+    #: uniform pad targets threaded by :meth:`plan_part` for the duration
+    #: of the :meth:`plan` call (sharded plans need every per-part table —
+    #: including kernel block tables — at identical shapes so they stack)
+    _plan_pads: Mapping[str, int] | None = None
+
     def __init__(self, nfa: NFA, dictionary=None, **options: Any) -> None:
         self.nfa = nfa
         self.dictionary = dictionary
@@ -449,13 +471,26 @@ class FilterEngine(abc.ABC):
                 "n_queries": _round_up(max(q, 1), query_bucket)}
 
     def plan_part(self, nfa: NFA, pads: Mapping[str, int]) -> FilterPlan:
-        """Compile one partition's NFA at the shared pad targets."""
+        """Compile one partition's NFA at the shared pad targets.
+
+        The pad dict is exposed to :meth:`plan` as ``self._plan_pads``
+        for the duration of the call — engines with derived plan tables
+        whose shapes are not a pure function of ``(n_states, n_queries)``
+        (e.g. the streaming megakernel's block count and accept-lane
+        width) read their uniform targets from it so per-part tables
+        stack along the leading part axis.
+        """
         if not pads:
             return self.plan(nfa)
         if "n_tags" in pads and pads["n_tags"] > nfa.n_tags:
             nfa = dataclasses.replace(nfa, n_tags=pads["n_tags"])
         nfa = pad_states(nfa, to=pads["n_states"])
-        return self._pad_plan_queries(self.plan(nfa), pads["n_queries"])
+        self._plan_pads = pads
+        try:
+            plan = self.plan(nfa)
+        finally:
+            self._plan_pads = None
+        return self._pad_plan_queries(plan, pads["n_queries"])
 
     def _pad_plan_queries(self, plan: FilterPlan,
                           n_queries: int) -> FilterPlan:
@@ -477,6 +512,66 @@ class FilterEngine(abc.ABC):
         tables["accept_state"] = jnp.asarray(
             np.concatenate([acc_h, np.zeros(extra, acc_h.dtype)]))
         return FilterPlan(plan.engine, tables, plan.meta)
+
+    def merge_pads(self, old: Mapping[str, int], new: Mapping[str, int],
+                   parts: Sequence[NFA]) -> dict[str, int]:
+        """Reconcile churn pad targets when new queries overflow a bucket.
+
+        The default is the per-key maximum of the existing and freshly
+        derived targets.  Engines whose derived table shapes are *joint*
+        functions of several targets (the streaming megakernel's block
+        count and accept-lane width both depend on the block size)
+        override this to re-derive the dependent keys at the merged
+        independent ones — a per-key max of separately-derived values
+        can otherwise be infeasible.
+        """
+        return {k: max(new.get(k, 0), old.get(k, 0))
+                for k in set(new) | set(old)}
+
+    # ---------------------------------------------- kernel autotune hook
+    def kernel_config(self, n_states: int, n_tags: int) -> dict | None:
+        """Plan-level kernel selection + launch-shape autotune hook.
+
+        Engines with a Pallas hot path override this to pick their
+        kernel launch parameters (state-block size, SMEM chunk length,
+        …) from the plan's *static* shape at ``plan()`` time — so the
+        choice is compiled into the plan once, not re-derived per batch.
+        :meth:`autotune_blocks` is the shared sizing helper; the
+        streaming engine adopts it for the megakernel, and any engine
+        that grows a kernel path can reuse the same hook + helper pair.
+        ``None`` (the default) means the engine has no kernel path.
+        """
+        return None
+
+    @staticmethod
+    def autotune_blocks(n_states: int, max_depth: int, *, n_tags: int,
+                        vmem_budget: int = 4 << 20,
+                        smem_budget: int = 8 << 10,
+                        chunk: int = 256) -> dict:
+        """Pick a (``blk``, ``chunk``) launch shape from static bounds.
+
+        ``blk`` (states per kernel block, a multiple of 32) is the
+        largest power-of-two candidate whose per-program VMEM footprint
+        — packed-word stack, per-tag word masks, parent gather lanes —
+        fits ``vmem_budget``, clamped down to the padded state count (no
+        point in blocks wider than the whole NFA).  ``chunk`` (events
+        per SMEM DMA chunk) is clamped to half of ``smem_budget`` (the
+        event buffer is double-buffered int32).  Engine options override
+        both knobs; this is only the default policy.
+        """
+        blk = 32
+        for cand in (1024, 512, 256, 128, 64, 32):
+            wb = cand // 32
+            need = 4 * ((max_depth + 2) * wb    # packed-word VMEM stack
+                        + (n_tags + 1) * wb     # per-tag word masks
+                        + 2 * 32 * wb           # parent word/bit lanes
+                        + 4 * wb)               # state/work rows
+            if need <= vmem_budget:
+                blk = cand
+                break
+        blk = min(blk, _round_up(max(n_states, 1), 32))
+        chunk = max(32, min(int(chunk), smem_budget // (2 * 4)))
+        return {"blk": blk, "chunk": chunk}
 
     def plan_sharded(self, n_parts: int, *,
                      query_bucket: int = 8) -> ShardedPlan:
@@ -583,15 +678,31 @@ class FilterEngine(abc.ABC):
 
         return self._cached_exec(("1d", mesh), build)(stacked, *prep)
 
+    def _event_bucket(self, bucket: int | None) -> int:
+        """Resolve an event-axis padding bucket for the byte paths.
+
+        ``None`` (the default everywhere a caller did not choose one)
+        falls back to the engine's ``event_bucket=`` option — which
+        ``FilterStage`` sets to its own ``bucket`` — so every ingest
+        path of one stage pads to the same boundaries instead of a
+        hard-coded 128 silently taking over on some of them.
+        """
+        if bucket is not None:
+            return int(bucket)
+        return int(self.options.get("event_bucket", DEFAULT_EVENT_BUCKET))
+
     def filter_bytes_sharded(self, bb: ByteBatch, sharded: ShardedPlan, *,
-                             bucket: int = 128, mesh=None) -> FilterResult:
+                             bucket: int | None = None,
+                             mesh=None) -> FilterResult:
         """Sharded twin of :meth:`filter_bytes`: device parse once, then
         one stacked parts program — bytes in, ``(B, Q_live)`` out."""
         from ...kernels.parse import DEFAULT_MAX_DEPTH, parse_batch
 
         max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
         return self.filter_batch_sharded(
-            parse_batch(bb, n_events=bb.event_bound(bucket=bucket),
+            parse_batch(bb,
+                        n_events=bb.event_bound(
+                            bucket=self._event_bucket(bucket)),
                         max_depth=max_depth),
             sharded, mesh=mesh)
 
@@ -687,7 +798,7 @@ class FilterEngine(abc.ABC):
         return self.dispatch_batch_sharded2d(batch, sharded, mesh=mesh)()
 
     def dispatch_bytes_sharded2d(self, bb: ByteBatch, sharded: ShardedPlan,
-                                 *, bucket: int = 128, mesh,
+                                 *, bucket: int | None = None, mesh,
                                  n_events: int | None = None):
         """ByteBatch twin of :meth:`dispatch_batch_sharded2d`.
 
@@ -714,7 +825,7 @@ class FilterEngine(abc.ABC):
 
         max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
         if n_events is None:
-            n_events = bb.event_bound(bucket=bucket)
+            n_events = bb.event_bound(bucket=self._event_bucket(bucket))
         if not self.device_sharded:
             # part-loop oracle; the explicit n_events keeps a placed
             # byte tensor from being read back just to re-derive it
@@ -732,12 +843,12 @@ class FilterEngine(abc.ABC):
         stacked = sharded.stacked()
 
         def build():
+            vmapped = self._vmapped_parts()
+
             def body(plan, data):
                 parsed = parse_arrays(data, n_events=n_events,
                                       max_depth=max_depth)
-                prep = self._prep_arrays(*parsed)
-                return jax.vmap(
-                    lambda pl: self._run_with_plan(pl, prep))(plan)
+                return vmapped(plan, *self._prep_arrays(*parsed))
 
             ps = jax.sharding.PartitionSpec
             return jax.jit(_shard_map(
@@ -751,7 +862,7 @@ class FilterEngine(abc.ABC):
         return self._gather2d(matched, first, sharded, b0)
 
     def filter_bytes_sharded2d(self, bb: ByteBatch, sharded: ShardedPlan,
-                               *, bucket: int = 128, mesh,
+                               *, bucket: int | None = None, mesh,
                                n_events: int | None = None) -> FilterResult:
         """Blocking convenience over :meth:`dispatch_bytes_sharded2d`."""
         return self.dispatch_bytes_sharded2d(
@@ -759,7 +870,7 @@ class FilterEngine(abc.ABC):
 
     # ------------------------------------------------------ byte ingestion
     def filter_bytes(self, bb: ByteBatch, *,
-                     bucket: int = 128) -> FilterResult:
+                     bucket: int | None = None) -> FilterResult:
         """Raw wire bytes → ``(B, Q)`` verdict, parsed on device.
 
         The ingestion seam of the paper's same-chip architecture: the
@@ -772,14 +883,18 @@ class FilterEngine(abc.ABC):
         The parse honours the engine's own ``max_depth`` bound when it
         has one and *raises* on documents nested deeper (parse_batch's
         depth check) — never a silently clipped verdict.  ``bucket``
-        bounds the compiled event-axis shapes (callers with their own
-        bucketing policy — e.g. ``FilterStage`` — pass theirs through).
+        bounds the compiled event-axis shapes; ``None`` resolves through
+        :meth:`_event_bucket` (callers with their own bucketing policy —
+        e.g. ``FilterStage`` — thread theirs via the ``event_bucket=``
+        engine option or pass it explicitly).
         """
         from ...kernels.parse import DEFAULT_MAX_DEPTH, parse_batch
 
         max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
         return self.filter_batch(
-            parse_batch(bb, n_events=bb.event_bound(bucket=bucket),
+            parse_batch(bb,
+                        n_events=bb.event_bound(
+                            bucket=self._event_bucket(bucket)),
                         max_depth=max_depth))
 
     # --------------------------------------------------------- conveniences

@@ -6,18 +6,29 @@ bounded on-chip stack of packed 32-bit state bitmasks realizes the paper's
 tag stack (push on open, pop on close); the TOS-match is the read of the
 stack top that feeds the transition.
 
-The document is consumed with one ``lax.scan`` step per event — the TPU
-analogue of the paper's one-symbol-per-clock pipeline (we step per *event*
-rather than per byte; the byte→event pre-decode is its own parallel kernel,
-:mod:`repro.kernels.predecode`, mirroring the paper's §3.4 pre-decoder).
+Two executions of the same semantics:
+
+* **megakernel** (``kernel="pallas"``, the default device path on TPU) —
+  :func:`repro.kernels.stream_filter.stream_filter_pallas`: one fused
+  Pallas program gridded over (documents × state-word blocks), state
+  packed in VMEM end to end, events DMA'd through double-buffered SMEM
+  chunks.  Block tables are compiled into the plan
+  (:func:`repro.kernels.blocks.state_layout`), block/chunk sizes come
+  from the plan-level autotune hook
+  (:meth:`repro.core.engines.base.FilterEngine.autotune_blocks`).
+* **scan** (``kernel="scan"``, the oracle/fallback and the default off
+  TPU, where Pallas only interprets) — one ``lax.scan`` step per event;
+  the kernel is bit-identical to it by construction and by test
+  (tests/test_megakernel.py).
 
 State bitmasks are packed ``uint32`` words (the FPGA keeps one FF per
-state; we keep one bit), so the scan carry is ``(max_depth+2, S/32)`` words
-per document — small enough for VMEM at thousands of queries, and XLA
-donates it in place across scan steps.
+state; we keep one bit), so the per-document stack is ``(max_depth+2,
+S/32)`` words — small enough for VMEM at thousands of queries.  The one
+``max_depth`` in the plan metadata bounds *both* paths, so kernel and
+scan can never disagree on stack clipping.
 
 Compilation happens once, in :meth:`StreamingEngine.plan`; the batched
-path is ``vmap`` of the same scan over an
+path is ``vmap`` of the scan — or one megakernel launch — over an
 :class:`~repro.core.events.EventBatch`.
 """
 from __future__ import annotations
@@ -28,11 +39,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...kernels import blocks as blocks_mod
+from ...kernels import interpret_default
+from ...kernels import stream_filter as sf
+from ...kernels.parse import DEFAULT_MAX_DEPTH
 from ..dictionary import OPEN_NBYTES
 from ..events import CLOSE, OPEN, ByteBatch, EventBatch, EventStream
 from ..nfa import NFA, WILD_TAG, pad_states
 from . import base
 from .result import NO_MATCH, FilterResult
+
+#: execution modes for the ``kernel=`` engine option
+KERNEL_MODES = ("auto", "pallas", "scan")
 
 
 def _pack_words(bits: jax.Array) -> jax.Array:
@@ -93,8 +111,8 @@ def _run(kind, tag, in_state, in_tag, selfloop, init_words, accept_state,
 
 @jax.jit
 def _run_batch(plan: base.FilterPlan, kind: jax.Array, tag: jax.Array):
-    """vmap of the event scan over a (B, N) batch; plan is a pytree arg,
-    so one trace serves every batch of the same shape."""
+    """Scan path: vmap of the event scan over a (B, N) batch; plan is a
+    pytree arg, so one trace serves every batch of the same shape."""
     meta = plan.meta
     fn = functools.partial(
         _run,
@@ -105,15 +123,66 @@ def _run_batch(plan: base.FilterPlan, kind: jax.Array, tag: jax.Array):
     return jax.vmap(fn, in_axes=(0, 0))(kind, tag)
 
 
-@functools.partial(jax.jit, static_argnames=("n_events",))
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _run_batch_kernel(plan: base.FilterPlan, kind: jax.Array,
+                      tag: jax.Array, interpret: bool | None = None):
+    """Megakernel path: one fused Pallas launch over (docs × blocks),
+    then the accept-lane → query gather (the priority encoder)."""
+    meta = plan.meta
+    mb, fb = sf.stream_filter_pallas(
+        sf.fuse_events(kind, tag),
+        plan["kb_tagmask"], plan["kb_pw"], plan["kb_pb"],
+        plan["kb_selfloop"], plan["kb_init"],
+        plan["kb_acc_word"], plan["kb_acc_bit"],
+        max_depth=meta["max_depth"], chunk=meta["chunk"],
+        interpret=interpret)
+    matched = mb[:, plan["kb_acc_block"], plan["kb_acc_slot"]] != 0
+    first = fb[:, plan["kb_acc_block"], plan["kb_acc_slot"]]
+    return matched, first
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _run_parts_kernel(plan: base.FilterPlan, kind: jax.Array,
+                      tag: jax.Array, interpret: bool | None = None):
+    """Stacked sharded plan (leading part axis) through ONE megakernel
+    launch: parts fold into the block-grid axis — more profiles are just
+    more independent blocks, the paper's profiles-across-chips scaling
+    without a second program.  Returns (P, B, Qpad) matched/first."""
+    meta = plan.meta
+    g = meta["n_blocks"]
+
+    def fold(x):
+        return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+    mb, fb = sf.stream_filter_pallas(
+        sf.fuse_events(kind, tag),
+        fold(plan["kb_tagmask"]), fold(plan["kb_pw"]), fold(plan["kb_pb"]),
+        fold(plan["kb_selfloop"]), fold(plan["kb_init"]),
+        fold(plan["kb_acc_word"]), fold(plan["kb_acc_bit"]),
+        max_depth=meta["max_depth"], chunk=meta["chunk"],
+        interpret=interpret)
+    b = kind.shape[0]
+    p = plan["kb_selfloop"].shape[0]
+    mb = mb.reshape(b, p, g, -1)
+    fb = fb.reshape(b, p, g, -1)
+    gather = jax.vmap(lambda m, ab, sl: m[:, ab, sl], in_axes=(1, 0, 0))
+    matched = gather(mb, plan["kb_acc_block"], plan["kb_acc_slot"]) != 0
+    first = gather(fb, plan["kb_acc_block"], plan["kb_acc_slot"])
+    return matched, first
+
+
+@functools.partial(jax.jit, static_argnames=("n_events", "kernel",
+                                             "interpret"))
 def _run_bytes_batch(plan: base.FilterPlan, data: jax.Array,
-                     n_events: int | None = None):
+                     n_events: int | None = None, kernel: bool = False,
+                     interpret: bool | None = None):
     """Fused ingest+filter: (B, L) raw wire bytes → (B, Q) verdicts as ONE
     compiled program — the paper's same-chip parser+filter (§1).
 
     The one byte→event pipeline (:func:`repro.kernels.parse.parse_arrays`:
     batched pre-decode + cumsum compaction) and the event-stream state
-    scan inline into a single XLA computation; the structure outputs this
+    advance — the megakernel when ``kernel=True``, the scan otherwise —
+    inline into a single XLA computation; the structure outputs this
     engine doesn't read (depth/parent scans) are dead-code-eliminated.
     Between the byte tensor going in and the verdict coming out there is
     no host transfer and no per-event Python.  ``n_events`` is the static
@@ -126,49 +195,219 @@ def _run_bytes_batch(plan: base.FilterPlan, data: jax.Array,
         n_events = max(1, data.shape[1] // OPEN_NBYTES)
     kind, tag, _depth, _parent, _valid, _n = parse_mod.parse_arrays(
         data, n_events=n_events)
+    if kernel:
+        return _run_batch_kernel(plan, kind.astype(jnp.int32), tag,
+                                 interpret=interpret)
     return _run_batch(plan, kind.astype(jnp.int32), tag)
 
 
 @base.register("streaming")
 class StreamingEngine(base.FilterEngine):
-    """Public API: compile once (``plan``), filter many documents."""
+    """Public API: compile once (``plan``), filter many documents.
+
+    Engine options:
+
+    * ``kernel=`` — ``"auto"`` (default: the megakernel on a real TPU,
+      the scan elsewhere — the Pallas interpreter is a correctness tool,
+      not a fast path), ``"pallas"`` (force the megakernel), ``"scan"``
+      (force the oracle scan).
+    * ``blk=`` / ``chunk=`` — override the autotuned states-per-block /
+      events-per-SMEM-chunk launch shape (see
+      :meth:`~repro.core.engines.base.FilterEngine.autotune_blocks`).
+    * ``kernel_interpret=`` — force the Pallas interpret flag (tests);
+      ``None`` auto-detects from the backend.
+    * ``event_bucket=`` — event-axis padding bucket for the byte paths.
+    """
 
     #: packed-word layout: the state axis must tile into 32-bit words
     state_multiple = 32
     device_sharded = True
 
-    def __init__(self, nfa: NFA, dictionary=None, max_depth: int = 64,
-                 **options) -> None:
+    def __init__(self, nfa: NFA, dictionary=None,
+                 max_depth: int = DEFAULT_MAX_DEPTH, **options) -> None:
         self.max_depth = max_depth
         sm = int(options.get("state_multiple", self.state_multiple))
         if sm % 32 != 0:
             raise ValueError(
                 f"streaming packs 32-state words; state_multiple={sm} "
                 f"is not a multiple of 32")
+        mode = options.get("kernel", "auto")
+        if mode not in KERNEL_MODES:
+            raise ValueError(
+                f"kernel={mode!r} is not one of {KERNEL_MODES}")
+        self.kernel_mode = mode
+        # resolved ONCE, before plan() runs: plans carry the kb_* block
+        # tables only when this engine will actually run the megakernel
+        # (scan-only engines skip the layout work and the table memory)
+        self.kernel_enabled = (mode == "pallas"
+                               or (mode == "auto"
+                                   and not interpret_default()))
         super().__init__(nfa, dictionary, **options)
+
+    # ------------------------------------------------------ kernel routing
+    def _kernel_on(self) -> bool:
+        """Megakernel or scan?  ``auto`` picks the kernel exactly when
+        Pallas compiles for this backend (a real TPU); the choice is
+        frozen at engine construction, matching the plan's tables."""
+        return self.kernel_enabled
+
+    def _kernel_interpret(self) -> bool | None:
+        ki = self.options.get("kernel_interpret")
+        return None if ki is None else bool(ki)
+
+    def kernel_config(self, n_states: int, n_tags: int) -> dict:
+        """Megakernel launch shape: the shared autotune policy, with the
+        ``blk=`` / ``chunk=`` engine options as overrides."""
+        cfg = self.autotune_blocks(n_states, self.max_depth, n_tags=n_tags)
+        if "blk" in self.options:
+            cfg["blk"] = int(self.options["blk"])
+        if "chunk" in self.options:
+            cfg["chunk"] = max(32, int(self.options["chunk"]))
+        return cfg
 
     def plan(self, nfa: NFA) -> base.FilterPlan:
         nfa = pad_states(nfa, self.state_multiple)
         t = nfa.tables
         init_words = jax.device_get(
             _pack_words(jnp.asarray(t.init.astype(np.int32))))
-        return base.FilterPlan(
-            "streaming",
-            tables=dict(
-                in_state=jnp.asarray(t.in_state),
-                in_tag=jnp.asarray(t.in_tag),
-                selfloop=jnp.asarray(t.selfloop.astype(np.int32)),
-                init_words=jnp.asarray(init_words),
-                accept_state=jnp.asarray(t.accept_state),
-            ),
-            meta={"n_states": int(t.in_state.shape[0]),
-                  "max_depth": self.max_depth,
-                  "state_multiple": self.state_multiple,
-                  # document prep is pure-device (the scan consumes the
-                  # raw event stream), so the 2-D mesh path can fuse
-                  # parse+filter into one shard_map program
-                  "prep": "events-device"},
+        tables = dict(
+            in_state=jnp.asarray(t.in_state),
+            in_tag=jnp.asarray(t.in_tag),
+            selfloop=jnp.asarray(t.selfloop.astype(np.int32)),
+            init_words=jnp.asarray(init_words),
+            accept_state=jnp.asarray(t.accept_state),
         )
+        meta = {"n_states": int(t.in_state.shape[0]),
+                # ONE stack bound for scan and kernel alike — threaded
+                # from here everywhere, never a per-path default
+                "max_depth": self.max_depth,
+                "state_multiple": self.state_multiple,
+                # document prep is pure-device (scan and kernel both
+                # consume the raw event stream), so the 2-D mesh path
+                # can fuse parse+filter into one shard_map program
+                "prep": "events-device"}
+        if self.kernel_enabled:
+            pads = dict(self._plan_pads or {})
+            cfg = self.kernel_config(nfa.n_states, nfa.n_tags)
+            mk = blocks_mod.state_layout(
+                nfa, blk=int(pads.get("blk", cfg["blk"])),
+                n_blocks=pads.get("n_blocks"),
+                block_queries=pads.get("block_queries"))
+            # megakernel block tables (kb_*): bit-packed per-block form
+            # of the same NFA, compiled once per plan
+            tables.update(
+                kb_tagmask=jnp.asarray(mk.tagmask),
+                kb_pw=jnp.asarray(mk.pw),
+                kb_pb=jnp.asarray(mk.pb),
+                kb_selfloop=jnp.asarray(mk.selfloop_words),
+                kb_init=jnp.asarray(mk.init_words),
+                kb_acc_word=jnp.asarray(mk.acc_word),
+                kb_acc_bit=jnp.asarray(mk.acc_bit),
+                kb_acc_block=jnp.asarray(mk.acc_block),
+                kb_acc_slot=jnp.asarray(mk.acc_slot),
+            )
+            meta.update(blk=mk.blk, chunk=cfg["chunk"],
+                        n_blocks=mk.n_blocks,
+                        block_queries=mk.block_queries)
+        return base.FilterPlan("streaming", tables, meta)
+
+    # ------------------------------------------------------- sharded hooks
+    def _kernel_pad_targets(self, parts, pads, *, min_blk: int = 0) -> dict:
+        """Uniform megakernel layout targets for ``parts`` at the given
+        (``n_states``, ``n_tags``) pads: one common block size (the
+        autotuned candidate grown to every part's largest subtree and to
+        ``min_blk``), then the block count and accept-lane width each
+        part needs AT that block size — jointly derived, so the returned
+        set is always feasible for these parts."""
+        cfg = self.kernel_config(pads["n_states"], pads["n_tags"])
+        padded = [pad_states(nfa, to=pads["n_states"]) for nfa in parts]
+        blk = max([int(cfg["blk"]), int(min_blk)]
+                  + [blocks_mod.min_block_size(nfa) for nfa in padded])
+        layouts = [blocks_mod.state_layout(nfa, blk=blk) for nfa in padded]
+        return {"blk": max([blk] + [lo.blk for lo in layouts]),
+                "n_blocks": base._round_up(
+                    max(lo.n_blocks for lo in layouts), 2),
+                "block_queries": base._round_up(
+                    max(lo.block_queries for lo in layouts), 8)}
+
+    def part_pads(self, parts, *, query_bucket: int = 8):
+        """Uniform pad targets incl. the megakernel block axes.
+
+        Per-part block tables stack along the leading part axis, so all
+        parts must agree on the tag space, the block size, the block
+        count and the accept-lane width; each target is bucketed so
+        churn rarely forces an all-parts replan.  Scan-only engines skip
+        the kernel targets entirely (their plans carry no block tables).
+        """
+        pads = super().part_pads(parts, query_bucket=query_bucket)
+        if not pads:
+            return pads
+        pads["n_tags"] = base._round_up(
+            max((nfa.n_tags for nfa in parts), default=1), 64)
+        if self.kernel_enabled:
+            pads.update(self._kernel_pad_targets(parts, pads))
+        return pads
+
+    def merge_pads(self, old, new, parts):
+        """Churn reconcile: per-key max for the independent targets,
+        then re-derive the block layout keys at the merged block size —
+        a per-key max of (``blk``, ``n_blocks``, ``block_queries``)
+        derived at *different* block sizes can be infeasible (bigger
+        blocks pack more subtrees, needing more accept lanes per
+        block)."""
+        merged = super().merge_pads(old, new, parts)
+        if not self.kernel_enabled or "blk" not in merged:
+            return merged
+        # re-derive AT the final merged block size: layouts computed at
+        # a smaller blk can under-count the lanes/blocks a bigger block
+        # needs, so min_blk pins the derivation to the merged value
+        targets = self._kernel_pad_targets(
+            parts, {"n_states": merged["n_states"],
+                    "n_tags": merged["n_tags"]},
+            min_blk=merged["blk"])
+        # keep monotone growth vs the old buckets (stacking headroom),
+        # but never below what the merged block size actually needs
+        for k, v in targets.items():
+            merged[k] = max(merged.get(k, 0), v)
+        return merged
+
+    def _pad_plan_queries(self, plan: base.FilterPlan,
+                          n_queries: int) -> base.FilterPlan:
+        """Pad the query axis: accept columns at state 0 (never matches)
+        and megakernel accept lanes at every block's reserved inert lane
+        (``QB-1``, wired to the local root) — inert by construction."""
+        if not self.kernel_enabled:  # scan plans carry no kb_* tables
+            return super()._pad_plan_queries(plan, n_queries)
+        acc = np.asarray(plan["accept_state"])
+        extra = n_queries - int(acc.shape[0])
+        if extra <= 0:
+            return plan
+        qb = plan.meta["block_queries"]
+        tables = plan.tables
+        ab = np.asarray(plan["kb_acc_block"])
+        sl = np.asarray(plan["kb_acc_slot"])
+        # pad on the host: a device concatenate would XLA-compile once
+        # per novel shape, dominating per-op churn latency
+        tables["accept_state"] = jnp.asarray(
+            np.concatenate([acc, np.zeros(extra, acc.dtype)]))
+        tables["kb_acc_block"] = jnp.asarray(
+            np.concatenate([ab, np.zeros(extra, ab.dtype)]))
+        tables["kb_acc_slot"] = jnp.asarray(
+            np.concatenate([sl, np.full(extra, qb - 1, sl.dtype)]))
+        return base.FilterPlan(plan.engine, tables, plan.meta)
+
+    def _vmapped_parts(self):
+        """Kernel path: parts fold into the megakernel's block grid (one
+        launch, no vmap-of-pallas); scan path: the base vmap."""
+        if not self._kernel_on():
+            return super()._vmapped_parts()
+        interpret = self._kernel_interpret()
+
+        def run_parts(plan, *prep):
+            kind, tag = prep
+            return _run_parts_kernel(plan, kind, tag, interpret=interpret)
+
+        return run_parts
 
     # --------------------------------------------------- explicit-plan body
     def _prep(self, batch: EventBatch) -> tuple:
@@ -176,12 +415,15 @@ class StreamingEngine(base.FilterEngine):
                 jnp.asarray(batch.tag_id))
 
     def _prep_arrays(self, kind, tag, depth, parent, valid, n_events):
-        # the scan reads only (kind, tag); depth/parent/valid are
-        # dead-code-eliminated out of the fused program
+        # the state advance reads only (kind, tag); depth/parent/valid
+        # are dead-code-eliminated out of the fused program
         return (kind.astype(jnp.int32), tag)
 
     def _run_with_plan(self, plan: base.FilterPlan, prep: tuple):
         kind, tag = prep
+        if self._kernel_on():
+            return _run_batch_kernel(plan, kind, tag,
+                                     interpret=self._kernel_interpret())
         return _run_batch(plan, kind, tag)
 
     def filter_document(self, ev: EventStream) -> FilterResult:
@@ -198,17 +440,19 @@ class StreamingEngine(base.FilterEngine):
         return self.filter_batch_with_plan(self.plan_, batch)
 
     def filter_bytes(self, bb: ByteBatch, *,
-                     bucket: int = 128) -> FilterResult:
+                     bucket: int | None = None) -> FilterResult:
         """Bytes → verdict as one jitted program (no intermediate
         EventBatch, no host round-trip) — see :func:`_run_bytes_batch`."""
-        matched, first = _run_bytes_batch(self.plan_, jnp.asarray(bb.data),
-                                          bb.event_bound(bucket=bucket))
+        matched, first = _run_bytes_batch(
+            self.plan_, jnp.asarray(bb.data),
+            bb.event_bound(bucket=self._event_bucket(bucket)),
+            kernel=self._kernel_on(), interpret=self._kernel_interpret())
         return FilterResult(np.asarray(matched), np.asarray(first))
 
     def filter_documents_batched(self, kind: np.ndarray,
                                  tag: np.ndarray) -> FilterResult:
         """Legacy raw-array batched API (prefer :meth:`filter_batch`)."""
-        matched, first = _run_batch(
-            self.plan_, jnp.asarray(np.asarray(kind).astype(np.int32)),
-            jnp.asarray(tag))
+        matched, first = self._run_with_plan(
+            self.plan_, (jnp.asarray(np.asarray(kind).astype(np.int32)),
+                         jnp.asarray(tag)))
         return FilterResult(np.asarray(matched), np.asarray(first))

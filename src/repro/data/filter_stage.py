@@ -110,8 +110,12 @@ class FilterStage:
         self._gids = np.arange(len(self.profiles), dtype=np.int32)
         self.nfa: NFA = compile_queries(list(self.profiles), self.dictionary,
                                         shared=True)
+        # event_bucket threads this stage's padding bucket into every
+        # engine byte path, so a call that omits bucket= can never fall
+        # back to a different (hard-coded) boundary than the stage's own
         self._eng = engines.create(self.engine, self.nfa,
-                                   dictionary=self.dictionary)
+                                   dictionary=self.dictionary,
+                                   event_bucket=self.bucket)
         if (self.query_shards > 1 or self.data_shards > 1) \
                 and self.mesh is None:
             from ..launch.mesh import make_filter_mesh
@@ -178,7 +182,8 @@ class FilterStage:
         self.nfa = compile_queries([self._live[g] for g in gids],
                                    self.dictionary, shared=True)
         self._eng = engines.create(self.engine, self.nfa,
-                                   dictionary=self.dictionary)
+                                   dictionary=self.dictionary,
+                                   event_bucket=self.bucket)
         self._gids = np.asarray(gids, np.int32)
 
     def _grow_shard_map(self, gid: int, shard: int | None) -> None:

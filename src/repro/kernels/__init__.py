@@ -8,8 +8,14 @@
                             host oracle: EventBatch.from_streams
 * :mod:`.nfa_transition` -- levelwise NFA transition (2 matmuls + mask);
                             host oracle: ref.nfa_transition
-* :mod:`.stream_filter`  -- FPGA-analogue streaming filter, VMEM stack;
-                            host oracle: ref.stream_filter
+* :mod:`.stream_filter`  -- batched bit-packed streaming megakernel
+                            (docs x word-blocks grid, packed VMEM stack,
+                            SMEM event chunks); host oracles:
+                            ref.stream_filter_words (one block) and the
+                            StreamingEngine kernel="scan" path (end to
+                            end)
+* :mod:`.blocks`         -- word-aligned parent-closed state-block
+                            layout the megakernel consumes
 * :mod:`.ops`            -- jit'd public wrappers (+ interpret switch)
 * :mod:`.ref`            -- pure-jnp oracles (tests assert allclose)
 

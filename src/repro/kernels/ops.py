@@ -14,15 +14,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.dictionary import TagDictionary
-from ..core.engines.result import NO_MATCH, FilterResult
+from ..core.engines.result import FilterResult
 from ..core.events import EventStream
 from ..core.xpath import Query
-from . import blocks as blocks_mod
-from . import interpret_default as _interpret_default
 from . import ref
 from .nfa_transition import nfa_transition_pallas
+from .parse import DEFAULT_MAX_DEPTH
 from .predecode import predecode_pallas
-from .stream_filter import stream_filter_pallas
 
 
 def predecode(bytes_: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -49,32 +47,29 @@ def decode_document(buf: bytes, dictionary: TagDictionary) -> EventStream:
 
 
 class StreamFilterKernelEngine:
-    """End-to-end engine on the stream_filter kernel (Fig 5 layout).
+    """End-to-end engine on the streaming megakernel (Fig 5 layout).
 
-    Queries are packed into parent-closed state blocks; all blocks advance
-    over the event stream inside one pallas_call; accept states map back
-    to query ids (the output priority encoder).
+    Queries are compiled to one shared NFA, decomposed into parent-closed
+    word-aligned state blocks (:func:`repro.kernels.blocks.state_layout`)
+    and advanced over the event stream inside one pallas_call; accept
+    lanes map back to query ids (the output priority encoder).  A thin
+    demo wrapper over ``StreamingEngine(kernel="pallas")`` — the full
+    engine (batched, sharded, byte-fused) lives there.
     """
 
     def __init__(self, queries: list[Query], dictionary: TagDictionary,
-                 blk: int = 256, max_depth: int = 48) -> None:
-        self.tables = blocks_mod.partition(queries, dictionary, blk=blk)
+                 blk: int = 256,
+                 max_depth: int = DEFAULT_MAX_DEPTH) -> None:
+        from ..core.engines.streaming import StreamingEngine
+        from ..core.nfa import compile_queries
+
         self.max_depth = max_depth
-        t = self.tables
-        self._dev = dict(
-            in_tag=jnp.asarray(t.in_tag), wild=jnp.asarray(t.wild),
-            selfloop=jnp.asarray(t.selfloop), init=jnp.asarray(t.init),
-            parent_1h=jnp.asarray(t.parent_1h))
-        self.n_queries = len(t.accept_block)
+        self._eng = StreamingEngine(
+            compile_queries(list(queries), dictionary, shared=True),
+            dictionary, max_depth=max_depth, kernel="pallas", blk=blk)
+        self.n_queries = self._eng.n_queries
 
     def filter_document(self, ev: EventStream) -> FilterResult:
-        ever, first = stream_filter_pallas(
-            jnp.asarray(ev.kind.astype(np.int32)), jnp.asarray(ev.tag_id),
-            self._dev["in_tag"], self._dev["wild"], self._dev["selfloop"],
-            self._dev["init"], self._dev["parent_1h"],
-            max_depth=self.max_depth, interpret=_interpret_default())
-        ever, first = np.asarray(ever), np.asarray(first)
-        t = self.tables
-        matched = ever[t.accept_block, t.accept_local] > 0
-        fe = first[t.accept_block, t.accept_local]
-        return FilterResult(matched, np.where(matched, fe, NO_MATCH))
+        from ..core.events import EventBatch
+
+        return self._eng.filter_batch(EventBatch.from_streams([ev]))[0]

@@ -81,32 +81,46 @@ def nfa_transition(parent_rows: jax.Array, tags: jax.Array, req: jax.Array,
     return nxt * (tags >= 0)[:, None].astype(jnp.float32)
 
 
-def stream_filter(kind: jax.Array, tag: jax.Array, in_tag: jax.Array,
-                  wild: jax.Array, selfloop: jax.Array, init: jax.Array,
-                  parent_1h: jax.Array, max_depth: int
-                  ) -> tuple[jax.Array, jax.Array]:
-    """One state-block of the FPGA-analogue streaming filter.
+def stream_filter_words(events: jax.Array, tagmask: jax.Array,
+                        pw: jax.Array, pb: jax.Array,
+                        selfloop_words: jax.Array, init_words: jax.Array,
+                        acc_word: jax.Array, acc_bit: jax.Array,
+                        max_depth: int) -> tuple[jax.Array, jax.Array]:
+    """One word-block of the bit-packed streaming megakernel, as a scan.
 
-    kind/tag  (N,) int32 — the event stream (shared by all blocks, §3.2)
-    in_tag    (BLK,) int32, wild/selfloop/init (BLK,) f32
-    parent_1h (BLK, BLK) f32 — block-local parent matrix
-    returns   (ever_active (BLK,) f32, first_active (BLK,) int32) — per
-    state; accept-state → query mapping is applied by the caller (the
-    paper's priority encoder).
+    The semantic ground truth for
+    :func:`repro.kernels.stream_filter.stream_filter_pallas`, one block
+    at a time: the same packed-``uint32`` state words, per-tag word
+    masks, in-block parent gathers and bounded stack, expressed as a
+    ``lax.scan`` over the fused event stream.
+
+    events          (N,) int32 — ``(kind << 16) | (tag & 0xffff)``
+    tagmask         (T+1, WB) uint32 — per-tag match words (row T: wild)
+    pw / pb         (WB, 32) int32 — parent word / bit per state lane
+    selfloop/init   (WB,) uint32 packed words
+    acc_word/bit    (QB,) int32 — accept lanes (local word, bit)
+    returns         (matched (QB,) bool, first (QB,) int32)
     """
-    n = kind.shape[0]
-    blk = in_tag.shape[0]
+    n = events.shape[0]
+    wb = selfloop_words.shape[0]
+    n_tags = tagmask.shape[0] - 1
     no_match = jnp.int32(jnp.iinfo(jnp.int32).max)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (wb, 32), 1)
 
     def step(carry, xs):
-        stack, depth, ever, first = carry
-        k, t, i = xs
+        stack, depth, matched, first = carry
+        ev, i = xs
+        k = ev >> 16
+        t = ev & 0xFFFF
         is_open = k == OPEN
         is_close = k == CLOSE
         row = jax.lax.dynamic_index_in_dim(stack, depth, keepdims=False)
-        tagmatch = (in_tag == t).astype(jnp.float32) + wild
-        src = row @ parent_1h
-        nxt = jnp.minimum(src * tagmatch + row * selfloop, 1.0)
+        tclip = jnp.where((t >= 0) & (t < n_tags), t, n_tags)
+        trow = jax.lax.dynamic_index_in_dim(tagmask, tclip, keepdims=False)
+        bits = (jnp.take(row, pw, axis=0)
+                >> pb.astype(jnp.uint32)) & jnp.uint32(1)
+        src = jnp.sum(bits << lane, axis=1, dtype=jnp.uint32)
+        nxt = (src & trow) | (selfloop_words & row)
         widx = jnp.clip(depth + 1, 0, max_depth + 1)
         old = jax.lax.dynamic_index_in_dim(stack, widx, keepdims=False)
         stack = jax.lax.dynamic_update_index_in_dim(
@@ -114,15 +128,18 @@ def stream_filter(kind: jax.Array, tag: jax.Array, in_tag: jax.Array,
         depth = jnp.clip(depth + jnp.where(is_open, 1,
                                            jnp.where(is_close, -1, 0)),
                          0, max_depth + 1)
-        active = jnp.where(is_open, nxt, jnp.zeros_like(nxt))
-        newly = (active > 0) & (ever == 0)
+        accbits = (jnp.take(nxt, acc_word, axis=0)
+                   >> acc_bit.astype(jnp.uint32)) & jnp.uint32(1)
+        active = is_open & (accbits != 0)
+        newly = active & ~matched
         first = jnp.where(newly, i, first)
-        ever = jnp.maximum(ever, active)
-        return (stack, depth, ever, first), None
+        matched = matched | active
+        return (stack, depth, matched, first), None
 
-    stack0 = jnp.zeros((max_depth + 2, blk), jnp.float32).at[0].set(init)
-    carry0 = (stack0, jnp.int32(0), jnp.zeros(blk, jnp.float32),
-              jnp.full(blk, no_match, jnp.int32))
-    (stack, depth, ever, first), _ = jax.lax.scan(
-        step, carry0, (kind, tag, jnp.arange(n, dtype=jnp.int32)))
-    return ever, first
+    qb = acc_word.shape[0]
+    stack0 = jnp.zeros((max_depth + 2, wb), jnp.uint32).at[0].set(init_words)
+    carry0 = (stack0, jnp.int32(0), jnp.zeros(qb, bool),
+              jnp.full(qb, no_match, jnp.int32))
+    (stack, depth, matched, first), _ = jax.lax.scan(
+        step, carry0, (events, jnp.arange(n, dtype=jnp.int32)))
+    return matched, first

@@ -1,25 +1,43 @@
-"""Pallas kernel: FPGA-analogue streaming filter with a VMEM stack.
+"""Pallas megakernel: batched, bit-packed bytes→verdict streaming filter.
 
-The closest TPU realization of the paper's architecture (Fig 5): state
-blocks (one per "hardware region") advance in lock-step over the shared
-event stream; each block keeps the document stack in **VMEM** — the
-on-chip memory playing the role of the FPGA's block RAM stack (§3.2).
+The closest TPU realization of the paper's architecture (Fig 5), and the
+default device hot path of ``StreamingEngine``: the whole event→verdict
+datapath runs as ONE fused kernel so that — exactly like the FPGA, where
+parser and filter share a chip and every symbol advances all query blocks
+in a single clock (§1, §3.2–3.4) — no per-event tensor ever leaves the
+core.
 
-* The event stream lives in SMEM (scalar-fetched once per event — the
-  "8-bit streaming XML interface" of Fig 3).
-* Each grid program owns one block of ≤BLK states, *closed under parent
-  pointers* (the partitioner in :mod:`repro.kernels.blocks` mirrors the
-  paper's §3.3 sort-and-cluster flow), so blocks never communicate —
-  exactly the property that lets the paper tile thousands of queries.
-* The per-event transition is a (1, BLK) × (BLK, BLK) matmul (parent
-  gather) plus VPU selects — one MXU issue per event per block.
+Layout (see the README "Kernel hot path" diagram):
 
-Outputs per state: ever-active flag and first-active event index; the
-caller maps accept states to queries (priority encoder).
+* **grid = (documents × state-word blocks)** — each program owns one
+  document and one block of ≤BLK states *closed under parent pointers*
+  (:func:`repro.kernels.blocks.state_layout` mirrors the paper's §3.3
+  sort-and-cluster flow), so blocks never communicate — the property
+  that lets the paper tile thousands of profiles.  Sharded plans fold
+  their part axis into this block axis: more profiles are just more
+  blocks, the paper's profiles-across-chips replication.
+* **state = packed uint32 words in VMEM, end to end** — the document
+  stack is a ``(max_depth+2, BLK/32)`` packed-word buffer in VMEM, the
+  on-chip analogue of the FPGA's block-RAM tag stack (§3.2).  There is
+  no per-event unpack/repack: the per-event transition is a per-tag
+  word-mask row gather plus an in-block parent word/bit gather and three
+  bitwise ops — replacing both the scan path's unpack→gather→pack round
+  trip and the old float32 ``(BLK, BLK)`` parent matmul.
+* **events stream through SMEM chunks** — the fused ``(kind<<16)|tag``
+  event words are DMA'd from HBM into a double-buffered SMEM scratch
+  (the "8-bit streaming XML interface" of Fig 3); the prefetch of chunk
+  *k+1* overlaps the event loop on chunk *k*.
 
-Host oracle: :func:`repro.kernels.ref.stream_filter` (pure-jnp scan of
-one state block); tests/test_kernels.py asserts exact agreement, and the
-end-to-end engine is checked against the recursive oracle engine.
+Outputs per (document, block): the block's accept-lane verdict bits and
+first-match event indices; the caller maps lanes back to queries (the
+paper's priority encoder).
+
+Host oracles: :func:`repro.kernels.ref.stream_filter_words` (pure-jnp
+scan of one word-block over the same packed tables — the unit-level
+ground truth, tests/test_kernels.py asserts exact agreement) and the
+``StreamingEngine`` ``lax.scan`` path (``kernel="scan"``, the end-to-end
+oracle — tests/test_megakernel.py asserts the kernel is *bit-identical*
+to it on ragged batches, churned plans and depth-overflow documents).
 """
 from __future__ import annotations
 
@@ -31,95 +49,170 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import ref
+from .blocks import _round_up
 
 NO_MATCH = jnp.iinfo(jnp.int32).max
 
+#: fused event word: kind in the high half, tag (uint16 view) in the low
+KIND_SHIFT = 16
+TAG_MASK = 0xFFFF
 
-def _kernel(kind_ref, tag_ref, in_tag_ref, wild_ref, self_ref, init_ref,
-            p1h_ref, ever_ref, first_ref, stack_ref, *, n_events: int,
-            max_depth: int):
-    blk = in_tag_ref.shape[1]
+
+def fuse_events(kind: jax.Array, tag: jax.Array) -> jax.Array:
+    """(B, N) kind/tag → one int32 event word per event.
+
+    One word per event means one SMEM scalar read per event inside the
+    kernel (and one DMA stream instead of two).  PAD events keep working
+    unchanged: their kind gates every state/stack/accept update off.
+    """
+    return ((kind.astype(jnp.int32) << KIND_SHIFT)
+            | (tag.astype(jnp.int32) & TAG_MASK))
+
+
+def _kernel(ev_ref, tagmask_ref, pw_ref, pb_ref, self_ref, init_ref,
+            accw_ref, accb_ref, matched_ref, first_ref,
+            stack_ref, evbuf_ref, sem_ref, *, n_events: int,
+            max_depth: int, chunk: int, n_tags: int):
+    b = pl.program_id(0)
+    wb = self_ref.shape[1]
+    qb = accw_ref.shape[1]
+    n_chunks = n_events // chunk
+    # fresh document: zero the VMEM stack, root context at depth 0
     stack_ref[...] = jnp.zeros_like(stack_ref)
     stack_ref[0, :] = init_ref[0, :]
-    in_tag = in_tag_ref[0, :]
-    wild = wild_ref[0, :]
-    selfloop = self_ref[0, :]
-    p1h = p1h_ref[0]
+    pw = pw_ref[0]                    # (WB, 32) parent word index per lane
+    pb = pb_ref[0].astype(jnp.uint32)  # (WB, 32) parent bit index per lane
+    selfw = self_ref[0, :]            # (WB,) packed self-loop states
+    accw = accw_ref[0, :]             # (QB,) accept-lane word
+    accb = accb_ref[0, :].astype(jnp.uint32)
+    lane = jax.lax.broadcasted_iota(jnp.uint32, (wb, 32), 1)
 
-    def body(i, carry):
-        depth, ever, first = carry
-        k = kind_ref[i]
-        t = tag_ref[i]
-        is_open = k == ref.OPEN
-        is_close = k == ref.CLOSE
-        row = stack_ref[pl.dslice(depth, 1), :]                       # (1,BLK)
-        tagmatch = (in_tag == t).astype(jnp.float32) + wild
-        src = jnp.dot(row, p1h, preferred_element_type=jnp.float32)
-        nxt = jnp.minimum(src * tagmatch[None, :] + row * selfloop[None, :],
-                          1.0)
-        widx = jnp.clip(depth + 1, 0, max_depth + 1)
-        old = stack_ref[pl.dslice(widx, 1), :]
-        stack_ref[pl.dslice(widx, 1), :] = jnp.where(is_open, nxt, old)
-        depth = jnp.clip(
-            depth + jnp.where(is_open, 1, jnp.where(is_close, -1, 0)),
-            0, max_depth + 1)
-        active = jnp.where(is_open, nxt[0], jnp.zeros((blk,), jnp.float32))
-        newly = (active > 0) & (ever == 0)
-        first = jnp.where(newly, i, first)
-        ever = jnp.maximum(ever, active)
-        return depth, ever, first
+    def event_dma(slot, ci):
+        # one chunk of this document's fused event words: HBM → SMEM
+        return pltpu.make_async_copy(
+            ev_ref.at[b, pl.ds(ci * chunk, chunk)],
+            evbuf_ref.at[slot], sem_ref.at[slot])
 
-    depth, ever, first = jax.lax.fori_loop(
-        0, n_events,
-        body,
-        (jnp.int32(0), jnp.zeros((blk,), jnp.float32),
-         jnp.full((blk,), NO_MATCH, jnp.int32)))
-    ever_ref[0, :] = ever
-    first_ref[0, :] = first
+    event_dma(0, 0).start()
+
+    def chunk_body(ci, carry):
+        slot = jax.lax.rem(ci, 2)
+
+        # prefetch chunk ci+1 into the other buffer while ci computes
+        @pl.when(ci + 1 < n_chunks)
+        def _():
+            event_dma(1 - slot, ci + 1).start()
+
+        event_dma(slot, ci).wait()
+
+        def ev_body(j, carry):
+            depth, matched, first = carry
+            ev = evbuf_ref[slot, j]
+            k = ev >> KIND_SHIFT
+            t = ev & TAG_MASK
+            is_open = k == ref.OPEN
+            is_close = k == ref.CLOSE
+            i = ci * chunk + j
+            row = stack_ref[pl.ds(depth, 1), :][0]          # (WB,) packed TOS
+            tclip = jnp.where((t >= 0) & (t < n_tags), t, n_tags)
+            trow = tagmask_ref[0, pl.ds(tclip, 1), :][0]    # per-tag words
+            # in-block parent gather, packed → packed (no unpack/repack
+            # of the stack rows; only the 32 source lanes expand)
+            bits = (jnp.take(row, pw, axis=0) >> pb) & jnp.uint32(1)
+            src = jnp.sum(bits << lane, axis=1, dtype=jnp.uint32)
+            nxt = (src & trow) | (selfw & row)
+            # push on open (write at depth+1), no-op otherwise — exactly
+            # the scan path's clip discipline, so depth overflow degrades
+            # identically on both paths
+            widx = jnp.clip(depth + 1, 0, max_depth + 1)
+            old = stack_ref[pl.ds(widx, 1), :]
+            stack_ref[pl.ds(widx, 1), :] = jnp.where(is_open, nxt[None], old)
+            depth = jnp.clip(
+                depth + jnp.where(is_open, 1, jnp.where(is_close, -1, 0)),
+                0, max_depth + 1)
+            accbits = (jnp.take(nxt, accw, axis=0) >> accb) & jnp.uint32(1)
+            active = is_open & (accbits != 0)
+            newly = active & ~matched
+            first = jnp.where(newly, i, first)
+            matched = matched | active
+            return depth, matched, first
+
+        return jax.lax.fori_loop(0, chunk, ev_body, carry)
+
+    depth, matched, first = jax.lax.fori_loop(
+        0, n_chunks, chunk_body,
+        (jnp.int32(0), jnp.zeros((qb,), bool),
+         jnp.full((qb,), NO_MATCH, jnp.int32)))
+    matched_ref[0, 0, :] = matched.astype(jnp.int32)
+    first_ref[0, 0, :] = first
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("max_depth", "interpret"))
-def stream_filter_pallas(kind: jax.Array, tag: jax.Array,
-                         in_tag: jax.Array, wild: jax.Array,
-                         selfloop: jax.Array, init: jax.Array,
-                         parent_1h: jax.Array, *, max_depth: int = 48,
+                   static_argnames=("max_depth", "chunk", "interpret"))
+def stream_filter_pallas(events: jax.Array, tagmask: jax.Array,
+                         pw: jax.Array, pb: jax.Array,
+                         selfloop_words: jax.Array, init_words: jax.Array,
+                         acc_word: jax.Array, acc_bit: jax.Array, *,
+                         max_depth: int, chunk: int = 256,
                          interpret: bool | None = None
                          ) -> tuple[jax.Array, jax.Array]:
-    """Run all state blocks over one document.
+    """Run every (document × state-word block) over the event stream.
 
-    kind/tag: (N,) int32.  Block tables: in_tag (G, BLK) int32;
-    wild/selfloop/init (G, BLK) f32; parent_1h (G, BLK, BLK) f32.
-    Returns ever (G, BLK) f32, first (G, BLK) int32.
+    events (B, N) int32 fused words (:func:`fuse_events`); block tables
+    as emitted by :func:`repro.kernels.blocks.state_layout`: tagmask
+    (G, T+1, WB) uint32, pw/pb (G, WB, 32) int32, selfloop/init words
+    (G, WB) uint32, acc_word/acc_bit (G, QB) int32.  ``max_depth`` is
+    the *plan's* stack bound — callers thread it from plan metadata so
+    kernel and scan can never disagree.  Returns matched (B, G, QB)
+    int32 0/1 and first (B, G, QB) int32 accept-lane outputs.
     ``interpret=None`` auto-detects from the backend.
     """
     from . import interpret_default
 
     if interpret is None:
         interpret = interpret_default()
-    g, blk = in_tag.shape
-    n = kind.shape[0]
-    ever, first = pl.pallas_call(
-        functools.partial(_kernel, n_events=n, max_depth=max_depth),
-        grid=(g,),
+    bsz, n = events.shape
+    g, wb = selfloop_words.shape
+    qb = acc_word.shape[1]
+    n_tags = tagmask.shape[1] - 1
+    # pad the event axis to whole SMEM chunks with inert PAD events (a
+    # short stream shrinks the chunk instead of inflating the pad tail)
+    chunk = max(32, min(int(chunk), _round_up(n, 32)))
+    npad = _round_up(n, chunk)
+    if npad != n:
+        events = jnp.pad(events, ((0, 0), (0, npad - n)),
+                         constant_values=ref.PAD << KIND_SHIFT)
+    matched, first = pl.pallas_call(
+        functools.partial(_kernel, n_events=npad, max_depth=max_depth,
+                          chunk=chunk, n_tags=n_tags),
+        grid=(bsz, g),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),          # kind
-            pl.BlockSpec(memory_space=pltpu.SMEM),          # tag
-            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # in_tag
-            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # wild
-            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # selfloop
-            pl.BlockSpec((1, blk), lambda i: (i, 0)),       # init
-            pl.BlockSpec((1, blk, blk), lambda i: (i, 0, 0)),  # parent 1h
+            # events stay off-core; the kernel DMAs SMEM chunks itself
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, n_tags + 1, wb), lambda b, gg: (gg, 0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda b, gg: (gg, 0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda b, gg: (gg, 0, 0)),
+            pl.BlockSpec((1, wb), lambda b, gg: (gg, 0)),
+            pl.BlockSpec((1, wb), lambda b, gg: (gg, 0)),
+            pl.BlockSpec((1, qb), lambda b, gg: (gg, 0)),
+            pl.BlockSpec((1, qb), lambda b, gg: (gg, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, blk), lambda i: (i, 0)),
-            pl.BlockSpec((1, blk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1, qb), lambda b, gg: (b, gg, 0)),
+            pl.BlockSpec((1, 1, qb), lambda b, gg: (b, gg, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((g, blk), jnp.float32),
-            jax.ShapeDtypeStruct((g, blk), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, g, qb), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, g, qb), jnp.int32),
         ],
-        scratch_shapes=[pltpu.VMEM((max_depth + 2, blk), jnp.float32)],
+        scratch_shapes=[
+            # the paper's block-RAM tag stack: packed words in VMEM
+            pltpu.VMEM((max_depth + 2, wb), jnp.uint32),
+            # double-buffered event chunks (the streaming interface)
+            pltpu.SMEM((2, chunk), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
         interpret=interpret,
-    )(kind, tag, in_tag, wild, selfloop, init, parent_1h)
-    return ever, first
+    )(events, tagmask, pw, pb, selfloop_words, init_words,
+      acc_word, acc_bit)
+    return matched, first

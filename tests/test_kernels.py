@@ -10,10 +10,10 @@ from repro.core.engines.levelwise import LevelwiseEngine
 from repro.core.events import encode_bytes
 from repro.core.nfa import compile_queries, pad_states
 from repro.kernels import ops, ref
-from repro.kernels.blocks import partition
+from repro.kernels.blocks import partition, state_layout
 from repro.kernels.nfa_transition import nfa_transition_pallas
 from repro.kernels.predecode import predecode_pallas
-from repro.kernels.stream_filter import stream_filter_pallas
+from repro.kernels.stream_filter import fuse_events, stream_filter_pallas
 from repro.data.generator import DTD, gen_document, gen_profiles
 
 from test_engines import ev_from_nested, fresh_dict
@@ -92,28 +92,35 @@ class TestNfaTransitionKernel:
 
 class TestStreamFilterKernel:
     def test_block_vs_ref_random_tables(self):
+        """Megakernel vs the pure-jnp word-block oracle on random packed
+        tables (no NFA semantics — pure kernel-vs-oracle agreement)."""
         rng = np.random.default_rng(0)
-        blk, n = 128, 60
-        kind = jnp.asarray(rng.integers(0, 3, size=n).astype(np.int32))
-        tag = jnp.asarray(rng.integers(0, 8, size=n).astype(np.int32))
-        in_tag = rng.integers(-3, 8, size=blk).astype(np.int32)
-        wild = (in_tag == -2).astype(np.float32)
-        selfloop = (rng.random(blk) < 0.3).astype(np.float32)
-        init = (rng.random(blk) < 0.1).astype(np.float32)
-        parent = np.zeros((blk, blk), np.float32)
-        parent[rng.integers(0, blk, size=blk), np.arange(blk)] = 1
-        want_ever, want_first = ref.stream_filter(
-            kind, tag, jnp.asarray(in_tag), jnp.asarray(wild),
-            jnp.asarray(selfloop), jnp.asarray(init), jnp.asarray(parent),
-            max_depth=16)
-        got_ever, got_first = stream_filter_pallas(
-            kind, tag, jnp.asarray(in_tag[None]), jnp.asarray(wild[None]),
-            jnp.asarray(selfloop[None]), jnp.asarray(init[None]),
-            jnp.asarray(parent[None]), max_depth=16, interpret=True)
-        np.testing.assert_allclose(np.asarray(got_ever[0]),
-                                   np.asarray(want_ever))
-        np.testing.assert_array_equal(np.asarray(got_first[0]),
-                                      np.asarray(want_first))
+        blk, wb, n, n_tags, qb = 64, 2, 60, 8, 6
+        kind = rng.integers(0, 3, size=(2, n)).astype(np.int32)
+        tag = rng.integers(0, n_tags, size=(2, n)).astype(np.int32)
+        events = fuse_events(jnp.asarray(kind), jnp.asarray(tag))
+        tagmask = rng.integers(0, 2**32, size=(n_tags + 1, wb),
+                               dtype=np.uint32)
+        in_state = np.minimum(rng.integers(0, blk, blk),
+                              np.arange(blk)).astype(np.int32)
+        pw = (in_state >> 5).reshape(wb, 32).astype(np.int32)
+        pb = (in_state & 31).reshape(wb, 32).astype(np.int32)
+        selfw = rng.integers(0, 2**32, size=wb, dtype=np.uint32)
+        initw = rng.integers(0, 2**32, size=wb, dtype=np.uint32)
+        accw = rng.integers(0, wb, qb).astype(np.int32)
+        accb = rng.integers(0, 32, qb).astype(np.int32)
+        args = [jnp.asarray(a) for a in
+                (tagmask, pw, pb, selfw, initw, accw, accb)]
+        got_m, got_f = stream_filter_pallas(
+            events, *(a[None] for a in args), max_depth=16, chunk=32,
+            interpret=True)
+        for b in range(2):
+            want_m, want_f = ref.stream_filter_words(
+                events[b], *args, max_depth=16)
+            np.testing.assert_array_equal(
+                np.asarray(got_m[b, 0]).astype(bool), np.asarray(want_m))
+            np.testing.assert_array_equal(np.asarray(got_f[b, 0]),
+                                          np.asarray(want_f))
 
     @pytest.mark.parametrize("seed,blk", [(0, 64), (1, 128), (2, 256)])
     def test_engine_matches_oracle(self, seed, blk):
@@ -139,6 +146,40 @@ class TestStreamFilterKernel:
         for g in range(t.n_blocks):
             assert t.parent_1h[g].sum(axis=0).max() <= 1.0
         assert t.n_blocks >= 1
+
+    def test_partition_word_aligns_block_size(self):
+        dtd = DTD.generate(n_tags=10, seed=6)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=16, length=4, seed=6)
+        t = partition(qs, d, blk=100)  # rounds up to the next word
+        assert t.blk % 32 == 0 and t.blk >= 100
+
+    def test_state_layout_parent_closed_and_word_aligned(self):
+        dtd = DTD.generate(n_tags=12, seed=7)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=48, length=5, p_wild=0.1, seed=7)
+        nfa = pad_states(compile_queries(qs, d, shared=True), 32)
+        mk = state_layout(nfa, blk=64)
+        t = nfa.tables
+        assert mk.blk % 32 == 0
+        for s in range(1, nfa.n_states):
+            if mk.state_block[s] < 0:
+                continue  # inert pad state dropped, or replicated context
+            p = int(t.in_state[s])
+            # parents stay in-block (root and constant-on context states
+            # are replicated per block: state_block == -2)
+            assert (p == 0 or mk.state_block[p] == -2
+                    or mk.state_block[p] == mk.state_block[s])
+        # every query's accept lane points at its accept state's bit
+        for q in range(nfa.n_queries):
+            a = int(t.accept_state[q])
+            g, slot = int(mk.acc_block[q]), int(mk.acc_slot[q])
+            loc = int(mk.state_local[a])
+            assert mk.state_block[a] == g
+            assert int(mk.acc_word[g, slot]) == loc >> 5
+            assert int(mk.acc_bit[g, slot]) == loc & 31
 
 
 class TestWavefrontKernelPath:
