@@ -23,6 +23,8 @@ import os
 import sys
 import time
 
+import numpy as np
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import engines
@@ -174,24 +176,58 @@ def run_ingest(query_counts=(64, 256), path_len=4, n_docs=16,
     return rows
 
 
+def _scenario_docs(dtd, scenario, b, nodes_per_doc, seed):
+    """Document-length mix per scenario: ``uniform`` pads fairly;
+    ``skewed`` (one long doc per 4, the rest 16× shorter) is the mix
+    segment-packing exists for."""
+    if scenario == "skewed":
+        n_long = max(1, b // 4)
+        return (gen_corpus(dtd, n_docs=n_long, nodes_per_doc=nodes_per_doc,
+                           seed=seed)
+                + gen_corpus(dtd, n_docs=b - n_long,
+                             nodes_per_doc=max(2, nodes_per_doc // 16),
+                             seed=seed + 1))
+    return gen_corpus(dtd, n_docs=b, nodes_per_doc=nodes_per_doc, seed=seed)
+
+
 def run_kernel_vs_scan(query_counts=(64, 256, 1024), batch_sizes=(4,),
                        path_len=4, nodes_per_doc=150, seed=0, repeat=2,
-                       variants=("events", "bytes")):
+                       variants=("events", "bytes"),
+                       scenarios=("uniform", "skewed")):
     """Megakernel vs scan on the streaming hot path, per ingest variant.
 
-    One row per (variant, path, batch, n_queries): the same profile set
-    and batch driven through ``StreamingEngine`` with ``kernel="scan"``
-    (the ``lax.scan`` oracle) and ``kernel="pallas"`` (the bit-packed
-    megakernel).  ``variant="events"`` times ``filter_batch`` on a
-    prebuilt :class:`EventBatch`; ``variant="bytes"`` times the fused
-    bytes→verdict program (``filter_bytes``).  The ``backend`` field
-    records whether Pallas *compiled* (a real TPU) or ran under its
-    interpreter (everywhere else) — the kernel-beats-scan claim is a
-    compiled-backend property; interpret rows exist so CI tracks both
-    paths' health and the TPU rows land in the same artifact shape.
-    ``speedup_vs_scan`` on the pallas rows is the headline number.
+    One row per (scenario, variant, path, packing, batch, n_queries):
+    the same profile set and batch driven through ``StreamingEngine``
+    with ``kernel="scan"`` (the ``lax.scan`` oracle) and
+    ``kernel="pallas"`` (the bit-packed megakernel).
+    ``variant="events"`` times ``filter_batch`` on a prebuilt
+    :class:`EventBatch`; ``variant="bytes"`` times the one-launch fused
+    bytes→verdict program (``filter_bytes``), once padded
+    (``packing="padded"``) and — on the pallas path — once
+    segment-packed (``packing="packed"``, ``filter_bytes(pack=True)``).
+    The ``backend`` field records whether Pallas *compiled* (a real
+    TPU) or ran under its interpreter (everywhere else) — the
+    kernel-beats-scan claim is a compiled-backend property; interpret
+    rows exist so CI tracks both paths' health and the TPU rows land in
+    the same artifact shape.  ``speedup_vs_scan`` on the pallas rows is
+    the headline number.  Utilization/roofline columns:
+
+    * ``events_per_slot`` — true parse events over the slots the kernel
+      actually burns (event slots for the events variant, byte slots
+      for the bytes variants); on the skewed scenario the packed rows
+      must show ≥ 2× the padded rows — that ratio IS the padding waste
+      segment-packing removes.
+    * ``stream_bytes`` / ``roofline_pct`` (bytes rows) — bytes DMA'd
+      through the kernel and the achieved stream bandwidth as % of the
+      single-chip HBM roofline (:func:`benchmarks.roofline.achieved_pct`;
+      only compiled-backend rows approach it, interpret rows sit at ~0).
     """
+    from repro.core.events import pack_segments
     from repro.kernels import interpret_default
+    try:
+        from benchmarks.roofline import achieved_pct
+    except ImportError:          # run as a script, not as a package
+        from roofline import achieved_pct
 
     backend = "interpret" if interpret_default() else "compiled"
     dtd = DTD.generate(n_tags=24, seed=seed)
@@ -207,37 +243,65 @@ def run_kernel_vs_scan(query_counts=(64, 256, 1024), batch_sizes=(4,),
             "pallas": engines.create("streaming", nfa, dictionary=d,
                                      kernel="pallas"),
         }
-        for b in batch_sizes:
-            docs = gen_corpus(dtd, n_docs=b, nodes_per_doc=nodes_per_doc,
-                              seed=seed)
-            batch = EventBatch.from_streams(docs, bucket=128)
-            payloads = [encode_bytes(doc, text_fill=TEXT_FILL)
-                        for doc in docs]
-            bb = ByteBatch.from_buffers(payloads, bucket=1024)
-            mb = sum(len(p) for p in payloads) / 1e6
-            for variant in variants:
-                base_mb_s = None
-                for path, eng in paths.items():
-                    if variant == "events":
-                        fn = lambda: eng.filter_batch(batch)  # noqa: E731
-                    else:
-                        fn = lambda: eng.filter_bytes(bb)     # noqa: E731
-                    fn()  # compile warmup
-                    t = _time(fn, repeat=repeat)
-                    row = {"bench": "kernel_vs_scan", "variant": variant,
-                           "path": path, "backend": backend,
-                           "engine": "streaming", "batch": b,
-                           "n_queries": nq, "path_len": path_len,
-                           "n_states": nfa.n_states,
-                           "doc_mb": round(mb, 3),
-                           "docs_per_s": round(b / t, 2),
-                           "mb_s": round(mb / t, 3)}
-                    if path == "scan":
-                        base_mb_s = row["mb_s"]
-                    elif base_mb_s:
-                        row["speedup_vs_scan"] = round(
-                            row["mb_s"] / base_mb_s, 3)
-                    rows.append(row)
+        for scenario in scenarios:
+            for b in batch_sizes:
+                docs = _scenario_docs(dtd, scenario, b, nodes_per_doc, seed)
+                batch = EventBatch.from_streams(docs, bucket=128)
+                ev_total = int(np.asarray(batch.n_events).sum())
+                payloads = [encode_bytes(doc, text_fill=TEXT_FILL)
+                            for doc in docs]
+                bb = ByteBatch.from_buffers(payloads, bucket=1024)
+                mb = sum(len(p) for p in payloads) / 1e6
+                for variant in variants:
+                    base_mb_s = None
+                    for path, eng in paths.items():
+                        packings = ("padded", "packed") \
+                            if variant == "bytes" and path == "pallas" \
+                            else ("padded",)
+                        for packing in packings:
+                            packed = packing == "packed"
+                            if variant == "events":
+                                fn = lambda: eng.filter_batch(batch)  # noqa: E731
+                                slots = int(np.asarray(batch.kind).size)
+                                stream_bytes = None
+                            elif packed:
+                                fn = lambda: eng.filter_bytes(  # noqa: E731
+                                    bb, pack=True)
+                                tgt = int(eng.plan_.meta.get(
+                                    "segment_target", 4096))
+                                slots = int(pack_segments(
+                                    bb.to_host(),
+                                    target_len=tgt).data.size)
+                                stream_bytes = slots
+                            else:
+                                fn = lambda: eng.filter_bytes(bb)  # noqa: E731
+                                slots = int(np.asarray(bb.data).size)
+                                stream_bytes = slots
+                            fn()  # compile warmup
+                            t = _time(fn, repeat=repeat)
+                            row = {"bench": "kernel_vs_scan",
+                                   "variant": variant, "path": path,
+                                   "scenario": scenario,
+                                   "packing": packing,
+                                   "backend": backend,
+                                   "engine": "streaming", "batch": b,
+                                   "n_queries": nq, "path_len": path_len,
+                                   "n_states": nfa.n_states,
+                                   "doc_mb": round(mb, 3),
+                                   "events_per_slot": round(
+                                       ev_total / slots, 5),
+                                   "docs_per_s": round(b / t, 2),
+                                   "mb_s": round(mb / t, 3)}
+                            if stream_bytes is not None:
+                                row["stream_bytes"] = stream_bytes
+                                row["roofline_pct"] = round(
+                                    achieved_pct(stream_bytes, t), 6)
+                            if path == "scan":
+                                base_mb_s = row["mb_s"]
+                            elif base_mb_s:
+                                row["speedup_vs_scan"] = round(
+                                    row["mb_s"] / base_mb_s, 3)
+                            rows.append(row)
     return rows
 
 

@@ -10,7 +10,10 @@ Rows are matched by their *identity* fields (everything except the
 measured metrics and metric-derived ratios); for every matched row the
 throughput metrics (``docs_per_s``, ``mb_s``) are compared and the gate
 fails when any fresh value regresses more than ``--threshold`` (default
-25%) below the baseline.  Several fresh files may be given — the gate
+25%) below the baseline.  ``speedup_vs_scan`` is additionally gated,
+but ONLY on ``backend="compiled"`` rows — kernel-beats-scan is a
+compiled-backend property, and interpret-only containers must not fail
+the gate on interpreter noise (their docs_per_s/mb_s stay gated).  Several fresh files may be given — the gate
 takes each row's best measurement across runs, so one noisy run on a
 shared CI machine cannot fail the gate alone (throughput noise is
 one-sided: a machine can only be spuriously *slow*).  Rows present on
@@ -42,11 +45,24 @@ import sys
 #: measured throughput metrics the gate compares (higher is better)
 METRICS = ("docs_per_s", "mb_s")
 
+#: ratio metrics gated only on ``backend="compiled"`` rows: the
+#: kernel-beats-scan claim is a compiled-backend property, so on an
+#: interpret-only container the ratio is tracked but can never fail the
+#: gate on interpreter noise
+COMPILED_ONLY_METRICS = ("speedup_vs_scan",)
+
 #: measurement outputs and derived ratios — never part of a row's identity
-NON_IDENTITY = frozenset(METRICS) | {
+NON_IDENTITY = frozenset(METRICS) | frozenset(COMPILED_ONLY_METRICS) | {
     "speedup_vs_yfilter", "vs_events", "speedup_vs_recompile",
-    "seconds_per_op", "speedup_vs_scan",
+    "seconds_per_op", "events_per_slot", "stream_bytes", "roofline_pct",
 }
+
+
+def gated_metrics(row: dict) -> tuple[str, ...]:
+    """Metrics the gate compares for this row (see COMPILED_ONLY_METRICS)."""
+    if row.get("backend") == "compiled":
+        return METRICS + COMPILED_ONLY_METRICS
+    return METRICS
 
 
 def row_key(row: dict) -> str:
@@ -71,7 +87,7 @@ def merge_best(runs: list[dict[str, dict]]) -> dict[str, dict]:
     for run in runs:
         for key, row in run.items():
             best = out.setdefault(key, dict(row))
-            for metric in METRICS:
+            for metric in METRICS + COMPILED_ONLY_METRICS:
                 if metric in row and metric in best:
                     best[metric] = max(best[metric], row[metric])
     return out
@@ -88,7 +104,7 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict],
     table = []
     for key in sorted(baseline.keys() & fresh.keys()):
         b, f = baseline[key], fresh[key]
-        for metric in METRICS:
+        for metric in gated_metrics(b):
             if metric not in b or metric not in f:
                 continue
             if not b[metric]:

@@ -11,6 +11,13 @@ are *derived* from the compiled dry-run artifacts that
 ``coll_bytes`` is parsed from the HLO text: the summed operand bytes of
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
 The dominant term is the bottleneck the §Perf loop iterates on.
+
+The one-launch megakernel closes the loop from the *measured* side:
+:func:`achieved_pct` turns a wall-clocked byte stream into "% of the
+HBM roofline", and :func:`megakernel_rows` lifts the measured
+``kernel_vs_scan`` bytes rows (``benchmarks.bench_throughput``) into
+``bench="roofline"`` rows so the same artifact carries both the derived
+ceilings and where the kernel actually lands under them.
 """
 from __future__ import annotations
 
@@ -46,6 +53,48 @@ def terms(flops: float, bytes_: float, coll_bytes: float, chips: int,
         # fraction of roofline: useful work at peak over the bound time
         out["roofline_frac"] = (model_flops / (chips * PEAK_FLOPS)) / dom[1] \
             if dom[1] > 0 else 0.0
+    return out
+
+
+def achieved_pct(bytes_streamed: float, seconds: float,
+                 chips: int = 1) -> float:
+    """Measured stream bandwidth as % of the HBM roofline.
+
+    100% means the kernel moved ``bytes_streamed`` at exactly the HBM
+    peak; an interpret-mode run sits at ≈ 0 (the number is still
+    recorded so compiled rows land in the same artifact shape).
+    """
+    if seconds <= 0:
+        return 0.0
+    return 100.0 * (bytes_streamed / seconds) / (chips * HBM_BW)
+
+
+def megakernel_rows(kernel_rows: list[dict]) -> list[dict]:
+    """Lift measured ``kernel_vs_scan`` pallas-bytes rows into
+    ``bench="roofline"`` rows (one per scenario × packing × n_queries ×
+    batch) so BENCH_filtering.json carries the achieved-vs-ceiling view
+    next to the artifact-derived ceilings."""
+    out = []
+    for r in kernel_rows:
+        if (r.get("bench") != "kernel_vs_scan"
+                or r.get("path") != "pallas"
+                or r.get("variant") != "bytes"
+                or "stream_bytes" not in r):
+            continue
+        out.append({
+            "bench": "roofline",
+            "cell": "megakernel-bytes",
+            "source": "kernel_vs_scan",
+            "backend": r.get("backend"),
+            "scenario": r.get("scenario"),
+            "packing": r.get("packing"),
+            "n_queries": r.get("n_queries"),
+            "batch": r.get("batch"),
+            "stream_bytes": r.get("stream_bytes"),
+            "events_per_slot": r.get("events_per_slot"),
+            "mb_s": r.get("mb_s"),
+            "roofline_pct": r.get("roofline_pct"),
+        })
     return out
 
 

@@ -9,9 +9,12 @@ Sections:
            ingestion paths (events / bytes-host / bytes-device — the
            paper's same-chip parser+filter vs host parsing)
   kernel — kernel_vs_scan: the streaming megakernel (bit-packed Pallas
-           hot path) vs the lax.scan oracle, events and fused-bytes
-           variants over a (batch × n_queries) grid; the ``backend``
-           field records compiled (TPU) vs interpret rows
+           hot path) vs the lax.scan oracle, events and one-launch
+           fused-bytes variants (padded + segment-packed) over a
+           (scenario × batch × n_queries) grid; the ``backend`` field
+           records compiled (TPU) vs interpret rows, and the pallas
+           bytes rows are re-emitted as measured ``bench="roofline"``
+           rows (achieved stream bandwidth as % of the HBM ceiling)
   qscale — query_scaling: docs/s as the standing profile set grows
            10²→10⁴, monolithic vs sharded query plans (the paper's
            scalability-in-profiles claim, §3.5)
@@ -72,18 +75,22 @@ def run_sections(sections, full: bool) -> list[dict]:
                 query_counts=(16, 64), n_docs=8, nodes_per_doc=200)
 
     if "kernel" in sections:
-        from benchmarks import bench_throughput
+        from benchmarks import bench_throughput, roofline
         if full:
-            rows += bench_throughput.run_kernel_vs_scan(
+            kr = bench_throughput.run_kernel_vs_scan(
                 query_counts=(64, 256, 1024), batch_sizes=(8, 32),
                 nodes_per_doc=400, repeat=3)
         else:
             # acceptance grid: megakernel vs scan, events + fused bytes
-            # (interpret-mode kernel rows are slow by design — small
-            # batches keep the section's unrolled-grid cost bounded)
-            rows += bench_throughput.run_kernel_vs_scan(
+            # over both length scenarios (uniform + skewed — the packed
+            # rows' events_per_slot win lives on the skewed one);
+            # interpret-mode kernel rows are slow by design — small
+            # batches keep the section's unrolled-grid cost bounded
+            kr = bench_throughput.run_kernel_vs_scan(
                 query_counts=(64, 256), batch_sizes=(4,),
                 nodes_per_doc=150, repeat=1)
+        # measured roofline view of the pallas bytes rows rides along
+        rows += kr + roofline.megakernel_rows(kr)
 
     if "qscale" in sections:
         from benchmarks import bench_throughput

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import os
 from typing import Any, ClassVar, Mapping, Sequence
 
 import jax
@@ -545,8 +546,8 @@ class FilterEngine(abc.ABC):
 
     @staticmethod
     def autotune_blocks(n_states: int, max_depth: int, *, n_tags: int,
-                        vmem_budget: int = 4 << 20,
-                        smem_budget: int = 8 << 10,
+                        vmem_budget: int | None = None,
+                        smem_budget: int | None = None,
                         chunk: int = 256) -> dict:
         """Pick a (``blk``, ``chunk``) launch shape from static bounds.
 
@@ -558,7 +559,19 @@ class FilterEngine(abc.ABC):
         per SMEM DMA chunk) is clamped to half of ``smem_budget`` (the
         event buffer is double-buffered int32).  Engine options override
         both knobs; this is only the default policy.
+
+        Budgets default from the ``REPRO_PALLAS_VMEM_BUDGET`` /
+        ``REPRO_PALLAS_SMEM_BUDGET`` env vars (bytes) when the caller
+        passes ``None`` — CI and the measured autotune search exercise
+        small-budget layouts without monkeypatching; explicit arguments
+        always win.
         """
+        if vmem_budget is None:
+            vmem_budget = int(os.environ.get(
+                "REPRO_PALLAS_VMEM_BUDGET", 4 << 20))
+        if smem_budget is None:
+            smem_budget = int(os.environ.get(
+                "REPRO_PALLAS_SMEM_BUDGET", 8 << 10))
         blk = 32
         for cand in (1024, 512, 256, 128, 64, 32):
             wb = cand // 32

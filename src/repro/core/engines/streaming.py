@@ -43,14 +43,28 @@ from ...kernels import blocks as blocks_mod
 from ...kernels import interpret_default
 from ...kernels import stream_filter as sf
 from ...kernels.parse import DEFAULT_MAX_DEPTH
+from ...sharding.compat import shard_map_compat as _shard_map
 from ..dictionary import OPEN_NBYTES
-from ..events import CLOSE, OPEN, ByteBatch, EventBatch, EventStream
+from ..events import (CLOSE, OPEN, SEG_SENTINEL, ByteBatch, EventBatch,
+                      EventStream, SegmentPack, pack_segments)
 from ..nfa import NFA, WILD_TAG, pad_states
 from . import base
 from .result import NO_MATCH, FilterResult
 
 #: execution modes for the ``kernel=`` engine option
 KERNEL_MODES = ("auto", "pallas", "scan")
+
+#: bytes per DMA chunk of the one-launch bytes megakernel (distinct from
+#: the event kernel's events-per-chunk ``chunk``) and the segment-packer
+#: capacity target — both autotunable (:mod:`repro.kernels.autotune`)
+#: and overridable via the ``byte_chunk=`` / ``segment_target=`` engine
+#: options
+DEFAULT_BYTE_CHUNK = 512
+DEFAULT_SEGMENT_TARGET = 4096
+
+#: launch-shape knobs a measured-autotune cache entry may override
+TUNABLE_KEYS = ("blk", "chunk", "byte_chunk", "grid_order",
+                "segment_target")
 
 
 def _pack_words(bits: jax.Array) -> jax.Array:
@@ -135,7 +149,7 @@ def _run_batch_kernel(plan: base.FilterPlan, kind: jax.Array,
         plan["kb_selfloop"], plan["kb_init"],
         plan["kb_acc_word"], plan["kb_acc_bit"],
         max_depth=meta["max_depth"], chunk=meta["chunk"],
-        interpret=interpret)
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"))
     matched = mb[:, plan["kb_acc_block"], plan["kb_acc_slot"]] != 0
     first = fb[:, plan["kb_acc_block"], plan["kb_acc_slot"]]
     return matched, first
@@ -160,12 +174,69 @@ def _run_parts_kernel(plan: base.FilterPlan, kind: jax.Array,
         fold(plan["kb_selfloop"]), fold(plan["kb_init"]),
         fold(plan["kb_acc_word"]), fold(plan["kb_acc_bit"]),
         max_depth=meta["max_depth"], chunk=meta["chunk"],
-        interpret=interpret)
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"))
     b = kind.shape[0]
     p = plan["kb_selfloop"].shape[0]
     mb = mb.reshape(b, p, g, -1)
     fb = fb.reshape(b, p, g, -1)
     gather = jax.vmap(lambda m, ab, sl: m[:, ab, sl], in_axes=(1, 0, 0))
+    matched = gather(mb, plan["kb_acc_block"], plan["kb_acc_slot"]) != 0
+    first = gather(fb, plan["kb_acc_block"], plan["kb_acc_slot"])
+    return matched, first
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _run_bytes_fused(plan: base.FilterPlan, data: jax.Array,
+                     starts: jax.Array, interpret: bool | None = None):
+    """ONE-launch bytes→verdict: the whole predecode+compact+filter
+    datapath as a single Pallas program (no EventBatch through HBM) —
+    see :func:`repro.kernels.stream_filter.stream_filter_bytes_pallas`.
+    ``data``/``starts`` are segment form (an unpacked batch is the
+    degenerate one-doc-per-segment case); returns (S, D, Q) matched
+    bool / first int32 in segment-slot order."""
+    meta = plan.meta
+    mb, fb = sf.stream_filter_bytes_pallas(
+        data, starts,
+        plan["kb_tagmask"], plan["kb_pw"], plan["kb_pb"],
+        plan["kb_selfloop"], plan["kb_init"],
+        plan["kb_acc_word"], plan["kb_acc_bit"],
+        max_depth=meta["max_depth"],
+        chunk=meta.get("byte_chunk", DEFAULT_BYTE_CHUNK),
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"))
+    mb = jnp.transpose(mb, (0, 2, 1, 3))    # (S, D, G, QB)
+    fb = jnp.transpose(fb, (0, 2, 1, 3))
+    matched = mb[:, :, plan["kb_acc_block"], plan["kb_acc_slot"]] != 0
+    first = fb[:, :, plan["kb_acc_block"], plan["kb_acc_slot"]]
+    return matched, first
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _run_parts_bytes_fused(plan: base.FilterPlan, data: jax.Array,
+                           starts: jax.Array,
+                           interpret: bool | None = None):
+    """Stacked sharded plan through ONE bytes→verdict launch: the part
+    axis folds into the block grid exactly like :func:`_run_parts_kernel`.
+    Returns (P, S, D, Qpad) matched/first in segment-slot order."""
+    meta = plan.meta
+    g = meta["n_blocks"]
+
+    def fold(x):
+        return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+    mb, fb = sf.stream_filter_bytes_pallas(
+        data, starts,
+        fold(plan["kb_tagmask"]), fold(plan["kb_pw"]), fold(plan["kb_pb"]),
+        fold(plan["kb_selfloop"]), fold(plan["kb_init"]),
+        fold(plan["kb_acc_word"]), fold(plan["kb_acc_bit"]),
+        max_depth=meta["max_depth"],
+        chunk=meta.get("byte_chunk", DEFAULT_BYTE_CHUNK),
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"))
+    s = data.shape[0]
+    p = plan["kb_selfloop"].shape[0]
+    d = starts.shape[1] - 1
+    mb = mb.reshape(s, p, g, d, -1).transpose(1, 0, 3, 2, 4)  # (P,S,D,G,QB)
+    fb = fb.reshape(s, p, g, d, -1).transpose(1, 0, 3, 2, 4)
+    gather = jax.vmap(lambda m, ab, sl: m[:, :, ab, sl], in_axes=(0, 0, 0))
     matched = gather(mb, plan["kb_acc_block"], plan["kb_acc_slot"]) != 0
     first = gather(fb, plan["kb_acc_block"], plan["kb_acc_slot"])
     return matched, first
@@ -217,6 +288,18 @@ class StreamingEngine(base.FilterEngine):
     * ``kernel_interpret=`` — force the Pallas interpret flag (tests);
       ``None`` auto-detects from the backend.
     * ``event_bucket=`` — event-axis padding bucket for the byte paths.
+    * ``fuse=`` — ``True`` (default): byte ingestion runs the ONE-launch
+      bytes→verdict megakernel; ``False``: the two-stage
+      parse-then-filter program (the comparison baseline).
+    * ``pack=`` / ``segment_target=`` — segment-pack ragged byte batches
+      (host first-fit-decreasing packer, see
+      :func:`repro.core.events.pack_segments`) before the fused kernel.
+    * ``byte_chunk=`` / ``grid_order=`` — bytes-per-DMA-chunk and grid
+      iteration order of the fused kernel.
+    * ``vmem_budget=`` / ``smem_budget=`` — static autotune budgets
+      (else the ``REPRO_PALLAS_*_BUDGET`` env vars, else defaults).
+    * ``autotune="measured"`` — overlay the persisted measured-search
+      best config (:mod:`repro.kernels.autotune`) for this plan shape.
     """
 
     #: packed-word layout: the state axis must tile into 32-bit words
@@ -256,13 +339,49 @@ class StreamingEngine(base.FilterEngine):
         return None if ki is None else bool(ki)
 
     def kernel_config(self, n_states: int, n_tags: int) -> dict:
-        """Megakernel launch shape: the shared autotune policy, with the
-        ``blk=`` / ``chunk=`` engine options as overrides."""
-        cfg = self.autotune_blocks(n_states, self.max_depth, n_tags=n_tags)
-        if "blk" in self.options:
-            cfg["blk"] = int(self.options["blk"])
-        if "chunk" in self.options:
-            cfg["chunk"] = max(32, int(self.options["chunk"]))
+        """Megakernel launch shape: static policy → measured cache →
+        explicit engine options, in increasing precedence.
+
+        The static :meth:`autotune_blocks` formula (honouring the
+        ``vmem_budget=`` / ``smem_budget=`` options and their env vars)
+        seeds the config; with ``autotune="measured"`` a persisted
+        best-config from :mod:`repro.kernels.autotune` overlays it for
+        this plan shape; explicit ``blk=`` / ``chunk=`` /
+        ``byte_chunk=`` / ``grid_order=`` / ``segment_target=`` options
+        always win.
+        """
+        vb = self.options.get("vmem_budget")
+        sb = self.options.get("smem_budget")
+        cfg = self.autotune_blocks(
+            n_states, self.max_depth, n_tags=n_tags,
+            vmem_budget=None if vb is None else int(vb),
+            smem_budget=None if sb is None else int(sb))
+        cfg.setdefault("byte_chunk", DEFAULT_BYTE_CHUNK)
+        cfg.setdefault("grid_order", "bg")
+        cfg.setdefault("segment_target", DEFAULT_SEGMENT_TARGET)
+        if self.options.get("autotune") == "measured":
+            from ...kernels import autotune as autotune_mod
+
+            ki = self._kernel_interpret()
+            backend = ("interpret"
+                       if (ki if ki is not None else interpret_default())
+                       else "compiled")
+            hit = autotune_mod.cached_config(autotune_mod.plan_key(
+                backend, n_states, n_tags, self.max_depth,
+                self.state_multiple))
+            if hit:
+                cfg.update({k: hit[k] for k in TUNABLE_KEYS if k in hit})
+        for k in TUNABLE_KEYS:
+            if k in self.options:
+                cfg[k] = self.options[k]
+        cfg["blk"] = int(cfg["blk"])
+        cfg["chunk"] = max(32, int(cfg["chunk"]))
+        cfg["byte_chunk"] = max(32, int(cfg["byte_chunk"]))
+        cfg["segment_target"] = max(1, int(cfg["segment_target"]))
+        if cfg["grid_order"] not in sf.GRID_ORDERS:
+            raise ValueError(
+                f"grid_order={cfg['grid_order']!r} is not one of "
+                f"{sf.GRID_ORDERS}")
         return cfg
 
     def plan(self, nfa: NFA) -> base.FilterPlan:
@@ -308,7 +427,10 @@ class StreamingEngine(base.FilterEngine):
             )
             meta.update(blk=mk.blk, chunk=cfg["chunk"],
                         n_blocks=mk.n_blocks,
-                        block_queries=mk.block_queries)
+                        block_queries=mk.block_queries,
+                        byte_chunk=cfg["byte_chunk"],
+                        grid_order=cfg["grid_order"],
+                        segment_target=cfg["segment_target"])
         return base.FilterPlan("streaming", tables, meta)
 
     # ------------------------------------------------------- sharded hooks
@@ -439,15 +561,166 @@ class StreamingEngine(base.FilterEngine):
     def filter_batch(self, batch: EventBatch) -> FilterResult:
         return self.filter_batch_with_plan(self.plan_, batch)
 
-    def filter_bytes(self, bb: ByteBatch, *,
-                     bucket: int | None = None) -> FilterResult:
-        """Bytes → verdict as one jitted program (no intermediate
-        EventBatch, no host round-trip) — see :func:`_run_bytes_batch`."""
-        matched, first = _run_bytes_batch(
-            self.plan_, jnp.asarray(bb.data),
-            bb.event_bound(bucket=self._event_bucket(bucket)),
-            kernel=self._kernel_on(), interpret=self._kernel_interpret())
-        return FilterResult(np.asarray(matched), np.asarray(first))
+    # ---------------------------------------------------------- byte paths
+    def _fused_bytes_on(self) -> bool:
+        """One-launch bytes kernel or the parse-then-filter program?
+        The fused path needs the megakernel tables; ``fuse=False`` keeps
+        the two-stage program (the comparison baseline)."""
+        return self._kernel_on() and bool(self.options.get("fuse", True))
+
+    def _bytes_prep(self, bb: ByteBatch, pack: bool | None = None
+                    ) -> tuple[jax.Array, jax.Array, SegmentPack | None]:
+        """(data, starts, pack-or-None) for the one-launch kernel.
+
+        ``pack=True`` (or the ``pack=`` engine option) runs the host
+        segment packer — short documents share grid slots; otherwise the
+        batch maps 1:1 to degenerate one-document segments whose only
+        boundary is the sentinel.
+        """
+        if pack is None:
+            pack = bool(self.options.get("pack", False))
+        if pack:
+            sp = pack_segments(
+                bb.to_host(),
+                target_len=int(self.plan_.meta.get(
+                    "segment_target", DEFAULT_SEGMENT_TARGET)))
+            return jnp.asarray(sp.data), jnp.asarray(sp.starts), sp
+        starts = np.full((bb.batch_size, 2), SEG_SENTINEL, np.int32)
+        starts[:, 0] = 0
+        return jnp.asarray(bb.data), jnp.asarray(starts), None
+
+    def _scatter_parts(self, sp: SegmentPack | None, matched, first
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """(P, S, D, Qpad) kernel outputs → (P, B, Qpad) batch order."""
+        m = np.asarray(matched)
+        f = np.asarray(first)
+        p, s, d, q = m.shape
+        if sp is None:       # unpacked: segment s IS batch row s, D == 1
+            return m[:, :, 0, :], f[:, :, 0, :]
+        mm = np.moveaxis(m, 0, 2).reshape(s, d, p * q)
+        ff = np.moveaxis(f, 0, 2).reshape(s, d, p * q)
+        m2, f2 = sp.scatter(mm, ff, NO_MATCH)
+        b = sp.batch_size
+        return (m2.reshape(b, p, q).transpose(1, 0, 2),
+                f2.reshape(b, p, q).transpose(1, 0, 2))
+
+    def filter_bytes(self, bb: ByteBatch, *, bucket: int | None = None,
+                     pack: bool | None = None) -> FilterResult:
+        """Bytes → verdict as one compiled program.
+
+        Kernel engines run the ONE-launch bytes megakernel
+        (:func:`_run_bytes_fused` — predecode, compaction and filtering
+        inside one Pallas grid, optionally over segment-packed batches);
+        scan engines (and ``fuse=False``) run the two-stage
+        parse-then-filter program (:func:`_run_bytes_batch`).  Both are
+        bit-identical by test.
+        """
+        if not self._fused_bytes_on():
+            matched, first = _run_bytes_batch(
+                self.plan_, jnp.asarray(bb.data),
+                bb.event_bound(bucket=self._event_bucket(bucket)),
+                kernel=self._kernel_on(),
+                interpret=self._kernel_interpret())
+            return FilterResult(np.asarray(matched), np.asarray(first))
+        data, starts, sp = self._bytes_prep(bb, pack)
+        matched, first = _run_bytes_fused(
+            self.plan_, data, starts, interpret=self._kernel_interpret())
+        if sp is None:
+            return FilterResult(np.asarray(matched[:, 0]),
+                                np.asarray(first[:, 0]))
+        m, f = sp.scatter(np.asarray(matched), np.asarray(first), NO_MATCH)
+        return FilterResult(m, f)
+
+    def filter_bytes_sharded(self, bb: ByteBatch, sharded, *,
+                             bucket: int | None = None,
+                             mesh=None) -> FilterResult:
+        """Sharded bytes path: ONE fused launch for the whole stacked
+        plan (parts fold into the block grid; ``shard_map`` over the
+        mesh ``"model"`` axis when given), segment-packed when the
+        ``pack=`` option is on.  Scan engines keep the base class's
+        parse-then-filter program."""
+        if not self._fused_bytes_on():
+            return super().filter_bytes_sharded(bb, sharded,
+                                                bucket=bucket, mesh=mesh)
+        self._check_model_axis(sharded, mesh)
+        data, starts, sp = self._bytes_prep(bb)
+        stacked = sharded.stacked()
+        interpret = self._kernel_interpret()
+
+        def build():
+            def body(plan, data, starts):
+                return _run_parts_bytes_fused(plan, data, starts,
+                                              interpret=interpret)
+
+            if mesh is not None:
+                ps = jax.sharding.PartitionSpec
+                return jax.jit(_shard_map(
+                    body, mesh,
+                    in_specs=(ps("model"), ps(), ps()),
+                    out_specs=(ps("model"), ps("model"))))
+            return jax.jit(body)
+
+        matched, first = self._cached_exec(
+            ("bytes1d-fused", mesh), build)(stacked, data, starts)
+        m, f = self._scatter_parts(sp, matched, first)
+        part_of, local_of = sharded.index_arrays()
+        return FilterResult(m[part_of, :, local_of].T,
+                            f[part_of, :, local_of].T)
+
+    def dispatch_bytes_sharded2d(self, bb: ByteBatch, sharded, *,
+                                 bucket: int | None = None, mesh,
+                                 n_events: int | None = None):
+        """2-D (data × model) bytes path: the one-launch kernel inside
+        the shard_map body — each device streams its ``"data"`` slice of
+        raw segment bytes through its ``"model"`` slice of the stacked
+        plan, bytes in / verdicts out with no intermediate event tensor
+        anywhere in the program.  ``n_events`` is accepted for signature
+        compatibility; the fused kernel is byte-chunked and never
+        materializes a compacted event axis."""
+        if not self._fused_bytes_on():
+            return super().dispatch_bytes_sharded2d(
+                bb, sharded, bucket=bucket, mesh=mesh, n_events=n_events)
+        data_ax, _ = self._mesh_axes2d(mesh)
+        self._check_model_axis(sharded, mesh)
+        b0 = bb.batch_size
+        if bool(self.options.get("pack", False)):
+            sp = pack_segments(
+                bb.to_host(),
+                target_len=int(self.plan_.meta.get(
+                    "segment_target", DEFAULT_SEGMENT_TARGET)))
+            sp = sp.pad_segments_to(
+                base._round_up(sp.n_segments, data_ax))
+            data, starts = jnp.asarray(sp.data), jnp.asarray(sp.starts)
+        else:
+            sp = None
+            bbp = bb.pad_batch_to(base._round_up(b0, data_ax))
+            st = np.full((bbp.batch_size, 2), SEG_SENTINEL, np.int32)
+            st[:, 0] = 0
+            data, starts = jnp.asarray(bbp.data), jnp.asarray(st)
+        stacked = sharded.stacked()
+        interpret = self._kernel_interpret()
+
+        def build():
+            def body(plan, data, starts):
+                return _run_parts_bytes_fused(plan, data, starts,
+                                              interpret=interpret)
+
+            ps = jax.sharding.PartitionSpec
+            return jax.jit(_shard_map(
+                body, mesh,
+                in_specs=(ps("model"), ps("data"), ps("data")),
+                out_specs=(ps("model", "data"), ps("model", "data"))))
+
+        matched, first = self._cached_exec(
+            ("bytes2d-fused", mesh), build)(stacked, data, starts)
+        part_of, local_of = sharded.index_arrays()
+
+        def materialize() -> FilterResult:
+            m, f = self._scatter_parts(sp, matched, first)
+            return FilterResult(m[part_of, :, local_of].T[:b0],
+                                f[part_of, :, local_of].T[:b0])
+
+        return materialize
 
     def filter_documents_batched(self, kind: np.ndarray,
                                  tag: np.ndarray) -> FilterResult:

@@ -472,6 +472,164 @@ class ByteBatch:
         return int(np.asarray(self.n_bytes).sum())
 
 
+# ------------------------------------------------------------ segment packing
+#: ``starts`` sentinel past a segment's last real document.  The bytes
+#: megakernel flushes document ``d`` when an event lands at or past
+#: ``starts[d+1]``; event positions are always < 2³¹-1, so sentinel
+#: boundaries are simply never crossed — no per-document count scalar.
+SEG_SENTINEL = np.iinfo(np.int32).max
+
+
+@dataclass
+class SegmentPack:
+    """Dense multi-document segments for the one-launch bytes megakernel.
+
+    The padding-free counterpart of a ragged :class:`ByteBatch`: instead
+    of every document padding to the longest, documents are concatenated
+    back to back into ``(S, L)`` byte segments (first-fit decreasing, so
+    short documents share a grid slot) with two per-segment tables:
+
+    * ``starts`` ``(S, D+1)`` int32 — byte offset where each document
+      begins; entries past the last real document are
+      :data:`SEG_SENTINEL`.  The kernel resets its stack and flushes the
+      finished document's accept lanes whenever the event stream crosses
+      ``starts[d+1]``.
+    * ``doc_ids`` ``(S, D)`` int32 — original batch row of each packed
+      document, ``-1`` for unused slots; :meth:`scatter` uses it to map
+      per-(segment, slot) verdicts back to ``(B, Q)`` batch order.
+
+    Zero-byte documents are never packed (no bytes ⇒ no events ⇒ no
+    match); scatter fills their rows with the no-match defaults.
+    """
+
+    data: np.ndarray      # (S, L) uint8 — concatenated docs, zero-padded
+    starts: np.ndarray    # (S, D+1) int32 — doc start offsets + sentinels
+    doc_ids: np.ndarray   # (S, D) int32 — original batch row, -1 unused
+    batch_size: int       # B of the ByteBatch this was packed from
+    n_bytes: np.ndarray   # (S,) int32 — live (non-pad) bytes per segment
+
+    def __post_init__(self) -> None:
+        self.data = _as_field(self.data, np.uint8)
+        self.starts = _as_field(self.starts, np.int32)
+        self.doc_ids = _as_field(self.doc_ids, np.int32)
+        self.n_bytes = _as_field(self.n_bytes, np.int32)
+        assert self.data.ndim == 2
+        assert self.starts.shape[0] == self.data.shape[0]
+        assert self.starts.shape[1] == self.doc_ids.shape[1] + 1
+        assert self.n_bytes.shape == (self.data.shape[0],)
+
+    @property
+    def n_segments(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def seg_len(self) -> int:
+        return int(self.data.shape[1])
+
+    @property
+    def docs_per_segment(self) -> int:
+        return int(self.doc_ids.shape[1])
+
+    def pad_segments_to(self, s: int) -> "SegmentPack":
+        """Grow the segment axis with inert all-sentinel segments (the
+        2-D mesh data axis needs an even row count, cf.
+        :meth:`ByteBatch.pad_batch_to`)."""
+        cur = self.n_segments
+        if s < cur:
+            raise ValueError(f"cannot pad {cur} segments into {s}")
+        if s == cur:
+            return self
+        extra = s - cur
+        starts = np.full((extra, self.starts.shape[1]), SEG_SENTINEL,
+                         np.int32)
+        starts[:, 0] = 0
+        return SegmentPack(
+            np.concatenate([np.asarray(self.data),
+                            np.zeros((extra, self.seg_len), np.uint8)]),
+            np.concatenate([np.asarray(self.starts), starts]),
+            np.concatenate([np.asarray(self.doc_ids),
+                            np.full((extra, self.doc_ids.shape[1]), -1,
+                                    np.int32)]),
+            self.batch_size,
+            np.concatenate([np.asarray(self.n_bytes),
+                            np.zeros(extra, np.int32)]))
+
+    def scatter(self, matched, first, no_match: int
+                ) -> tuple[np.ndarray, np.ndarray]:
+        """(S, D, Q) per-slot verdicts → (B, Q) batch-order results.
+
+        ``no_match`` is the caller's first-event fill (the engine layer's
+        ``NO_MATCH``) — passed in so this module stays engine-agnostic.
+        Slots with ``doc_ids == -1`` (and dropped zero-byte documents)
+        contribute nothing; their batch rows keep the no-match defaults.
+        """
+        q = matched.shape[-1]
+        ids = np.asarray(self.doc_ids).ravel()
+        live = ids >= 0
+        m = np.zeros((self.batch_size, q), dtype=bool)
+        f = np.full((self.batch_size, q), no_match, np.int32)
+        m[ids[live]] = np.asarray(matched).reshape(-1, q)[live] != 0
+        f[ids[live]] = np.asarray(first).reshape(-1, q)[live]
+        return m, f
+
+    def fill_fraction(self) -> float:
+        """Live bytes / total segment bytes — the packing efficiency the
+        ``events_per_slot`` benchmark metric builds on."""
+        total = self.data.size
+        if total == 0:
+            return 0.0
+        return float(np.asarray(self.n_bytes).sum()) / float(total)
+
+
+def pack_segments(bb: "ByteBatch", *, target_len: int = 4096,
+                  doc_bucket: int = 8) -> SegmentPack:
+    """First-fit-decreasing pack of a :class:`ByteBatch` into segments.
+
+    ``target_len`` is both the segment capacity target and the length
+    bucket (the actual ``L`` is the smallest multiple of ``target_len``
+    that fits the longest document, so one oversized document widens —
+    never breaks — the pack).  ``doc_bucket`` buckets the per-segment
+    document-slot count for shape stability across batches.
+    """
+    data = np.asarray(bb.data)
+    lengths = np.asarray(bb.n_bytes).astype(np.int64)
+    seg_len = bucket_length(max(1, int(lengths.max(initial=1))),
+                            max(1, int(target_len)))
+    order = np.argsort(-lengths, kind="stable")
+    segs: list[list[int]] = []    # doc ids per segment
+    used: list[int] = []          # bytes used per segment
+    for i in order:
+        n = int(lengths[i])
+        if n == 0:
+            continue              # no bytes ⇒ no events ⇒ never matches
+        for s, u in enumerate(used):
+            if u + n <= seg_len:
+                segs[s].append(int(i))
+                used[s] += n
+                break
+        else:
+            segs.append([int(i)])
+            used.append(n)
+    if not segs:                  # all-empty batch: one inert segment
+        segs, used = [[]], [0]
+    d = bucket_length(max(len(s) for s in segs), max(1, int(doc_bucket)))
+    out = np.zeros((len(segs), seg_len), np.uint8)
+    starts = np.full((len(segs), d + 1), SEG_SENTINEL, np.int32)
+    doc_ids = np.full((len(segs), d), -1, np.int32)
+    for s, docs in enumerate(segs):
+        off = 0
+        for j, i in enumerate(docs):
+            n = int(lengths[i])
+            out[s, off:off + n] = data[i, :n]
+            starts[s, j] = off
+            doc_ids[s, j] = i
+            off += n
+        if not docs:
+            starts[s, 0] = 0
+    return SegmentPack(out, starts, doc_ids, bb.batch_size,
+                       np.asarray(used, np.int32))
+
+
 # ----------------------------------------------------------------- tree view
 @dataclass
 class Node:

@@ -46,6 +46,36 @@ from .predecode import predecode_pallas
 DEFAULT_MAX_DEPTH = 64
 
 
+def fused_predecode(b0: jax.Array, b1: jax.Array, b2: jax.Array,
+                    b3: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Positionwise byte classify → fused ``(kind<<16)|tag`` event words.
+
+    The §3.4 character pre-decoder in the exact form the one-launch
+    megakernel consumes (see
+    :func:`repro.kernels.stream_filter.stream_filter_bytes_pallas`):
+    ``b0..b3`` are the byte value and its three lookahead shifts (any
+    matching shapes — the kernel passes ``(1, CHUNK)`` rows sliced from
+    a VMEM chunk), and the result is bit-identical at every position to
+    :func:`repro.kernels.ref.predecode` followed by
+    :func:`repro.kernels.stream_filter.fuse_events` — the property the
+    fused path's equivalence tests rest on.  Returns ``(fused, keep)``;
+    positions with ``keep == False`` are PAD (no tag starts there) and
+    carry the inert ``(PAD<<16) | 0xFFFF`` word.
+    """
+    is_lt = b0 == ref._LT
+    is_close = is_lt & (b1 == ref._SLASH)
+    is_open = is_lt & ~is_close
+    s0 = jnp.where(is_close, b2, b1)
+    s1 = jnp.where(is_close, b3, b2)
+    v0, v1 = ref.symbol_value(s0), ref.symbol_value(s1)
+    ok = (v0 >= 0) & (v1 >= 0)
+    kind = jnp.where(is_open & ok, ref.OPEN,
+                     jnp.where(is_close & ok, ref.CLOSE, ref.PAD))
+    tag = jnp.where(kind != ref.PAD, v0 * 64 + v1, -1)
+    fused = (kind.astype(jnp.int32) << 16) | (tag.astype(jnp.int32) & 0xFFFF)
+    return fused, kind != ref.PAD
+
+
 def compact_events(kind_pos: jax.Array, tag_pos: jax.Array,
                    n_events: int) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Masked stream compaction: per-position hits → dense event list.

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import parse as parse_mod
 from . import ref
 from .blocks import _round_up
 
@@ -69,23 +70,72 @@ def fuse_events(kind: jax.Array, tag: jax.Array) -> jax.Array:
             | (tag.astype(jnp.int32) & TAG_MASK))
 
 
+def _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
+                  accb_ref):
+    """Load this program's block tables once, before the event loop."""
+    wb = self_ref.shape[1]
+    return dict(
+        pw=pw_ref[0],                      # (WB, 32) parent word per lane
+        pb=pb_ref[0].astype(jnp.uint32),   # (WB, 32) parent bit per lane
+        selfw=self_ref[0, :],              # (WB,) packed self-loop states
+        accw=accw_ref[0, :],               # (QB,) accept-lane word
+        accb=accb_ref[0, :].astype(jnp.uint32),
+        tagmask_ref=tagmask_ref,
+        lane=jax.lax.broadcasted_iota(jnp.uint32, (wb, 32), 1))
+
+
+def _advance(ev, i, depth, matched, first, stack_ref, tb, *,
+             max_depth: int, n_tags: int):
+    """One fused event word through one state-word block.
+
+    THE per-event transition, shared verbatim by the event-stream kernel
+    (:func:`stream_filter_pallas`) and the one-launch bytes kernel
+    (:func:`stream_filter_bytes_pallas`) — one definition, so the two
+    launch shapes can never drift apart semantically.  ``i`` is the
+    document-local event ordinal reported as the first-match index.
+    """
+    k = ev >> KIND_SHIFT
+    t = ev & TAG_MASK
+    is_open = k == ref.OPEN
+    is_close = k == ref.CLOSE
+    row = stack_ref[pl.ds(depth, 1), :][0]              # (WB,) packed TOS
+    tclip = jnp.where((t >= 0) & (t < n_tags), t, n_tags)
+    trow = tb["tagmask_ref"][0, pl.ds(tclip, 1), :][0]  # per-tag words
+    # in-block parent gather, packed → packed (no unpack/repack of the
+    # stack rows; only the 32 source lanes expand)
+    bits = (jnp.take(row, tb["pw"], axis=0) >> tb["pb"]) & jnp.uint32(1)
+    src = jnp.sum(bits << tb["lane"], axis=1, dtype=jnp.uint32)
+    nxt = (src & trow) | (tb["selfw"] & row)
+    # push on open (write at depth+1), no-op otherwise — exactly the
+    # scan path's clip discipline, so depth overflow degrades
+    # identically on both paths
+    widx = jnp.clip(depth + 1, 0, max_depth + 1)
+    old = stack_ref[pl.ds(widx, 1), :]
+    stack_ref[pl.ds(widx, 1), :] = jnp.where(is_open, nxt[None], old)
+    depth = jnp.clip(
+        depth + jnp.where(is_open, 1, jnp.where(is_close, -1, 0)),
+        0, max_depth + 1)
+    accbits = (jnp.take(nxt, tb["accw"], axis=0)
+               >> tb["accb"]) & jnp.uint32(1)
+    active = is_open & (accbits != 0)
+    newly = active & ~matched
+    first = jnp.where(newly, i, first)
+    matched = matched | active
+    return depth, matched, first
+
+
 def _kernel(ev_ref, tagmask_ref, pw_ref, pb_ref, self_ref, init_ref,
             accw_ref, accb_ref, matched_ref, first_ref,
             stack_ref, evbuf_ref, sem_ref, *, n_events: int,
-            max_depth: int, chunk: int, n_tags: int):
-    b = pl.program_id(0)
-    wb = self_ref.shape[1]
+            max_depth: int, chunk: int, n_tags: int, doc_axis: int):
+    b = pl.program_id(doc_axis)
     qb = accw_ref.shape[1]
     n_chunks = n_events // chunk
     # fresh document: zero the VMEM stack, root context at depth 0
     stack_ref[...] = jnp.zeros_like(stack_ref)
     stack_ref[0, :] = init_ref[0, :]
-    pw = pw_ref[0]                    # (WB, 32) parent word index per lane
-    pb = pb_ref[0].astype(jnp.uint32)  # (WB, 32) parent bit index per lane
-    selfw = self_ref[0, :]            # (WB,) packed self-loop states
-    accw = accw_ref[0, :]             # (QB,) accept-lane word
-    accb = accb_ref[0, :].astype(jnp.uint32)
-    lane = jax.lax.broadcasted_iota(jnp.uint32, (wb, 32), 1)
+    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
+                       accb_ref)
 
     def event_dma(slot, ci):
         # one chunk of this document's fused event words: HBM → SMEM
@@ -107,35 +157,9 @@ def _kernel(ev_ref, tagmask_ref, pw_ref, pb_ref, self_ref, init_ref,
 
         def ev_body(j, carry):
             depth, matched, first = carry
-            ev = evbuf_ref[slot, j]
-            k = ev >> KIND_SHIFT
-            t = ev & TAG_MASK
-            is_open = k == ref.OPEN
-            is_close = k == ref.CLOSE
-            i = ci * chunk + j
-            row = stack_ref[pl.ds(depth, 1), :][0]          # (WB,) packed TOS
-            tclip = jnp.where((t >= 0) & (t < n_tags), t, n_tags)
-            trow = tagmask_ref[0, pl.ds(tclip, 1), :][0]    # per-tag words
-            # in-block parent gather, packed → packed (no unpack/repack
-            # of the stack rows; only the 32 source lanes expand)
-            bits = (jnp.take(row, pw, axis=0) >> pb) & jnp.uint32(1)
-            src = jnp.sum(bits << lane, axis=1, dtype=jnp.uint32)
-            nxt = (src & trow) | (selfw & row)
-            # push on open (write at depth+1), no-op otherwise — exactly
-            # the scan path's clip discipline, so depth overflow degrades
-            # identically on both paths
-            widx = jnp.clip(depth + 1, 0, max_depth + 1)
-            old = stack_ref[pl.ds(widx, 1), :]
-            stack_ref[pl.ds(widx, 1), :] = jnp.where(is_open, nxt[None], old)
-            depth = jnp.clip(
-                depth + jnp.where(is_open, 1, jnp.where(is_close, -1, 0)),
-                0, max_depth + 1)
-            accbits = (jnp.take(nxt, accw, axis=0) >> accb) & jnp.uint32(1)
-            active = is_open & (accbits != 0)
-            newly = active & ~matched
-            first = jnp.where(newly, i, first)
-            matched = matched | active
-            return depth, matched, first
+            return _advance(evbuf_ref[slot, j], ci * chunk + j, depth,
+                            matched, first, stack_ref, tb,
+                            max_depth=max_depth, n_tags=n_tags)
 
         return jax.lax.fori_loop(0, chunk, ev_body, carry)
 
@@ -147,14 +171,38 @@ def _kernel(ev_ref, tagmask_ref, pw_ref, pb_ref, self_ref, init_ref,
     first_ref[0, 0, :] = first
 
 
+#: megakernel grid iteration orders — ``"bg"`` walks documents in the
+#: outer loop (block tables re-streamed per document), ``"gb"`` walks
+#: blocks outermost (each block's tables stay resident across the whole
+#: batch).  Which wins depends on (batch, n_blocks, table bytes) — an
+#: autotune dimension (:mod:`repro.kernels.autotune`), not a constant.
+GRID_ORDERS = ("bg", "gb")
+
+
+def _grid_maps(grid_order: str, bsz: int, g: int):
+    """(grid, doc_axis, by-block index map, by-doc-and-block index map)."""
+    if grid_order not in GRID_ORDERS:
+        raise ValueError(
+            f"grid_order={grid_order!r} is not one of {GRID_ORDERS}")
+    if grid_order == "gb":
+        return ((g, bsz), 1,
+                lambda gg, b: (gg,),
+                lambda gg, b: (b, gg))
+    return ((bsz, g), 0,
+            lambda b, gg: (gg,),
+            lambda b, gg: (b, gg))
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("max_depth", "chunk", "interpret"))
+                   static_argnames=("max_depth", "chunk", "interpret",
+                                    "grid_order"))
 def stream_filter_pallas(events: jax.Array, tagmask: jax.Array,
                          pw: jax.Array, pb: jax.Array,
                          selfloop_words: jax.Array, init_words: jax.Array,
                          acc_word: jax.Array, acc_bit: jax.Array, *,
                          max_depth: int, chunk: int = 256,
-                         interpret: bool | None = None
+                         interpret: bool | None = None,
+                         grid_order: str = "bg"
                          ) -> tuple[jax.Array, jax.Array]:
     """Run every (document × state-word block) over the event stream.
 
@@ -165,7 +213,8 @@ def stream_filter_pallas(events: jax.Array, tagmask: jax.Array,
     the *plan's* stack bound — callers thread it from plan metadata so
     kernel and scan can never disagree.  Returns matched (B, G, QB)
     int32 0/1 and first (B, G, QB) int32 accept-lane outputs.
-    ``interpret=None`` auto-detects from the backend.
+    ``interpret=None`` auto-detects from the backend; ``grid_order``
+    picks the grid iteration order (:data:`GRID_ORDERS`).
     """
     from . import interpret_default
 
@@ -182,24 +231,26 @@ def stream_filter_pallas(events: jax.Array, tagmask: jax.Array,
     if npad != n:
         events = jnp.pad(events, ((0, 0), (0, npad - n)),
                          constant_values=ref.PAD << KIND_SHIFT)
+    grid, doc_axis, by_block, by_doc_block = _grid_maps(grid_order, bsz, g)
     matched, first = pl.pallas_call(
         functools.partial(_kernel, n_events=npad, max_depth=max_depth,
-                          chunk=chunk, n_tags=n_tags),
-        grid=(bsz, g),
+                          chunk=chunk, n_tags=n_tags, doc_axis=doc_axis),
+        grid=grid,
         in_specs=[
             # events stay off-core; the kernel DMAs SMEM chunks itself
             pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((1, n_tags + 1, wb), lambda b, gg: (gg, 0, 0)),
-            pl.BlockSpec((1, wb, 32), lambda b, gg: (gg, 0, 0)),
-            pl.BlockSpec((1, wb, 32), lambda b, gg: (gg, 0, 0)),
-            pl.BlockSpec((1, wb), lambda b, gg: (gg, 0)),
-            pl.BlockSpec((1, wb), lambda b, gg: (gg, 0)),
-            pl.BlockSpec((1, qb), lambda b, gg: (gg, 0)),
-            pl.BlockSpec((1, qb), lambda b, gg: (gg, 0)),
+            pl.BlockSpec((1, n_tags + 1, wb),
+                         lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, qb), lambda b, gg: (b, gg, 0)),
-            pl.BlockSpec((1, 1, qb), lambda b, gg: (b, gg, 0)),
+            pl.BlockSpec((1, 1, qb), lambda *ids: by_doc_block(*ids) + (0,)),
+            pl.BlockSpec((1, 1, qb), lambda *ids: by_doc_block(*ids) + (0,)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bsz, g, qb), jnp.int32),
@@ -214,5 +265,231 @@ def stream_filter_pallas(events: jax.Array, tagmask: jax.Array,
         ],
         interpret=interpret,
     )(events, tagmask, pw, pb, selfloop_words, init_words,
+      acc_word, acc_bit)
+    return matched, first
+
+
+def _event_capacity(chunk: int) -> int:
+    """Worst-case events per ``chunk`` bytes, rounded for VMEM layout.
+
+    Predecode validates tag symbols but not ``>`` (§3.1's fixed-length
+    dictionary makes the closer redundant), so on adversarial input an
+    event can start every 3 bytes (``<a`` + one byte).  ``+4`` covers
+    the lookahead overhang events whose ``<`` sits in the last 3 bytes.
+    """
+    return _round_up(chunk // 3 + 4, 8)
+
+
+def _bytes_kernel(data_ref, starts_ref, tagmask_ref, pw_ref, pb_ref,
+                  self_ref, init_ref, accw_ref, accb_ref,
+                  matched_ref, first_ref,
+                  stack_ref, mbuf_ref, fbuf_ref, bbuf_ref, evbuf_ref,
+                  sem_ref, *, n_bytes: int, max_depth: int, chunk: int,
+                  n_tags: int, n_docs: int, doc_axis: int):
+    """One-launch bytes→verdict: predecode + compact + filter, one grid cell.
+
+    Each program owns one *segment* (a packed run of documents, see
+    ``repro.core.events.SegmentPack``) and one state-word block.  Per
+    chunk of raw bytes: DMA the int32-packed bytes HBM→VMEM
+    (double-buffered, one lookahead word), classify every position with
+    :func:`repro.kernels.parse.fused_predecode`, compact the hits into a
+    dense (word, byte-pos) event buffer via a ones-matmul cumsum and a
+    masked-sum scatter (Mosaic has no in-kernel scatter), then run the
+    shared :func:`_advance` transition per event.  The ``starts`` table
+    (one int32 row per segment, INT32_MAX sentinel past the last doc)
+    drives per-document resets: crossing a boundary flushes the finished
+    document's accept lanes to the (D, QB) result buffers and re-roots
+    the stack — this is how short documents share a grid slot instead of
+    padding to the longest.
+    """
+    s = pl.program_id(doc_axis)
+    qb = accw_ref.shape[1]
+    n_words = chunk // 4
+    n_chunks = n_bytes // chunk
+    evcap = _event_capacity(chunk)
+    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
+                       accb_ref)
+    init_row = init_ref[0, :]
+
+    # result buffers for every document in this segment; empty doc slots
+    # keep these initial values (flushed by the boundary loop unchanged)
+    mbuf_ref[...] = jnp.zeros_like(mbuf_ref)
+    fbuf_ref[...] = jnp.full_like(fbuf_ref, NO_MATCH)
+    stack_ref[...] = jnp.zeros_like(stack_ref)
+    stack_ref[0, :] = init_row
+
+    def byte_dma(slot, ci):
+        # chunk bytes + one int32 lookahead word: HBM → VMEM
+        return pltpu.make_async_copy(
+            data_ref.at[s, pl.ds(ci * n_words, n_words + 1), :],
+            bbuf_ref.at[slot], sem_ref.at[slot])
+
+    byte_dma(0, 0).start()
+
+    # static helpers for in-chunk compaction
+    upper = (jax.lax.broadcasted_iota(jnp.float32, (chunk, chunk), 0)
+             <= jax.lax.broadcasted_iota(jnp.float32, (chunk, chunk), 1)
+             ).astype(jnp.float32)                      # inclusive cumsum
+    eiota = jax.lax.broadcasted_iota(jnp.int32, (evcap, chunk), 0)
+    shift = jax.lax.broadcasted_iota(
+        jnp.uint32, (1, n_words + 1, 4), 2) * jnp.uint32(8)
+
+    def chunk_body(ci, carry):
+        slot = jax.lax.rem(ci, 2)
+
+        @pl.when(ci + 1 < n_chunks)
+        def _():
+            byte_dma(1 - slot, ci + 1).start()
+
+        byte_dma(slot, ci).wait()
+
+        # unpack little-endian int32 words → one (1, chunk+4) byte row
+        words = bbuf_ref[slot].reshape(1, n_words + 1, 1)
+        bytes_row = ((words.astype(jnp.uint32) >> shift)
+                     & jnp.uint32(0xFF)).astype(jnp.int32)
+        bytes_row = bytes_row.reshape(1, 4 * (n_words + 1))
+        b0 = bytes_row[:, 0:chunk]
+        b1 = bytes_row[:, 1:chunk + 1]
+        b2 = bytes_row[:, 2:chunk + 2]
+        b3 = bytes_row[:, 3:chunk + 3]
+        fused, keep = parse_mod.fused_predecode(b0, b1, b2, b3)
+        keepf = keep.astype(jnp.float32)                 # (1, chunk)
+        dest = (jnp.dot(keepf, upper,
+                        preferred_element_type=jnp.float32)
+                .astype(jnp.int32) - 1)                  # (1, chunk)
+        cnt = dest[0, chunk - 1] + 1
+        pos_row = ci * chunk + jax.lax.broadcasted_iota(
+            jnp.int32, (1, chunk), 1)
+        # masked-sum compaction: event j = Σ over positions with dest==j
+        maskT = ((eiota == dest) & keep).astype(jnp.int32)  # (evcap, chunk)
+        evbuf_ref[:, 0:1] = jnp.sum(maskT * fused, axis=1, keepdims=True)
+        evbuf_ref[:, 1:2] = jnp.sum(maskT * pos_row, axis=1, keepdims=True)
+
+        def ev_body(j, carry):
+            d, nxt, depth, base, ord_, matched, first = carry
+            erow = evbuf_ref[pl.ds(j, 1), :]
+            ev = erow[0, 0]
+            pos = erow[0, 1]
+
+            # crossed one or more doc boundaries? flush and re-root.
+            # ``nxt`` (the next boundary offset) rides in the carry so
+            # the while cond stays ref-free; sentinel rows past the
+            # last real document make it +inf-like, never crossed.
+            def flush_cond(c):
+                return pos >= c[1]
+
+            def flush_body(c):
+                dd, _, _, _, oo, mm, ff = c
+                mbuf_ref[pl.ds(dd, 1), :] = mm.astype(jnp.int32)[None]
+                fbuf_ref[pl.ds(dd, 1), :] = ff[None]
+                stack_ref[0, :] = init_row
+                return (dd + 1, starts_ref[0, dd + 2], jnp.int32(0),
+                        oo, oo, jnp.zeros((qb,), bool),
+                        jnp.full((qb,), NO_MATCH, jnp.int32))
+
+            d, nxt, depth, base, ord_, matched, first = jax.lax.while_loop(
+                flush_cond, flush_body,
+                (d, nxt, depth, base, ord_, matched, first))
+            depth, matched, first = _advance(
+                ev, ord_ - base, depth, matched, first, stack_ref, tb,
+                max_depth=max_depth, n_tags=n_tags)
+            return d, nxt, depth, base, ord_ + 1, matched, first
+
+        return jax.lax.fori_loop(0, cnt, ev_body, carry)
+
+    d, nxt, depth, base, ord_, matched, first = jax.lax.fori_loop(
+        0, n_chunks, chunk_body,
+        (jnp.int32(0), starts_ref[0, 1], jnp.int32(0), jnp.int32(0),
+         jnp.int32(0), jnp.zeros((qb,), bool),
+         jnp.full((qb,), NO_MATCH, jnp.int32)))
+    # epilogue: flush the document the stream ended inside, then drain
+    # any remaining (empty) doc slots so their initial rows are final
+    mbuf_ref[pl.ds(d, 1), :] = matched.astype(jnp.int32)[None]
+    fbuf_ref[pl.ds(d, 1), :] = first[None]
+    matched_ref[0, 0, :, :] = mbuf_ref[...]
+    first_ref[0, 0, :, :] = fbuf_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("max_depth", "chunk", "interpret",
+                                    "grid_order"))
+def stream_filter_bytes_pallas(data: jax.Array, starts: jax.Array,
+                               tagmask: jax.Array, pw: jax.Array,
+                               pb: jax.Array, selfloop_words: jax.Array,
+                               init_words: jax.Array, acc_word: jax.Array,
+                               acc_bit: jax.Array, *, max_depth: int,
+                               chunk: int = 256,
+                               interpret: bool | None = None,
+                               grid_order: str = "bg"
+                               ) -> tuple[jax.Array, jax.Array]:
+    """One-launch raw bytes → per-document verdicts.
+
+    data (S, L) uint8 packed segments; starts (S, D+1) int32 document
+    start offsets per segment, INT32_MAX-filled past the last real
+    document (see ``repro.core.events.SegmentPack``) — an unpacked batch
+    is the degenerate D=1 with ``starts = [[0, INT32_MAX]] * B``.  Block
+    tables as for :func:`stream_filter_pallas`.  ``chunk`` is *bytes*
+    per DMA chunk here (the event kernel's chunk counts events).
+    Returns matched/first (S, G, D, QB) int32 accept-lane outputs; the
+    caller scatters document rows back to batch order.
+    """
+    from . import interpret_default
+
+    if interpret is None:
+        interpret = interpret_default()
+    nseg, length = data.shape
+    n_docs = starts.shape[1] - 1
+    g, wb = selfloop_words.shape
+    qb = acc_word.shape[1]
+    n_tags = tagmask.shape[1] - 1
+    chunk = max(32, min(_round_up(int(chunk), 32), _round_up(length, 32)))
+    npad = _round_up(length, chunk)
+    # + one int32 lookahead word so chunk-straddling tags decode whole
+    data = jnp.pad(data, ((0, 0), (0, npad - length + 4)))
+    words = jax.lax.bitcast_convert_type(
+        data.reshape(nseg, npad // 4 + 1, 4), jnp.int32)[..., None]
+    grid, doc_axis, by_block, by_doc_block = _grid_maps(grid_order, nseg, g)
+    matched, first = pl.pallas_call(
+        functools.partial(_bytes_kernel, n_bytes=npad, max_depth=max_depth,
+                          chunk=chunk, n_tags=n_tags, n_docs=n_docs,
+                          doc_axis=doc_axis),
+        grid=grid,
+        in_specs=[
+            # raw bytes stay off-core; the kernel DMAs VMEM chunks itself
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, n_docs + 1),
+                         lambda *ids: by_doc_block(*ids)[:1] + (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n_tags + 1, wb),
+                         lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, n_docs, qb),
+                         lambda *ids: by_doc_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, 1, n_docs, qb),
+                         lambda *ids: by_doc_block(*ids) + (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nseg, g, n_docs, qb), jnp.int32),
+            jax.ShapeDtypeStruct((nseg, g, n_docs, qb), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((max_depth + 2, wb), jnp.uint32),   # tag stack
+            pltpu.VMEM((n_docs, qb), jnp.int32),           # matched buf
+            pltpu.VMEM((n_docs, qb), jnp.int32),           # first buf
+            # double-buffered raw-byte chunks (+1 lookahead word each)
+            pltpu.VMEM((2, chunk // 4 + 1, 1), jnp.int32),
+            # compacted (event word, byte pos) rows for one chunk
+            pltpu.VMEM((_event_capacity(chunk), 2), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(words, starts, tagmask, pw, pb, selfloop_words, init_words,
       acc_word, acc_bit)
     return matched, first

@@ -1,0 +1,250 @@
+"""Segment-packing: the one-launch bytes path on dense ragged batches.
+
+``core.events.pack_segments`` concatenates a ragged :class:`ByteBatch`
+into dense segments (per-segment doc-id/boundary tables); the fused
+megakernel resets its stack/accept state at every document boundary and
+the host scatters accept lanes back to ``(B, Q)``.  Every packed result
+must be *bit-identical* to the unpacked scan oracle — including
+all-PAD/empty docs, single-event docs and docs longer than the segment
+target — across the plain, sharded and 2-D mesh bytes paths.  The
+measured-autotune cache (``kernels.autotune``) and the VMEM/SMEM budget
+env overrides ride along.
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+from _hypothesis_shim import given, settings, st  # noqa: E402
+from test_megakernel import (MODES, assert_same, engine_pair,  # noqa: E402
+                             workload)
+
+from repro.core import engines  # noqa: E402
+from repro.core.engines.base import FilterEngine  # noqa: E402
+from repro.core.events import (CLOSE, OPEN, ByteBatch, EventStream,  # noqa: E402
+                               SEG_SENTINEL, encode_bytes, pack_segments)
+from repro.data.generator import gen_corpus  # noqa: E402
+
+
+def _single_event_doc(d, dtd):
+    """One lone open event — the smallest non-empty document."""
+    tid = d.lookup(dtd.tag_names[0])
+    return EventStream(np.array([OPEN], np.int8),
+                       np.array([tid], np.int32))
+
+
+def _ragged_bb(dtd, d, seed, bucket=128):
+    """The ISSUE's worst-case mix: one doc longer than the segment
+    target, several tiny docs, a single-event doc and empty (all-PAD)
+    docs."""
+    docs = (gen_corpus(dtd, n_docs=1, nodes_per_doc=90, seed=seed)
+            + gen_corpus(dtd, n_docs=4, nodes_per_doc=3, seed=seed + 1))
+    bufs = ([encode_bytes(docs[0], text_fill=4)]
+            + [b""]
+            + [encode_bytes(x, text_fill=2) for x in docs[1:]]
+            + [encode_bytes(_single_event_doc(d, dtd)), b""])
+    return ByteBatch.from_buffers(bufs, bucket=bucket)
+
+
+# ----------------------------------------------------------- host packer
+class TestPackSegments:
+    def test_bytes_preserved_and_tables_consistent(self):
+        dtd, d, qs, nfa = workload(n_queries=8, seed=0)
+        bb = _ragged_bb(dtd, d, seed=0)
+        sp = pack_segments(bb, target_len=256)
+        data = np.asarray(bb.data)
+        lengths = np.asarray(bb.n_bytes)
+        seen = set()
+        for s in range(sp.n_segments):
+            for j in range(sp.docs_per_segment):
+                doc = int(sp.doc_ids[s, j])
+                if doc < 0:
+                    continue
+                a, b = int(sp.starts[s, j]), int(sp.starts[s, j + 1])
+                if b == SEG_SENTINEL:  # last real doc: sentinel wall
+                    b = a + int(lengths[doc])
+                assert b - a == int(lengths[doc]) and b <= sp.seg_len
+                np.testing.assert_array_equal(
+                    sp.data[s, a:b], data[doc, :lengths[doc]])
+                seen.add(doc)
+        # every non-empty doc appears exactly once; empty docs never do
+        assert seen == {i for i in range(bb.batch_size) if lengths[i]}
+        # boundary table ends in the sentinel wall
+        for s in range(sp.n_segments):
+            row = sp.starts[s]
+            n_real = int((sp.doc_ids[s] >= 0).sum())
+            assert (row[n_real:] == SEG_SENTINEL).all() or n_real == 0
+
+    def test_doc_longer_than_target_gets_a_segment(self):
+        dtd, d, qs, nfa = workload(n_queries=8, seed=1)
+        bb = _ragged_bb(dtd, d, seed=1)
+        sp = pack_segments(bb, target_len=64)  # far below the long doc
+        assert sp.seg_len >= int(np.asarray(bb.n_bytes).max())
+        assert 0 < sp.fill_fraction() <= 1.0
+
+    def test_all_empty_batch_is_one_inert_segment(self):
+        bb = ByteBatch.from_buffers([b"", b"", b""], bucket=32)
+        sp = pack_segments(bb, target_len=128)
+        assert sp.n_segments == 1
+        assert (np.asarray(sp.doc_ids) < 0).all()
+        m, f = sp.scatter(np.zeros((1, sp.docs_per_segment, 4), np.int32),
+                          np.zeros((1, sp.docs_per_segment, 4), np.int32),
+                          -1)
+        assert m.shape == (3, 4) and not m.any() and (f == -1).all()
+
+    def test_packing_is_denser_than_padding_on_skew(self):
+        dtd, d, qs, nfa = workload(n_queries=8, seed=2)
+        bb = _ragged_bb(dtd, d, seed=2, bucket=1024)
+        sp = pack_segments(bb, target_len=2048)
+        assert sp.data.size < np.asarray(bb.data).size
+
+
+# --------------------------------------------------- packed == oracle
+class TestPackedBitIdentity:
+    @pytest.mark.parametrize("interpret", MODES)
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_plain_bytes_path(self, interpret, seed):
+        dtd, d, qs, nfa = workload(n_queries=24, seed=seed)
+        bb = _ragged_bb(dtd, d, seed=seed)
+        scan, pallas = engine_pair(nfa, d, interpret, segment_target=256)
+        oracle = scan.filter_bytes(bb)
+        assert_same(oracle, pallas.filter_bytes(bb))            # fused
+        assert_same(oracle, pallas.filter_bytes(bb, pack=True))  # packed
+        # the two-stage comparison path stays available and identical
+        _, unfused = engine_pair(nfa, d, interpret, fuse=False)
+        assert_same(oracle, unfused.filter_bytes(bb))
+
+    @pytest.mark.parametrize("interpret", MODES)
+    def test_sharded_bytes_path(self, interpret):
+        dtd, d, qs, nfa = workload(n_queries=20, seed=4)
+        bb = _ragged_bb(dtd, d, seed=4)
+        scan, pallas = engine_pair(nfa, d, interpret,
+                                   pack=True, segment_target=256)
+        o = scan.filter_bytes_sharded(bb, scan.plan_sharded(2))
+        assert_same(o, pallas.filter_bytes_sharded(
+            bb, pallas.plan_sharded(2)))
+
+    @pytest.mark.parametrize("interpret", MODES)
+    def test_mesh2d_bytes_path(self, interpret):
+        from repro.launch.mesh import make_filter_mesh
+
+        dtd, d, qs, nfa = workload(n_queries=16, seed=5)
+        bb = _ragged_bb(dtd, d, seed=5)
+        scan, pallas = engine_pair(nfa, d, interpret,
+                                   pack=True, segment_target=256)
+        mesh = make_filter_mesh(2)
+        o = scan.filter_bytes_sharded2d(bb, scan.plan_sharded(2),
+                                        mesh=mesh)
+        assert_same(o, pallas.filter_bytes_sharded2d(
+            bb, pallas.plan_sharded(2), mesh=mesh))
+
+    @given(n_tiny=st.integers(min_value=0, max_value=5),
+           n_empty=st.integers(min_value=0, max_value=3),
+           target=st.sampled_from([128, 512]),
+           seed=st.integers(min_value=0, max_value=3))
+    @settings(max_examples=10, deadline=None)
+    def test_pack_filter_scatter_roundtrip(self, n_tiny, n_empty,
+                                           target, seed):
+        """Property: packing is invisible — for any ragged mix, the
+        packed fused verdict equals the unpacked fused verdict."""
+        dtd, d, qs, nfa = workload(n_queries=12, seed=seed)
+        docs = gen_corpus(dtd, n_docs=1, nodes_per_doc=40, seed=seed)
+        if n_tiny:
+            docs += gen_corpus(dtd, n_docs=n_tiny, nodes_per_doc=2,
+                               seed=seed + 1)
+        bufs = [encode_bytes(x, text_fill=2) for x in docs] \
+            + [b""] * n_empty
+        bb = ByteBatch.from_buffers(bufs, bucket=64)
+        _, pallas = engine_pair(nfa, d, True, segment_target=target)
+        assert_same(pallas.filter_bytes(bb),
+                    pallas.filter_bytes(bb, pack=True))
+
+
+# ------------------------------------------------ autotune loop + budgets
+class TestMeasuredAutotune:
+    def test_cache_round_trip(self, tmp_path):
+        from repro.kernels import autotune as at
+
+        path = str(tmp_path / "cache.json")
+        key = at.plan_key("interpret", 64, 14, 64, 32)
+        cfg = {"blk": 32, "byte_chunk": 64, "grid_order": "gb",
+               "segment_target": 256}
+        at.save_cache({key: {"config": cfg, "seconds": 0.5,
+                             "trials": 1, "timestamp": 0}}, path)
+        assert at.cached_config(key, path) == cfg
+        assert at.cached_config("missing:key", path) is None
+        # corrupt files degrade to a miss, never an error
+        with open(path, "w") as fh:
+            fh.write("not json")
+        assert at.load_cache(path) == {}
+
+    def test_search_persists_and_engine_consumes(self, tmp_path,
+                                                 monkeypatch):
+        from repro.kernels import autotune as at
+
+        cache = str(tmp_path / "cache.json")
+        dtd, d, qs, nfa = workload(n_queries=8, seed=6)
+        docs = gen_corpus(dtd, n_docs=3, nodes_per_doc=8, seed=6)
+        bb = ByteBatch.from_streams(docs, text_fill=2, bucket=64)
+        best, rows = at.search(
+            nfa, d, bb, blks=(32,), byte_chunks=(64,),
+            grid_orders=("gb",), segment_targets=(256,),
+            trials=1, interpret=True, cache_file=cache)
+        assert best["grid_order"] == "gb" and best["seconds"] > 0
+        assert [r for r in rows if "seconds" in r]
+        # an engine with autotune="measured" overlays the cached winner
+        monkeypatch.setenv(at.CACHE_ENV, cache)
+        eng = engines.create("streaming", nfa, dictionary=d,
+                             kernel="pallas", kernel_interpret=True,
+                             autotune="measured")
+        meta = eng.plan_.meta
+        assert (meta["byte_chunk"], meta["grid_order"],
+                meta["segment_target"]) == (64, "gb", 256)
+        # explicit engine options still beat the measured overlay
+        eng2 = engines.create("streaming", nfa, dictionary=d,
+                              kernel="pallas", kernel_interpret=True,
+                              autotune="measured", byte_chunk=128)
+        assert eng2.plan_.meta["byte_chunk"] == 128
+
+    def test_budget_env_overrides(self, monkeypatch):
+        wide = FilterEngine.autotune_blocks(4096, 64, n_tags=4096)
+        monkeypatch.setenv("REPRO_PALLAS_VMEM_BUDGET", str(128 << 10))
+        tight = FilterEngine.autotune_blocks(4096, 64, n_tags=4096)
+        assert tight["blk"] < wide["blk"]
+        monkeypatch.setenv("REPRO_PALLAS_SMEM_BUDGET", "512")
+        assert FilterEngine.autotune_blocks(
+            256, 64, n_tags=16)["chunk"] == 64
+        # explicit kwargs always beat the environment
+        assert FilterEngine.autotune_blocks(
+            4096, 64, n_tags=4096,
+            vmem_budget=4 << 20)["blk"] == wide["blk"]
+
+
+# ------------------------------------------------- regression-gate policy
+class TestCompareBaselineGate:
+    def test_speedup_gated_only_on_compiled_rows(self):
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "benchmarks"))
+        import compare_baseline as cb
+
+        assert "speedup_vs_scan" not in cb.gated_metrics(
+            {"backend": "interpret"})
+        assert "speedup_vs_scan" in cb.gated_metrics(
+            {"backend": "compiled"})
+        base = {"bench": "kernel_vs_scan", "backend": "interpret",
+                "path": "pallas", "docs_per_s": 10.0, "mb_s": 1.0,
+                "speedup_vs_scan": 1.0}
+        fresh = dict(base, speedup_vs_scan=0.2)  # huge ratio drop
+        b = {cb.row_key(base): base}
+        f = {cb.row_key(fresh): fresh}
+        table, regressions = cb.compare(b, f, threshold=0.25)
+        assert not regressions  # interpret rows never gate the ratio
+        base_c = dict(base, backend="compiled")
+        fresh_c = dict(fresh, backend="compiled")
+        table, regressions = cb.compare(
+            {cb.row_key(base_c): base_c},
+            {cb.row_key(fresh_c): fresh_c}, threshold=0.25)
+        assert any(m == "speedup_vs_scan" for _, m, *_ in regressions)
