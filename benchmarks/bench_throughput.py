@@ -305,23 +305,53 @@ def run_kernel_vs_scan(query_counts=(64, 256, 1024), batch_sizes=(4,),
     return rows
 
 
-def run_query_scaling(query_counts=(100, 1000, 10000),
-                      shard_counts=(1, 2, 4), path_len=3, n_docs=8,
-                      nodes_per_doc=200, seed=0, engine="streaming",
-                      repeat=3, use_mesh=True):
+def geometric_query_counts(max_queries: int, min_queries: int = 100,
+                           growth: int = 10) -> tuple[int, ...]:
+    """Capped geometric subscription series: ``min·growthᵏ`` up to and
+    always including ``max_queries`` (so ``--max-queries 1000000`` is
+    the 10⁶ smoke configuration of the same bench)."""
+    counts, n = [], int(min_queries)
+    while n < int(max_queries):
+        counts.append(n)
+        n *= int(growth)
+    counts.append(int(max_queries))
+    return tuple(counts)
+
+
+def run_query_scaling(query_counts=None, shard_counts=(1, 2, 4),
+                      path_len=3, n_docs=8, nodes_per_doc=200, seed=0,
+                      engine="streaming", repeat=3, use_mesh=True,
+                      max_queries=100_000, min_queries=100, growth=10,
+                      minimize=True):
     """The paper's headline claim, measured: scalability in the number
     of standing profiles.
 
-    One row per (n_queries, query_shards): docs/s through the same
-    batch as the subscription set grows 10²→10⁴, monolithic plan
-    (``query_shards=1``, the seed architecture) vs the partitioned
-    :class:`ShardedPlan` executed over the mesh ``"model"`` axis.  On a
-    single device the sharded rows measure the stacking overhead; on a
-    real mesh each device runs 1/P of the query set — the paper's
+    One row per (n_queries, query_shards) over a capped geometric
+    series (default 10²→10⁵, ``max_queries=10⁶`` is the smoke config):
+    docs/s through the same batch, monolithic plan (``query_shards=1``,
+    the seed architecture) vs the partitioned :class:`ShardedPlan`
+    executed over the mesh ``"model"`` axis.  On a single device the
+    sharded rows measure the stacking overhead; on a real mesh each
+    device runs 1/P of the query set — the paper's
     profiles-across-chips replication (§3.5/Fig 9 slope).
+
+    The subscription-axis columns each row carries:
+
+    * ``states_per_query`` / ``state_compression`` — automaton sharing:
+      minimized state count over live queries, and unshared states over
+      minimized (the global-minimization win; ≥ 2× whenever profiles
+      share structure, enormous on Com-P-style workloads).
+    * ``sparse_docs_per_s`` / ``verdict_bytes`` / ``dense_verdict_bytes``
+      / ``matches`` — sparse verdict delivery: the match-list wire size
+      scales with matches while the dense bitmap scales with ``B × Q``.
+    * ``sparse_exact`` — the sparse result densified bit-identically to
+      the dense verdict of the same batch (checked every row).
     """
     from repro.launch.mesh import make_filter_mesh
 
+    if query_counts is None:
+        query_counts = geometric_query_counts(max_queries, min_queries,
+                                              growth)
     dtd = DTD.generate(n_tags=24, seed=seed)
     d = TagDictionary()
     dtd.register(d)
@@ -333,24 +363,40 @@ def run_query_scaling(query_counts=(100, 1000, 10000),
     for nq in query_counts:
         qs = gen_profiles(dtd, n=nq, length=path_len, seed=seed + path_len)
         nfa = compile_queries(qs, d, shared=True)
-        eng = engines.create(engine, nfa, dictionary=d)
+        eng = engines.create(engine, nfa, dictionary=d, minimize=minimize)
+        ms = eng.minimize_stats
         for shards in shard_counts:
             if shards == 1:
                 fn = lambda: eng.filter_batch(batch)  # noqa: E731
+                fn_sparse = lambda: eng.filter_batch_sparse(  # noqa: E731
+                    batch)
             else:
                 sp = eng.plan_sharded(shards)
                 mesh = make_filter_mesh(shards) if use_mesh else None
                 fn = lambda: eng.filter_batch_sharded(  # noqa: E731
                     batch, sp, mesh=mesh)
-            fn()  # compile warmup
+                fn_sparse = (  # noqa: E731
+                    lambda: eng.filter_batch_sharded_sparse(
+                        batch, sp, mesh=mesh))
+            dense = fn()  # compile warmup + the equivalence reference
             t = _time(fn, repeat=repeat)
+            sparse = fn_sparse()  # compile warmup + wire-size sample
+            t_sparse = _time(fn_sparse, repeat=repeat)
             rows.append(
                 {"bench": "query_scaling", "engine": engine,
                  "n_queries": nq, "query_shards": shards,
                  "path_len": path_len, "n_docs": n_docs,
                  "doc_mb": round(mb, 3), "n_states": eng.nfa.n_states,
+                 "states_per_query": round(eng.nfa.n_states / nq, 4),
+                 "state_compression": (round(ms.compression, 2)
+                                       if ms else 1.0),
                  "docs_per_s": round(n_docs / t, 2),
-                 "mb_s": round(mb / t, 3)})
+                 "mb_s": round(mb / t, 3),
+                 "sparse_docs_per_s": round(n_docs / t_sparse, 2),
+                 "matches": sparse.n_matches,
+                 "verdict_bytes": sparse.verdict_bytes,
+                 "dense_verdict_bytes": sparse.dense_bytes,
+                 "sparse_exact": bool(sparse.densify() == dense)})
     return rows
 
 
@@ -475,9 +521,15 @@ def main() -> None:
                          "these ingest paths instead of the Fig-9 sweep")
     ap.add_argument("--query-shards", type=int, nargs="+", default=None,
                     metavar="P",
-                    help="run the query-count scaling sweep (10²→10⁴ "
-                         "standing profiles) over these shard counts "
-                         "instead of the Fig-9 sweep")
+                    help="run the query-count scaling sweep (geometric "
+                         "series up to --max-queries standing profiles) "
+                         "over these shard counts instead of the Fig-9 "
+                         "sweep")
+    ap.add_argument("--max-queries", type=int, default=100_000,
+                    help="cap of the query-scaling geometric series "
+                         "(100·10ᵏ up to and including this; 1000000 is "
+                         "the 10⁶ smoke configuration). Ignored when "
+                         "--queries lists explicit counts.")
     ap.add_argument("--churn", action="store_true",
                     help="run the subscription-churn latency section "
                          "instead of the Fig-9 sweep")
@@ -505,11 +557,12 @@ def main() -> None:
         return
     if args.query_shards:
         rows = run_query_scaling(
-            query_counts=tuple(args.queries or (100, 1000, 10000)),
+            query_counts=tuple(args.queries) if args.queries else None,
             shard_counts=tuple(args.query_shards),
             path_len=(args.path_lengths or [3])[0],
             n_docs=args.docs, nodes_per_doc=args.nodes, seed=args.seed,
-            engine=(args.engine or ["streaming"])[0], repeat=args.repeat)
+            engine=(args.engine or ["streaming"])[0], repeat=args.repeat,
+            max_queries=args.max_queries)
         for r in rows:
             print(json.dumps(r))
         return

@@ -55,6 +55,10 @@ COMPILED_ONLY_METRICS = ("speedup_vs_scan",)
 NON_IDENTITY = frozenset(METRICS) | frozenset(COMPILED_ONLY_METRICS) | {
     "speedup_vs_yfilter", "vs_events", "speedup_vs_recompile",
     "seconds_per_op", "events_per_slot", "stream_bytes", "roofline_pct",
+    # subscription-axis measurement columns (query_scaling rows):
+    # state compression and sparse-delivery outputs, not configuration
+    "verdict_bytes", "dense_verdict_bytes", "matches", "sparse_docs_per_s",
+    "states_per_query", "state_compression", "sparse_exact", "n_states",
 }
 
 

@@ -98,9 +98,11 @@ def run_sections(sections, full: bool) -> list[dict]:
             rows += bench_throughput.run_query_scaling(
                 n_docs=16, nodes_per_doc=400)
         else:
-            # acceptance sweep 10²→10⁴ profiles on a small doc batch
+            # acceptance sweep 10²→10⁵ profiles on a small doc batch;
+            # the 10⁵ rows carry the subscription-axis columns
+            # (state_compression, verdict_bytes, sparse_exact)
             rows += bench_throughput.run_query_scaling(
-                query_counts=(100, 1000, 10000), shard_counts=(1, 2, 4),
+                max_queries=100_000, shard_counts=(1, 2, 4),
                 n_docs=4, nodes_per_doc=120, repeat=1)
 
     if "docscale" in sections:

@@ -85,7 +85,7 @@ To add an engine, subclass :class:`base.FilterEngine` and decorate with
 from . import base  # noqa: F401
 from .base import (FilterEngine, FilterPlan, ShardedPlan, create, get,  # noqa: F401
                    names, register)
-from .result import NO_MATCH, FilterResult  # noqa: F401
+from .result import NO_MATCH, FilterResult, SparseResult  # noqa: F401
 
 # importing the implementation modules populates the registry
 from . import oracle as _oracle          # noqa: F401,E402

@@ -38,6 +38,7 @@ from __future__ import annotations
 import abc
 import dataclasses
 import os
+from functools import partial
 from typing import Any, ClassVar, Mapping, Sequence
 
 import jax
@@ -46,15 +47,67 @@ import numpy as np
 
 from ...sharding.compat import shard_map_compat as _shard_map
 from ..events import ByteBatch, EventBatch, EventStream
-from ..nfa import NFA, QueryPartition, compile_queries, pad_states, \
-    partition_queries
+from ..nfa import NFA, MinimizeStats, QueryPartition, _query_weight, \
+    compile_queries, minimize as minimize_nfa, pad_states, partition_queries
 from ..xpath import Query, parse as parse_xpath
-from .result import NO_MATCH, FilterResult
+from .result import NO_MATCH, FilterResult, SparseResult
 
 
 def _round_up(n: int, multiple: int) -> int:
     multiple = max(1, int(multiple))
     return max(multiple, -(-n // multiple) * multiple)
+
+
+# ------------------------------------------------- sparse verdict compaction
+def _compact_matches(matched, first, cols, cap: int):
+    """Cumsum-compact a dense device verdict into a bounded match buffer.
+
+    ``matched`` ``(B, K)`` bool and ``first`` ``(B, K)`` int32 live on
+    device; ``cols`` ``(K,)`` int32 names each column (a query column,
+    global id, or accept-lane class — ``-1`` marks dead/pad columns whose
+    hits are discarded).  Every hit is assigned its rank by an exclusive
+    cumsum over the flattened hit mask and scattered to that slot of a
+    ``cap``-bounded buffer (out-of-range ranks drop), so the only
+    device→host transfer is ``3 × cap`` int32 plus one count — delivery
+    bandwidth scales with matches, not ``B × K``.  When the returned
+    ``count`` exceeds ``cap`` the buffer is truncated and the caller
+    must fall back to the dense path (``SparseResult.overflowed``).
+    """
+    hits = jnp.logical_and(matched, (cols >= 0)[None, :])
+    flat = hits.reshape(-1)
+    rank = jnp.cumsum(flat.astype(jnp.int32)) - 1
+    dest = jnp.where(flat, rank, cap)          # non-hits park out of range
+    doc = jax.lax.broadcasted_iota(jnp.int32, hits.shape, 0).reshape(-1)
+    col = jnp.broadcast_to(cols[None, :], hits.shape).reshape(-1)
+    buf_doc = jnp.full((cap,), -1, jnp.int32).at[dest].set(
+        doc, mode="drop")
+    buf_col = jnp.full((cap,), -1, jnp.int32).at[dest].set(
+        col, mode="drop")
+    buf_first = jnp.full((cap,), NO_MATCH, jnp.int32).at[dest].set(
+        first.reshape(-1), mode="drop")
+    return buf_doc, buf_col, buf_first, flat.sum(dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnums=3)
+def _compact_dense(matched, first, cols, cap: int):
+    """Jitted :func:`_compact_matches` over a ``(B, K)`` device verdict."""
+    return _compact_matches(matched, first, cols, cap)
+
+
+@partial(jax.jit, static_argnums=3)
+def _compact_parts(matched, first, cols, cap: int):
+    """Jitted compaction over a stacked ``(P, B, Qpad)`` sharded verdict.
+
+    ``cols`` is ``(P, Qpad)`` global ids (``-1`` = tombstoned/pad).  The
+    part axis folds into the column axis, so one cumsum ranks hits
+    across every part — rows come back doc-major but part-interleaved
+    within a document; the host assembly lexsorts.
+    """
+    p, b, q = matched.shape
+    m = jnp.moveaxis(matched, 0, 1).reshape(b, p * q)
+    f = jnp.moveaxis(first, 0, 1).reshape(b, p * q)
+    return _compact_matches(m, f, cols.reshape(-1), cap)
+
 
 
 #: default event-axis padding bucket for the byte-ingest paths; engines
@@ -262,6 +315,197 @@ class ShardedPlan:
     def part_sizes(self) -> np.ndarray:
         return self.partition.part_sizes()
 
+    def gid_columns(self) -> np.ndarray:
+        """``(P, Qpad)`` global id per compiled plan column.
+
+        ``-1`` marks tombstoned and pad columns — the dead-column mask
+        the sparse compaction path uses to discard their hits on device.
+        """
+        qpad = int(self.pads.get("n_queries", 0)) or max(
+            (len(c) for c in self.part_cols), default=1)
+        out = np.full((self.n_parts, qpad), -1, np.int32)
+        for p, cols in enumerate(self.part_cols):
+            if cols:
+                out[p, :len(cols)] = cols
+        return out
+
+    # --------------------------------------------------------- rebalancing
+    def part_weights(self) -> np.ndarray:
+        """Estimated automaton load per part: Σ state weight of live
+        queries (:func:`repro.core.nfa._query_weight` — length plus a
+        loop state per ``//`` step), the same measure
+        :func:`partition_queries` balances at plan time."""
+        w = np.zeros(self.n_parts, np.int64)
+        for p, (cols, qs) in enumerate(zip(self.part_cols,
+                                           self.part_queries)):
+            w[p] = sum(_query_weight(q)
+                       for g, q in zip(cols, qs) if g >= 0)
+        return w
+
+    def imbalance(self) -> float:
+        """Relative overload of the heaviest part: ``max/mean - 1``.
+
+        0 means perfectly balanced; 1 means the hottest part carries
+        twice the average automaton weight (and the stacked device
+        program wastes half its padded area on the other parts).
+        """
+        w = self.part_weights().astype(float)
+        mean = float(w.mean()) if w.size else 0.0
+        return float(w.max() / mean - 1.0) if mean > 0 else 0.0
+
+    def rebalance(self, *, tolerance: float = 0.25,
+                  max_moves: int | None = None
+                  ) -> tuple["ShardedPlan", dict]:
+        """Migrate trie groups between parts until load is ~balanced.
+
+        Long churn sequences erode the plan-time balance:
+        :meth:`add_queries` always appends to the currently least-loaded
+        part and :meth:`remove_queries` tombstones in place, so at 10⁵+
+        subscriptions the partition drifts — one part's sub-NFA grows
+        while others carry dead columns, and the uniformly-padded
+        stacked program pays the hottest part's shape everywhere.
+
+        This is the off-hot-path repair: shared-prefix trie groups (the
+        :func:`partition_queries` migration unit, so prefix sharing
+        survives the move) are moved greedily from the heaviest to the
+        lightest part while each move strictly shrinks the spread; only
+        the parts actually touched are recompiled — at the existing pad
+        buckets when they fit (with an incremental restack of just those
+        rows), falling back to a full re-pad otherwise.  Tombstoned
+        columns of recompiled parts are compacted away for free.
+
+        Returns ``(new_plan, stats)`` — the caller swaps the new frozen
+        plan in atomically (see ``FilterStage.maybe_rebalance``); the
+        old plan keeps serving until then.  Global ids, verdicts and
+        live-id ordering are unchanged: rebalancing is invisible in
+        results.  When the plan is already within ``tolerance``
+        (``max/mean - 1 ≤ tolerance``), returns ``self`` unchanged.
+        """
+        from ...kernels.blocks import PadOverflow
+        from ..nfa import _prefix_key
+
+        eng = self._engine_obj
+        imb0 = self.imbalance()
+        stats = {"moves": 0, "moved_queries": 0, "recompiled_parts": 0,
+                 "repadded": False, "imbalance_before": imb0,
+                 "imbalance_after": imb0}
+        if self.n_parts < 2 or imb0 <= tolerance:
+            return self, stats
+
+        # live queries per part, bucketed into trie-group migration units
+        units: list[dict[Any, list[tuple[int, Query]]]] = []
+        for cols, qs in zip(self.part_cols, self.part_queries):
+            d: dict[Any, list[tuple[int, Query]]] = {}
+            for g, q in zip(cols, qs):
+                if g >= 0:
+                    d.setdefault(_prefix_key(q), []).append((g, q))
+            units.append(d)
+        loads = [sum(_query_weight(q) for grp in d.values() for _, q in grp)
+                 for d in units]
+        mean = sum(loads) / len(loads)
+
+        moves: list[tuple[int, int, int]] = []  # (donor, recv, n_queries)
+        budget = max_moves if max_moves is not None else 4 * self.n_parts
+        while len(moves) < budget:
+            donor = int(np.argmax(loads))
+            recv = int(np.argmin(loads))
+            gap = loads[donor] - loads[recv]
+            if gap <= 0 or loads[donor] <= (1.0 + tolerance) * mean:
+                break
+            # heaviest whole group that still strictly shrinks the
+            # spread (w < gap ⇒ the receiver ends below the donor's old
+            # load, so the same group can never ping-pong back)
+            best_key, best_w = None, 0
+            for key, grp in units[donor].items():
+                w = sum(_query_weight(q) for _, q in grp)
+                if best_w < w < gap:
+                    best_key, best_w = key, w
+            if best_key is not None:
+                grp = units[donor].pop(best_key)
+                units[recv].setdefault(best_key, []).extend(grp)
+                loads[donor] -= best_w
+                loads[recv] += best_w
+                moves.append((donor, recv, len(grp)))
+                continue
+            # every group outweighs the gap (a popular prefix can dwarf
+            # the per-part mean at 10⁵ profiles): split the heaviest one
+            # at query granularity — co-locating a prefix group is a
+            # balance heuristic, never a correctness invariant, and the
+            # moved slice still shares its prefix *within* the receiver
+            key = max(units[donor],
+                      key=lambda k: sum(_query_weight(q)
+                                        for _, q in units[donor][k]),
+                      default=None)
+            if key is None:
+                break
+            grp = units[donor][key]
+            take, w = 0, 0
+            for g, q in grp[:-1]:  # always leave one query behind
+                qw = _query_weight(q)
+                if w + qw >= gap:
+                    break
+                take += 1
+                w += qw
+                if w >= gap / 2:
+                    break
+            if take == 0:
+                break
+            units[donor][key] = grp[take:]
+            units[recv].setdefault(key, []).extend(grp[:take])
+            loads[donor] -= w
+            loads[recv] += w
+            moves.append((donor, recv, take))
+        if not moves:
+            return self, stats
+
+        changed = sorted({p for d, r, _ in moves for p in (d, r)})
+        part_cols = list(self.part_cols)
+        part_queries = list(self.part_queries)
+        part_nfas = list(self.part_nfas)
+        for p in changed:
+            entries = sorted(
+                (g, q) for grp in units[p].values() for g, q in grp)
+            part_cols[p] = tuple(g for g, _ in entries)
+            part_queries[p] = tuple(q for _, q in entries)
+            part_nfas[p] = eng._maybe_minimize(compile_queries(
+                part_queries[p], eng.dictionary, shared=self.shared))
+
+        fresh = eng.part_pads(part_nfas, query_bucket=self.query_bucket)
+        pads, plans, stacked = self.pads, list(self.plans), self._stacked
+        new_plans: dict[int, FilterPlan] | None = None
+        if all(fresh.get(k, 0) <= pads.get(k, 0) for k in fresh):
+            try:
+                new_plans = {p: eng.plan_part(part_nfas[p], pads)
+                             for p in changed}
+            except PadOverflow:
+                new_plans = None
+        if new_plans is None:
+            pads = eng.merge_pads(self.pads, fresh, part_nfas)
+            plans = [eng.plan_part(nfa, pads) for nfa in part_nfas]
+            stacked = None
+            stats["repadded"] = True
+            stats["recompiled_parts"] = self.n_parts
+        else:
+            for p, pl in new_plans.items():
+                plans[p] = pl
+            stats["recompiled_parts"] = len(changed)
+            if stacked is not None:
+                tables = stacked.tables
+                for p in changed:
+                    tables = {k: v.at[p].set(plans[p][k])
+                              for k, v in tables.items()}
+                stacked = FilterPlan(self.engine, tables, stacked.meta)
+
+        sp = ShardedPlan(eng, plans, part_cols, part_queries, part_nfas,
+                         pads, self.n_global, self.query_bucket,
+                         self.shared)
+        if stacked is not None:
+            object.__setattr__(sp, "_stacked", stacked)
+        stats["moves"] = len(moves)
+        stats["moved_queries"] = sum(n for _, _, n in moves)
+        stats["imbalance_after"] = sp.imbalance()
+        return sp, stats
+
     def __repr__(self) -> str:  # pragma: no cover
         return (f"ShardedPlan({self.engine!r}, parts={self.n_parts}, "
                 f"queries={self.n_queries}, pads={self.pads})")
@@ -292,7 +536,8 @@ class ShardedPlan:
         new_gids = list(range(self.n_global, self.n_global + len(new_qs)))
         cols_p = tuple(g for g, _ in live) + tuple(new_gids)
         qs_p = tuple(q for _, q in live) + tuple(new_qs)
-        nfa_p = compile_queries(qs_p, eng.dictionary, shared=self.shared)
+        nfa_p = eng._maybe_minimize(
+            compile_queries(qs_p, eng.dictionary, shared=self.shared))
         part_nfas = list(self.part_nfas)
         part_nfas[p] = nfa_p
         fresh = eng.part_pads(part_nfas, query_bucket=self.query_bucket)
@@ -404,13 +649,33 @@ class FilterEngine(abc.ABC):
     _plan_pads: Mapping[str, int] | None = None
 
     def __init__(self, nfa: NFA, dictionary=None, **options: Any) -> None:
-        self.nfa = nfa
         self.dictionary = dictionary
         if "state_multiple" in options:
             self.state_multiple = int(options.pop("state_multiple"))
+        # global NFA minimization (``minimize=True`` engine option):
+        # merge behavior-identical states across queries on top of the
+        # shared-prefix trie before compiling any plan — the sharded and
+        # churn paths route through _maybe_minimize so every compiled
+        # part shrinks the same way
+        self._minimize = bool(options.pop("minimize", False))
+        self.minimize_stats: MinimizeStats | None = None
+        if self._minimize:
+            nfa, self.minimize_stats = minimize_nfa(nfa)
+        self.nfa = nfa
         self.options = options
         self.n_queries = nfa.n_queries
         self.plan_: FilterPlan = self.plan(nfa)
+
+    def _maybe_minimize(self, nfa: NFA) -> NFA:
+        """Apply global minimization when the engine was built with it.
+
+        Every compilation site — the initial plan, per-part sharded
+        plans, churn recompiles, rebalance recompiles — routes new NFAs
+        through here so verdict-equivalence is preserved uniformly.
+        """
+        if not getattr(self, "_minimize", False):
+            return nfa
+        return minimize_nfa(nfa)[0]
 
     # ------------------------------------------------------------ contract
     @abc.abstractmethod
@@ -599,6 +864,7 @@ class FilterEngine(abc.ABC):
         parts, partition = partition_queries(
             list(self.nfa.queries), n_parts, self.dictionary,
             shared=self.nfa.shared)
+        parts = [self._maybe_minimize(p) for p in parts]
         # local ids are assigned in ascending gid order within each part,
         # so appending in gid order reproduces the column layout
         part_cols: list[list[int]] = [[] for _ in range(n_parts)]
@@ -642,6 +908,157 @@ class FilterEngine(abc.ABC):
             matched[:, j] = outs[p].matched[:, c]
             first[:, j] = outs[p].first_event[:, c]
         return FilterResult(matched, first)
+
+    # ------------------------------------------------- sparse verdict path
+    def match_cap(self, batch_size: int, n_cols: int,
+                  cap: int | None = None) -> int:
+        """Resolve the bounded match-buffer size for one sparse call.
+
+        Explicit argument wins, then the ``match_cap=`` engine option;
+        the default budgets 32 matches per document (floor 4096) — far
+        above realistic selectivity at 10⁵ profiles, while the dense
+        fallback keeps rare hot batches exact.  Clamped to the dense
+        size, past which overflow is impossible anyway.
+        """
+        if cap is None:
+            cap = self.options.get("match_cap")
+        if cap is None:
+            cap = max(4096, 32 * batch_size)
+        return int(max(1, min(int(cap), batch_size * max(1, n_cols))))
+
+    def _sparse_from_buffers(self, bufs, count: int, cap: int, *,
+                             batch_size: int, n_queries: int,
+                             live_ids=None, sort: bool = False,
+                             meta: dict | None = None,
+                             dense_fallback=None) -> SparseResult:
+        """Assemble a :class:`SparseResult` from device compaction output.
+
+        ``bufs`` is the ``(doc, col, first)`` buffer triple from
+        :func:`_compact_matches`; only the first ``count`` rows are
+        real.  ``count > cap`` means the buffer overflowed — the
+        verdicts are recomputed via ``dense_fallback()`` (exact, just
+        without the bandwidth win) and flagged ``overflowed``.
+        """
+        meta = dict(meta or (), match_cap=cap)
+        if count > cap:
+            sp = dense_fallback().sparsify(live_ids)
+            sp.overflowed = True
+            sp.meta.update(meta, matches=count)
+            return sp
+        docs, cols, first = (np.asarray(b)[:count] for b in bufs)
+        if sort:  # part-interleaved producers: restore (doc, id) order
+            order = np.lexsort((cols, docs))
+            docs, cols, first = docs[order], cols[order], first[order]
+        return SparseResult(
+            docs, cols, first, batch_size=batch_size, n_queries=n_queries,
+            live_ids=(None if live_ids is None
+                      else np.asarray(live_ids, np.int32)),
+            meta=meta)
+
+    def filter_batch_sparse(self, batch: EventBatch, *,
+                            match_cap: int | None = None) -> SparseResult:
+        """Sparse-verdict twin of :meth:`filter_batch`.
+
+        Device engines compact the verdict **on device** (see
+        :func:`_compact_matches`): the host receives a bounded
+        ``(doc_id, query_id, first_event)`` match list instead of the
+        dense ``(B, Q)`` bitmap, so result bandwidth scales with the
+        matches.  Host engines sparsify the dense result (wire format
+        only — they never had a device transfer to save).
+        :meth:`SparseResult.densify` round-trips bit-exactly.
+        """
+        if not self.device_sharded:
+            sp = self.filter_batch(batch).sparsify()
+            sp.meta["path"] = "dense-host"
+            return sp
+        matched, first = self._run_with_plan(self.plan_, self._prep(batch))
+        b = batch.batch_size
+        q = int(matched.shape[-1])
+        cap = self.match_cap(b, q, match_cap)
+        *bufs, n = _compact_dense(matched, first,
+                                  jnp.arange(q, dtype=jnp.int32), cap)
+        return self._sparse_from_buffers(
+            bufs, int(n), cap, batch_size=b, n_queries=q,
+            meta={"path": "device-compact"},
+            dense_fallback=lambda: FilterResult(np.asarray(matched),
+                                                np.asarray(first)))
+
+    def filter_batch_sharded_sparse(self, batch: EventBatch,
+                                    sharded: ShardedPlan, *, mesh=None,
+                                    match_cap: int | None = None
+                                    ) -> SparseResult:
+        """Sparse-verdict twin of :meth:`filter_batch_sharded`.
+
+        One device compaction over the stacked ``(P, B, Qpad)`` output
+        with columns named by **global subscriber id** (tombstoned and
+        pad columns discarded on device), so at 10⁵ profiles the
+        device→host transfer is the match list, not ``B × Q_live``.
+        ``query_ids`` are global ids; ``densify`` restores the dense
+        live-column layout of :meth:`filter_batch_sharded` bit-exactly.
+        """
+        live_ids = sharded.live_ids()
+        if not self.device_sharded:
+            sp = self.filter_batch_sharded(
+                batch, sharded, mesh=mesh).sparsify(live_ids)
+            sp.meta["path"] = "dense-host"
+            return sp
+        matched, first = self._run_sharded(batch, sharded, mesh)
+        b = batch.batch_size
+        cap = self.match_cap(b, len(live_ids), match_cap)
+        *bufs, n = _compact_parts(matched, first,
+                                  jnp.asarray(sharded.gid_columns()), cap)
+
+        def dense_fallback() -> FilterResult:
+            part_of, local_of = sharded.index_arrays()
+            return FilterResult(
+                np.asarray(matched)[part_of, :, local_of].T,
+                np.asarray(first)[part_of, :, local_of].T)
+
+        return self._sparse_from_buffers(
+            bufs, int(n), cap, batch_size=b, n_queries=len(live_ids),
+            live_ids=live_ids, sort=True,
+            meta={"path": "device-compact"}, dense_fallback=dense_fallback)
+
+    def filter_batch_sharded2d_sparse(self, batch: EventBatch,
+                                      sharded: ShardedPlan, *, mesh,
+                                      match_cap: int | None = None
+                                      ) -> SparseResult:
+        """Sparse wire format over the 2-D (data × model) path.
+
+        The 2-D program's outputs are already partitioned per device;
+        this sparsifies the gathered result on the host — the match-list
+        format for delivery, without an extra device pass.
+        """
+        sp = self.filter_batch_sharded2d(
+            batch, sharded, mesh=mesh).sparsify(sharded.live_ids())
+        sp.meta["path"] = "dense-2d"
+        return sp
+
+    def filter_bytes_sparse(self, bb: ByteBatch, *,
+                            bucket: int | None = None,
+                            match_cap: int | None = None) -> SparseResult:
+        """Bytes in, sparse match list out (device parse + compaction)."""
+        from ...kernels.parse import DEFAULT_MAX_DEPTH, parse_batch
+
+        max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
+        return self.filter_batch_sparse(
+            parse_batch(bb, n_events=bb.event_bound(
+                bucket=self._event_bucket(bucket)), max_depth=max_depth),
+            match_cap=match_cap)
+
+    def filter_bytes_sharded_sparse(self, bb: ByteBatch,
+                                    sharded: ShardedPlan, *,
+                                    bucket: int | None = None, mesh=None,
+                                    match_cap: int | None = None
+                                    ) -> SparseResult:
+        """Sharded bytes→sparse-verdict twin."""
+        from ...kernels.parse import DEFAULT_MAX_DEPTH, parse_batch
+
+        max_depth = int(getattr(self, "max_depth", DEFAULT_MAX_DEPTH))
+        return self.filter_batch_sharded_sparse(
+            parse_batch(bb, n_events=bb.event_bound(
+                bucket=self._event_bucket(bucket)), max_depth=max_depth),
+            sharded, mesh=mesh, match_cap=match_cap)
 
     def _cached_exec(self, key, build):
         """Per-engine cache of compiled sharded callables, keyed on the

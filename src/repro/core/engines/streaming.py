@@ -49,7 +49,7 @@ from ..events import (CLOSE, OPEN, SEG_SENTINEL, ByteBatch, EventBatch,
                       EventStream, SegmentPack, pack_segments)
 from ..nfa import NFA, WILD_TAG, pad_states
 from . import base
-from .result import NO_MATCH, FilterResult
+from .result import NO_MATCH, FilterResult, SparseResult
 
 #: execution modes for the ``kernel=`` engine option
 KERNEL_MODES = ("auto", "pallas", "scan")
@@ -183,6 +183,88 @@ def _run_parts_kernel(plan: base.FilterPlan, kind: jax.Array,
     matched = gather(mb, plan["kb_acc_block"], plan["kb_acc_slot"]) != 0
     first = gather(fb, plan["kb_acc_block"], plan["kb_acc_slot"])
     return matched, first
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def _run_batch_kernel_sparse(plan: base.FilterPlan, kind: jax.Array,
+                             tag: jax.Array, lane_cls: jax.Array, cap: int,
+                             interpret: bool | None = None):
+    """Megakernel → bounded match buffer, skipping the dense gather.
+
+    The compaction runs on the raw ``(B, G, QB)`` accept-lane bitmap —
+    the kernel's native output — with each lane named by its **accept
+    class** (``lane_cls``, ``-1`` = inert lane).  Minimized plans map
+    many subscribers onto one lane, so the device emits one row per
+    (document, accept class): strictly fewer rows than subscribers
+    matched.  The host expands classes back to subscriber ids.
+    """
+    meta = plan.meta
+    mb, fb = sf.stream_filter_pallas(
+        sf.fuse_events(kind, tag),
+        plan["kb_tagmask"], plan["kb_pw"], plan["kb_pb"],
+        plan["kb_selfloop"], plan["kb_init"],
+        plan["kb_acc_word"], plan["kb_acc_bit"],
+        max_depth=meta["max_depth"], chunk=meta["chunk"],
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"))
+    b = mb.shape[0]
+    return base._compact_matches(
+        mb.reshape(b, -1) != 0, fb.reshape(b, -1), lane_cls, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def _run_parts_kernel_sparse(plan: base.FilterPlan, kind: jax.Array,
+                             tag: jax.Array, lane_cls: jax.Array, cap: int,
+                             interpret: bool | None = None):
+    """Sharded twin of :func:`_run_batch_kernel_sparse`: the part axis
+    folds into the block grid (ONE launch) and ``lane_cls`` carries
+    globally-offset class ids in the same folded ``(P·G·QB,)`` order, so
+    one cumsum compacts every part's accept lanes together."""
+    meta = plan.meta
+
+    def fold(x):
+        return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+    mb, fb = sf.stream_filter_pallas(
+        sf.fuse_events(kind, tag),
+        fold(plan["kb_tagmask"]), fold(plan["kb_pw"]), fold(plan["kb_pb"]),
+        fold(plan["kb_selfloop"]), fold(plan["kb_init"]),
+        fold(plan["kb_acc_word"]), fold(plan["kb_acc_bit"]),
+        max_depth=meta["max_depth"], chunk=meta["chunk"],
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"))
+    b = mb.shape[0]
+    return base._compact_matches(
+        mb.reshape(b, -1) != 0, fb.reshape(b, -1), lane_cls, cap)
+
+
+def _lane_classes(plan: base.FilterPlan) -> tuple[np.ndarray, np.ndarray]:
+    """Accept-class tables of one kernel plan (host-side, on demand).
+
+    Returns ``(class_of, lane_cls)``: ``class_of[q]`` is the accept
+    class of query column q (``-1`` for inert pad columns) and
+    ``lane_cls[g, qb]`` names each kernel lane's class (``-1`` for
+    lanes no query accepts on, including every block's reserved inert
+    lane).  Classes are numbered by first query occurrence, so member
+    lists come out in ascending column order.  Derived from the
+    many-to-one ``kb_acc_block``/``kb_acc_slot`` mapping rather than
+    stored in the plan: the tables are pure bookkeeping the jitted
+    program never reads.
+    """
+    ab = np.asarray(plan["kb_acc_block"])
+    sl = np.asarray(plan["kb_acc_slot"])
+    g, qb = np.asarray(plan["kb_acc_word"]).shape[-2:]
+    inert = sl >= qb - 1          # the reserved inert lane
+    key = ab.astype(np.int64) * qb + sl
+    kv = key[~inert]
+    uniq, inv = np.unique(kv, return_inverse=True)
+    first_idx = np.full(uniq.shape, kv.shape[0], np.int64)
+    np.minimum.at(first_idx, inv, np.arange(kv.shape[0]))
+    rank = np.empty(uniq.shape, np.int64)
+    rank[np.argsort(first_idx, kind="stable")] = np.arange(uniq.shape[0])
+    class_of = np.full(key.shape, -1, np.int32)
+    class_of[~inert] = rank[inv]
+    lane_cls = np.full((g, qb), -1, np.int32)
+    lane_cls[uniq // qb, uniq % qb] = rank
+    return class_of, lane_cls
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -560,6 +642,152 @@ class StreamingEngine(base.FilterEngine):
 
     def filter_batch(self, batch: EventBatch) -> FilterResult:
         return self.filter_batch_with_plan(self.plan_, batch)
+
+    # --------------------------------------------- lane-space sparse path
+    def _lane_memo(self, obj, build):
+        """Tiny identity-keyed memo for per-plan lane-class tables (plans
+        are frozen, so identity is validity; bounded so churned-away
+        plans don't pin memory)."""
+        cache = self.__dict__.setdefault("_lane_cache", {})
+        hit = cache.get(id(obj))
+        if hit is not None and hit[0] is obj:
+            return hit[1]
+        val = build()
+        if len(cache) >= 8:
+            cache.pop(next(iter(cache)))
+        cache[id(obj)] = (obj, val)
+        return val
+
+    def _plain_lane_tables(self, plan: base.FilterPlan):
+        """(flat lane→class names, class-member CSR) for one plan."""
+
+        def build():
+            class_of, lane_cls = _lane_classes(plan)
+            valid = class_of >= 0
+            order = np.argsort(class_of[valid], kind="stable")
+            members = np.flatnonzero(valid)[order].astype(np.int32)
+            n_cls = int(lane_cls.max(initial=-1)) + 1
+            counts = np.bincount(class_of[valid], minlength=n_cls)
+            offsets = np.concatenate(([0], np.cumsum(counts)))
+            return lane_cls.reshape(-1), offsets, members
+
+        return self._lane_memo(plan, build)
+
+    def _sharded_lane_tables(self, sharded):
+        """Composed lane tables of a stacked sharded plan.
+
+        Per-part accept classes get disjoint global ids (part-local id +
+        running offset) and the member CSR stores **global subscriber
+        ids** directly (tombstoned columns dropped at build time), so
+        one device compaction over the folded ``(P·G·QB,)`` lane axis
+        expands straight to (doc, gid) rows.
+        """
+
+        def build():
+            gcols = sharded.gid_columns()
+            lanes, member_parts, counts_parts = [], [], []
+            off = 0
+            for p, plan in enumerate(sharded.plans):
+                class_of, lane_cls = _lane_classes(plan)
+                n_cls = int(lane_cls.max(initial=-1)) + 1
+                lanes.append(np.where(lane_cls >= 0, lane_cls + off, -1))
+                valid = class_of >= 0
+                order = np.argsort(class_of[valid], kind="stable")
+                cols = np.flatnonzero(valid)[order]
+                cls = class_of[valid][order]
+                gids = gcols[p, cols]
+                keep = gids >= 0          # drop tombstoned subscribers
+                member_parts.append(gids[keep].astype(np.int32))
+                counts_parts.append(
+                    np.bincount(cls[keep], minlength=n_cls))
+                off += n_cls
+            counts = (np.concatenate(counts_parts)
+                      if counts_parts else np.zeros(0, np.int64))
+            offsets = np.concatenate(([0], np.cumsum(counts)))
+            members = (np.concatenate(member_parts)
+                       if member_parts else np.zeros(0, np.int32))
+            return np.stack(lanes).reshape(-1), offsets, members
+
+        return self._lane_memo(sharded, build)
+
+    def _expand_class_hits(self, bufs, count: int, cap: int, offsets,
+                           members, *, batch_size: int, n_queries: int,
+                           live_ids, meta: dict,
+                           dense_fallback) -> SparseResult:
+        """Device class-hit buffer → per-subscriber :class:`SparseResult`.
+
+        Each compacted row names an accept class; ``offsets``/``members``
+        is the class→subscriber CSR, expanded with one ``np.repeat`` —
+        a row with k subscribers becomes k (doc, id) rows.  Overflow
+        (``count > cap``) recomputes densely, exact but unbounded.
+        """
+        meta = dict(meta, match_cap=cap, device_rows=min(count, cap))
+        if count > cap:
+            sp = dense_fallback().sparsify(live_ids)
+            sp.overflowed = True
+            sp.meta.update(meta, device_rows=count)
+            return sp
+        docs, cls, first = (np.asarray(b)[:count] for b in bufs)
+        reps = (offsets[1:] - offsets[:-1])[cls]
+        total = int(reps.sum())
+        hit = np.repeat(np.arange(cls.shape[0]), reps)
+        within = np.arange(total) - np.repeat(np.cumsum(reps) - reps, reps)
+        qids = members[offsets[cls][hit] + within]
+        docs, first = docs[hit], first[hit]
+        order = np.lexsort((qids, docs))
+        return SparseResult(
+            docs[order], qids[order], first[order],
+            batch_size=batch_size, n_queries=n_queries,
+            live_ids=(None if live_ids is None
+                      else np.asarray(live_ids, np.int32)),
+            meta=meta)
+
+    def filter_batch_sparse(self, batch: EventBatch, *,
+                            match_cap: int | None = None) -> SparseResult:
+        """Kernel engines compact the raw accept-lane bitmap (one device
+        row per document × accept class — the many-to-one minimized
+        form); scan engines fall back to the base dense-verdict
+        compaction.  Both transfer O(cap), not O(B·Q)."""
+        if not self._kernel_on():
+            return super().filter_batch_sparse(batch, match_cap=match_cap)
+        kind, tag = self._prep(batch)
+        lane_flat, offsets, members = self._plain_lane_tables(self.plan_)
+        b = batch.batch_size
+        cap = self.match_cap(b, self.n_queries, match_cap)
+        *bufs, n = _run_batch_kernel_sparse(
+            self.plan_, kind, tag, jnp.asarray(lane_flat), cap,
+            interpret=self._kernel_interpret())
+        return self._expand_class_hits(
+            bufs, int(n), cap, offsets, members, batch_size=b,
+            n_queries=self.n_queries, live_ids=None,
+            meta={"path": "kernel-lane-compact"},
+            dense_fallback=lambda: self.filter_batch(batch))
+
+    def filter_batch_sharded_sparse(self, batch: EventBatch, sharded, *,
+                                    mesh=None,
+                                    match_cap: int | None = None
+                                    ) -> SparseResult:
+        """One megakernel launch (parts folded into the grid) straight
+        into the bounded match buffer; classes expand to global
+        subscriber ids on the host.  The mesh path keeps the base
+        compaction over the stacked shard_map output."""
+        if not self._kernel_on() or mesh is not None:
+            return super().filter_batch_sharded_sparse(
+                batch, sharded, mesh=mesh, match_cap=match_cap)
+        kind, tag = self._prep(batch)
+        lane_flat, offsets, members = self._sharded_lane_tables(sharded)
+        live_ids = sharded.live_ids()
+        b = batch.batch_size
+        cap = self.match_cap(b, len(live_ids), match_cap)
+        *bufs, n = _run_parts_kernel_sparse(
+            sharded.stacked(), kind, tag, jnp.asarray(lane_flat), cap,
+            interpret=self._kernel_interpret())
+        return self._expand_class_hits(
+            bufs, int(n), cap, offsets, members, batch_size=b,
+            n_queries=len(live_ids), live_ids=live_ids,
+            meta={"path": "kernel-lane-compact"},
+            dense_fallback=lambda: self.filter_batch_sharded(
+                batch, sharded))
 
     # ---------------------------------------------------------- byte paths
     def _fused_bytes_on(self) -> bool:

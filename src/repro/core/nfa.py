@@ -260,6 +260,118 @@ def pad_states(nfa: NFA, multiple: int = 128, *, to: int | None = None) -> NFA:
                n_tags=nfa.n_tags)
 
 
+# ---------------------------------------------------------------- minimization
+class MinimizeStats(NamedTuple):
+    """What :func:`minimize` achieved, for bench/telemetry columns."""
+
+    states_before: int      # states in the input automaton
+    states_after: int       # states after global merging
+    accept_classes: int     # distinct accept states (≤ n_queries)
+    unshared_states: int    # Unop upper bound: disjoint chains per profile
+
+    @property
+    def compression(self) -> float:
+        """State compression vs the paper's Unop (per-profile blocks)
+        baseline — the §3.3 Com-P-vs-Unop area ratio, measured."""
+        return self.unshared_states / max(self.states_after, 1)
+
+
+def unshared_state_count(queries: Sequence[Query]) -> int:
+    """States of the Unop layout (disjoint chain per profile) + root."""
+    return 1 + sum(_query_weight(q) for q in queries)
+
+
+def minimize(nfa: NFA) -> tuple[NFA, MinimizeStats]:
+    """Globally merge equivalent states across queries (beyond ``shared``).
+
+    Partition refinement over the single-parent DAG: two states merge
+    when their *entire root paths* are identical — same local row
+    (in-tag, selfloop, init, kind) and equivalent parents.  Activation is
+    a function of the root path alone, so merged states are
+    indistinguishable to every engine and the result is bit-identical.
+    This collapses ``shared=False`` (Unop) chains into the shared-prefix
+    trie, dedups repeated profiles from different subscribers, and merges
+    replicated ``//`` waiting states — the global form of §3.3's sharing.
+
+    Accept lanes become many-to-one: queries whose accept states merge
+    share one state (and downstream one kernel lane); ``accept_state``
+    keeps its (Q,) shape so verdict semantics are unchanged — use
+    :func:`accept_classes` for the distinct-lane view.
+
+    Suffix (right-language) merging is deliberately *not* attempted:
+    states of different queries always differ in their accept behaviour
+    (each subscriber needs its own verdict), so bottom-up merging can
+    never cross accept classes — the states it could merge are exactly
+    the path-equivalent ones this pass already merges.
+
+    Returns the minimized NFA plus :class:`MinimizeStats`.
+    """
+    t = nfa.tables
+    s = t.in_state.shape[0]
+    local = np.stack([
+        t.in_tag.astype(np.int64),
+        t.selfloop.astype(np.int64),
+        t.init.astype(np.int64),
+        t.kind.astype(np.int64),
+    ])
+    cls = np.zeros(s, np.int64)
+    n = 1
+    while True:  # refine until stable; ≤ trie depth + 1 rounds
+        sig = np.concatenate([cls[t.in_state][None, :], local])
+        _, new = np.unique(sig, axis=1, return_inverse=True)
+        new = new.reshape(-1)  # numpy≥2 returns the pre-axis-move shape
+        m = int(new.max()) + 1
+        if m == n:
+            cls = new
+            break
+        cls, n = new, m
+    # renumber classes by lowest member id: root stays 0 and parents keep
+    # lower ids than children (the builder invariant engines rely on)
+    reps = np.full(n, s, np.int64)
+    np.minimum.at(reps, cls, np.arange(s))
+    order = np.argsort(reps)
+    rank = np.empty(n, np.int64)
+    rank[order] = np.arange(n)
+    cls = rank[cls]
+    reps = reps[order]
+    tables = NFATables(
+        in_state=cls[t.in_state[reps]].astype(np.int32),
+        in_tag=t.in_tag[reps],
+        selfloop=t.selfloop[reps],
+        init=t.init[reps],
+        accept_state=cls[t.accept_state].astype(np.int32),
+        kind=t.kind[reps],
+    )
+    stats = MinimizeStats(
+        states_before=s,
+        states_after=n,
+        accept_classes=int(np.unique(tables.accept_state).shape[0]),
+        unshared_states=unshared_state_count(nfa.queries),
+    )
+    return (NFA(tables=tables, queries=nfa.queries, shared=True,
+                n_tags=nfa.n_tags), stats)
+
+
+def accept_classes(accept_state: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Many-to-one accept view: (class_of (Q,), class_state (C,)).
+
+    Queries sharing an accept state share an accept *class* (one kernel
+    lane, one verdict bit); classes are numbered by first query using
+    them, so an unminimized automaton (all accept states distinct) gets
+    the identity mapping.
+    """
+    class_state, class_of = np.unique(accept_state, return_inverse=True)
+    class_of = class_of.reshape(-1)
+    # renumber by first occurrence for stable, query-ordered class ids
+    first = np.full(class_state.shape[0], accept_state.shape[0], np.int64)
+    np.minimum.at(first, class_of, np.arange(accept_state.shape[0]))
+    order = np.argsort(first)
+    rank = np.empty_like(order)
+    rank[order] = np.arange(order.shape[0])
+    return (rank[class_of].astype(np.int32),
+            class_state[order].astype(np.int32))
+
+
 # ---------------------------------------------------------------- partitioning
 @dataclass(frozen=True)
 class QueryPartition:

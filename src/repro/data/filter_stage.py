@@ -34,7 +34,7 @@ import numpy as np
 
 from ..core import engines
 from ..core.dictionary import TagDictionary
-from ..core.engines import FilterResult
+from ..core.engines import FilterResult, SparseResult
 from ..core.events import (ByteBatch, EventBatch, EventStream,
                            event_stream_nbytes)
 from ..core.nfa import NFA, compile_queries
@@ -99,6 +99,18 @@ class FilterStage:
     mesh: Any = None
     shard_of_profile: np.ndarray = field(default=None)  # type: ignore
     stats: dict = field(default_factory=dict)
+    #: deliver verdicts as sparse (doc, gid) match lists — the bounded
+    #: device match buffer instead of the dense (B, Q) bitmap (engines'
+    #: ``filter_batch_sparse`` family); routing output is identical
+    sparse: bool = False
+    #: run :meth:`maybe_rebalance` automatically every N churn ops
+    #: (0 = manual only); ``rebalance_tolerance`` is the max/mean-1
+    #: imbalance the plan is allowed before groups migrate
+    rebalance_every: int = 0
+    rebalance_tolerance: float = 0.25
+    #: extra engine options (e.g. ``{"minimize": True}`` for global NFA
+    #: minimization, ``{"match_cap": ...}`` for the sparse buffer bound)
+    engine_options: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if isinstance(self.profiles[0], str):
@@ -115,7 +127,9 @@ class FilterStage:
         # back to a different (hard-coded) boundary than the stage's own
         self._eng = engines.create(self.engine, self.nfa,
                                    dictionary=self.dictionary,
-                                   event_bucket=self.bucket)
+                                   event_bucket=self.bucket,
+                                   **self.engine_options)
+        self._churn_ops = 0
         if (self.query_shards > 1 or self.data_shards > 1) \
                 and self.mesh is None:
             from ..launch.mesh import make_filter_mesh
@@ -133,7 +147,8 @@ class FilterStage:
                 np.arange(len(self.profiles)) % self.n_shards).astype(np.int32)
         self.stats = {"batches": 0, "docs": 0, "bytes": 0,
                       "seconds": 0.0, "pair_matches": 0, "pairs": 0,
-                      "put_seconds": 0.0, "overlapped_batches": 0}
+                      "put_seconds": 0.0, "overlapped_batches": 0,
+                      "verdict_bytes": 0, "rebalances": 0}
 
     # --------------------------------------------------- subscription churn
     def subscribe(self, profile: Query | str, shard: int | None = None) -> int:
@@ -162,6 +177,7 @@ class FilterStage:
                 raise
         self._next_gid = max(self._next_gid, gid + 1)
         self._grow_shard_map(gid, shard)
+        self._after_churn()
         return gid
 
     def unsubscribe(self, gid: int) -> None:
@@ -175,6 +191,37 @@ class FilterStage:
             self._gids = self.sharded_.live_ids()
         else:
             self._recompile()
+        self._after_churn()
+
+    def _after_churn(self) -> None:
+        self._churn_ops += 1
+        if (self.rebalance_every
+                and self._churn_ops >= self.rebalance_every):
+            self._churn_ops = 0
+            self.maybe_rebalance()
+
+    def maybe_rebalance(self, *, tolerance: float | None = None
+                        ) -> dict | None:
+        """Off-hot-path shard-load repair (sharded stages only).
+
+        Runs :meth:`ShardedPlan.rebalance` against the live plan and, if
+        any trie groups moved, swaps the new frozen plan in with a
+        single reference assignment — batches already dispatched keep
+        filtering the old plan, the next batch picks up the new one, and
+        verdicts/routing are identical either way (the rebalance
+        invariant).  Returns the rebalance stats, or ``None`` when the
+        stage is unsharded.
+        """
+        if self.sharded_ is None:
+            return None
+        tol = (self.rebalance_tolerance
+               if tolerance is None else tolerance)
+        new, stats = self.sharded_.rebalance(tolerance=tol)
+        if stats["moves"]:
+            self.sharded_ = new          # atomic swap
+            self._gids = new.live_ids()  # unchanged by invariant, cheap
+            self.stats["rebalances"] += 1
+        return stats
 
     def _recompile(self) -> None:
         """Unsharded churn path: from-scratch compile of the live set."""
@@ -183,7 +230,8 @@ class FilterStage:
                                    self.dictionary, shared=True)
         self._eng = engines.create(self.engine, self.nfa,
                                    dictionary=self.dictionary,
-                                   event_bucket=self.bucket)
+                                   event_bucket=self.bucket,
+                                   **self.engine_options)
         self._gids = np.asarray(gids, np.int32)
 
     def _grow_shard_map(self, gid: int, shard: int | None) -> None:
@@ -205,11 +253,15 @@ class FilterStage:
         batch = EventBatch.from_streams(docs, bucket=self.bucket)
         t0 = time.perf_counter()
         if self.data_shards > 1:
-            res = self._eng.filter_batch_sharded2d(batch, self.sharded_,
-                                                   mesh=self.mesh)
+            res = (self._eng.filter_batch_sharded2d_sparse if self.sparse
+                   else self._eng.filter_batch_sharded2d)(
+                       batch, self.sharded_, mesh=self.mesh)
         elif self.sharded_ is not None:
-            res = self._eng.filter_batch_sharded(batch, self.sharded_,
-                                                 mesh=self.mesh)
+            res = (self._eng.filter_batch_sharded_sparse if self.sparse
+                   else self._eng.filter_batch_sharded)(
+                       batch, self.sharded_, mesh=self.mesh)
+        elif self.sparse:
+            res = self._eng.filter_batch_sparse(batch)
         else:
             res = self._eng.filter_batch(batch)
         dt = time.perf_counter() - t0
@@ -218,16 +270,22 @@ class FilterStage:
                          int(batch.nbytes(TEXT_FILL).sum()), dt)
         return res
 
-    def _record(self, res: FilterResult, n_docs: int, n_bytes: int,
-                dt: float) -> None:
+    def _record(self, res: FilterResult | SparseResult, n_docs: int,
+                n_bytes: int, dt: float) -> None:
         """One accounting path for both ingest forms, so throughput()
         stays comparable between them."""
         self.stats["batches"] += 1
         self.stats["docs"] += n_docs
         self.stats["bytes"] += n_bytes
         self.stats["seconds"] += dt
-        self.stats["pair_matches"] += int(res.matched.sum())
-        self.stats["pairs"] += res.matched.size
+        if isinstance(res, SparseResult):
+            self.stats["pair_matches"] += res.n_matches
+            self.stats["pairs"] += res.batch_size * res.n_live
+            self.stats["verdict_bytes"] += res.verdict_bytes
+        else:
+            self.stats["pair_matches"] += int(res.matched.sum())
+            self.stats["pairs"] += res.matched.size
+            self.stats["verdict_bytes"] += res.matched.size * 5
 
     def _filter_bytebatch(self, bufs: list[bytes],
                           record: bool = True) -> FilterResult:
@@ -240,10 +298,15 @@ class FilterStage:
             res = self._eng.filter_bytes_sharded2d(bb, self.sharded_,
                                                    bucket=self.bucket,
                                                    mesh=self.mesh)
+            if self.sparse:
+                res = res.sparsify(self.sharded_.live_ids())
         elif self.sharded_ is not None:
-            res = self._eng.filter_bytes_sharded(bb, self.sharded_,
-                                                 bucket=self.bucket,
-                                                 mesh=self.mesh)
+            res = (self._eng.filter_bytes_sharded_sparse if self.sparse
+                   else self._eng.filter_bytes_sharded)(
+                       bb, self.sharded_, bucket=self.bucket,
+                       mesh=self.mesh)
+        elif self.sparse:
+            res = self._eng.filter_bytes_sparse(bb, bucket=self.bucket)
         else:
             res = self._eng.filter_bytes(bb, bucket=self.bucket)
         dt = time.perf_counter() - t0
@@ -356,14 +419,21 @@ class FilterStage:
         results = self._filter_bytebatch(bufs)
         return self._fan_out(results, [len(b) for b in bufs], base)
 
-    def _fan_out(self, results: FilterResult, nbytes: list[int],
-                 base: int) -> list[RoutedDocument]:
+    def _fan_out(self, results: FilterResult | SparseResult,
+                 nbytes: list[int], base: int) -> list[RoutedDocument]:
+        sparse = isinstance(results, SparseResult)
         out: list[RoutedDocument] = []
         for i, nb in enumerate(nbytes):
             # result columns are live-query columns; route by global id
             # through the partition index so churn/sharding never change
-            # which data shard a profile delivers to
-            gids = self._gids[results[i].matching_queries()]
+            # which data shard a profile delivers to.  Sparse producers
+            # with live_ids already speak global ids.
+            if sparse:
+                gids = results.matching_queries(i)
+                if results.live_ids is None:
+                    gids = self._gids[gids]
+            else:
+                gids = self._gids[results[i].matching_queries()]
             if len(gids) == 0:
                 if self.keep_unmatched:
                     out.append(RoutedDocument(base + i, gids, 0, nb))

@@ -325,23 +325,32 @@ def state_layout(nfa: NFA, blk: int = 256, *,
     pw = (l_in_state >> 5).reshape(g, wb, WORD_BITS).astype(np.int32)
     pb = (l_in_state & 31).reshape(g, wb, WORD_BITS).astype(np.int32)
 
-    # accept lanes: queries grouped by owning block; lane QB-1 of every
-    # block reserved (wired to the inert local root) for padded columns
+    # accept lanes: queries grouped by owning block; the mapping is
+    # many-to-one — queries sharing an accept state (minimized automata,
+    # duplicate subscriber profiles) share ONE lane, so the verdict width
+    # QB is bounded by distinct accept states (≤ BLK), not by Q.  Lane
+    # QB-1 of every block is reserved (wired to the inert local root)
+    # for padded columns.
     nq = int(t.accept_state.shape[0])
     acc_block = np.zeros(nq, np.int32)
     acc_slot = np.zeros(nq, np.int32)
     counts = np.zeros(g, np.int32)
     lanes: list[list[tuple[int, int]]] = [[] for _ in range(g)]
+    lane_of: dict[int, tuple[int, int]] = {}  # accept state → (block, lane)
     for q in range(nq):
         a = int(t.accept_state[q])
         if a <= 0 or state_block[a] < 0:  # root/pad accept: inert column
             acc_block[q] = 0
             acc_slot[q] = -1  # patched to QB-1 below
             continue
+        if a in lane_of:
+            acc_block[q], acc_slot[q] = lane_of[a]
+            continue
         gi = int(state_block[a])
         acc_block[q] = gi
         acc_slot[q] = counts[gi]
         lanes[gi].append((int(counts[gi]), int(state_local[a])))
+        lane_of[a] = (gi, int(counts[gi]))
         counts[gi] += 1
     qb = int(counts.max(initial=0)) + 1
     if block_queries is not None:

@@ -1,0 +1,401 @@
+"""Subscription-axis scale-up: minimization, sparse verdicts, rebalance.
+
+PR-level contract, three legs:
+
+* **Global NFA minimization** (``repro.core.nfa.minimize``, the
+  ``minimize=True`` engine option): merging behavior-identical states
+  and deduplicating accept lanes must be invisible in the verdicts —
+  minimize → plan → filter is bit-identical to the *unminimized* dense
+  oracle on every path (plain, sharded, 2-D mesh, bytes).
+* **Sparse verdict delivery** (``filter_batch_sparse`` family): the
+  bounded (doc_id, query_id, first_event) match list densifies back to
+  the dense bitmap exactly; overflowing the match buffer falls back to
+  dense recomputation (exact, flagged) instead of dropping matches.
+* **Live shard rebalancing** (``ShardedPlan.rebalance``): migrating trie
+  groups between parts off the hot path reduces imbalance, preserves
+  every live global id, and leaves verdicts equal to a fresh compile —
+  including under a 50-op churn sequence with periodic auto-rebalance.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_shim import given, settings, st
+
+from repro.core import engines
+from repro.core.dictionary import TagDictionary
+from repro.core.engines.matscan import exact_class
+from repro.core.engines.result import NO_MATCH, FilterResult, SparseResult
+from repro.core.events import ByteBatch, EventBatch, encode_bytes
+from repro.core.nfa import compile_queries, minimize, unshared_state_count
+from repro.core.xpath import parse
+from repro.data.filter_stage import FilterStage
+from repro.data.generator import DTD, gen_corpus, gen_document, gen_profiles
+from repro.launch.mesh import make_filter_mesh
+
+ALL_ENGINES = ("levelwise", "matscan", "oracle", "streaming", "wavefront",
+               "yfilter")
+DEVICE_ENGINES = ("levelwise", "matscan", "streaming", "wavefront")
+
+
+def _workload(engine: str, seed: int = 0, n_docs: int = 5,
+              n_queries: int = 18):
+    """Profiles + docs valid for ``engine`` (matscan: descendant-only
+    concrete-tag profiles on exact-class documents)."""
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    if engine == "matscan":
+        profiles = gen_profiles(dtd, n=n_queries, length=3, p_desc=1.0,
+                                p_wild=0.0, seed=seed)
+        docs = [doc for i in range(40 * n_docs)
+                if exact_class(doc := gen_document(dtd, target_nodes=20,
+                                                   max_depth=4,
+                                                   seed=seed + i))][:n_docs]
+        assert len(docs) == n_docs, "not enough exact-class documents"
+    else:
+        profiles = gen_profiles(dtd, n=n_queries, length=3, p_desc=0.4,
+                                p_wild=0.15, seed=seed)
+        docs = gen_corpus(dtd, n_docs=n_docs, nodes_per_doc=60, seed=seed)
+    return profiles, docs, d
+
+
+def _oracle_dense(profiles, d, batch) -> FilterResult:
+    """Ground truth: UNminimized oracle over the same batch."""
+    nfa = compile_queries(profiles, d, shared=True)
+    return engines.create("oracle", nfa, dictionary=d).filter_batch(batch)
+
+
+def _assert_same(res: FilterResult, want: FilterResult) -> None:
+    np.testing.assert_array_equal(res.matched, want.matched)
+    np.testing.assert_array_equal(res.first_event, want.first_event)
+
+
+# ---------------------------------------------------- global minimization
+class TestMinimize:
+    def _nfa(self, n=24, seed=0, dup=False):
+        dtd = DTD.generate(n_tags=24, seed=seed)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=n, length=3, seed=seed)
+        if dup:  # duplicate subscriptions — the accept-lane dedup case
+            qs = qs + qs
+        return compile_queries(qs, d, shared=True), d, qs
+
+    def test_stats_shape_and_idempotence(self):
+        nfa, _, qs = self._nfa()
+        m1, s1 = minimize(nfa)
+        assert s1.states_before == nfa.n_states
+        assert s1.states_after == m1.n_states <= nfa.n_states
+        assert s1.unshared_states == unshared_state_count(nfa.queries)
+        assert s1.compression >= 1.0
+        m2, s2 = minimize(m1)
+        assert s2.states_after == s2.states_before == m1.n_states
+
+    def test_duplicate_profiles_share_accept_classes(self):
+        """Two copies of every subscription: the minimized automaton has
+        one accept class per *distinct* profile — beyond-trie sharing
+        (the trie alone keeps duplicate queries on duplicate lanes)."""
+        nfa, _, qs = self._nfa(dup=True)
+        _, stats = minimize(nfa)
+        assert stats.accept_classes <= len(qs) // 2
+        # compression vs the paper's Unop per-profile-blocks baseline
+        assert stats.compression >= 2.0
+
+    def test_engine_option_records_stats(self):
+        nfa, d, _ = self._nfa()
+        eng = engines.create("streaming", nfa, dictionary=d, minimize=True)
+        assert eng.minimize_stats is not None
+        assert eng.nfa.n_states == eng.minimize_stats.states_after
+        off = engines.create("streaming", nfa, dictionary=d)
+        assert off.minimize_stats is None
+
+    @given(seed=st.integers(0, 30), n=st.integers(2, 40))
+    @settings(max_examples=12, deadline=None)
+    def test_property_minimized_equals_unminimized_oracle(self, seed, n):
+        """Hypothesis leg of the acceptance bar: random profile sets,
+        minimize → plan → filter ≡ unminimized dense oracle."""
+        profiles, docs, d = _workload("streaming", seed=seed, n_docs=3,
+                                      n_queries=n)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        want = _oracle_dense(profiles, d, batch)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d, minimize=True)
+        _assert_same(eng.filter_batch(batch), want)
+
+
+class TestMinimizedEquivalence:
+    """minimize=True is invisible on every execution path."""
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_plain(self, name):
+        profiles, docs, d = _workload(name)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d, minimize=True)
+        _assert_same(eng.filter_batch(batch), _oracle_dense(profiles, d,
+                                                            batch))
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_sharded(self, name):
+        profiles, docs, d = _workload(name)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d, minimize=True)
+        sp = eng.plan_sharded(3)
+        _assert_same(eng.filter_batch_sharded(batch, sp),
+                     _oracle_dense(profiles, d, batch))
+
+    def test_sharded_mesh_2d(self):
+        profiles, docs, d = _workload("streaming", n_docs=6)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d, minimize=True)
+        sp = eng.plan_sharded(2)
+        mesh = make_filter_mesh(2, data_shards=2)
+        _assert_same(eng.filter_batch_sharded2d(batch, sp, mesh=mesh),
+                     _oracle_dense(profiles, d, batch))
+
+    def test_bytes(self):
+        profiles, docs, d = _workload("streaming")
+        bb = ByteBatch.from_streams(docs, bucket=256)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d, minimize=True)
+        _assert_same(eng.filter_bytes(bb),
+                     _oracle_dense(profiles, d, batch))
+
+
+# ------------------------------------------------- sparse verdict delivery
+class TestSparseVerdicts:
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    @pytest.mark.parametrize("minimized", (False, True))
+    def test_plain_round_trip(self, name, minimized):
+        profiles, docs, d = _workload(name)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d, minimize=minimized)
+        dense = eng.filter_batch(batch)
+        sp = eng.filter_batch_sparse(batch)
+        assert isinstance(sp, SparseResult) and not sp.overflowed
+        _assert_same(sp.densify(), dense)
+        assert sp.verdict_bytes == 12 * sp.n_matches <= sp.dense_bytes
+        assert sp.selectivity() == dense.selectivity()
+
+    @pytest.mark.parametrize("name", ALL_ENGINES)
+    def test_sharded_round_trip_with_churn(self, name):
+        """Global ids survive the sparse wire format across a churned
+        (tombstoned) sharded plan."""
+        profiles, docs, d = _workload(name)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d, minimize=True)
+        sharded = eng.plan_sharded(3).remove_queries([1, 4])
+        dense = eng.filter_batch_sharded(batch, sharded)
+        sp = eng.filter_batch_sharded_sparse(batch, sharded)
+        assert np.array_equal(sp.live_ids, sharded.live_ids())
+        _assert_same(sp.densify(), dense)
+        # match list is (doc, global id) sorted and within the live set
+        assert all(int(g) in set(map(int, sp.live_ids))
+                   for g in sp.query_ids)
+
+    @pytest.mark.parametrize("name", DEVICE_ENGINES)
+    def test_overflow_falls_back_to_dense(self, name):
+        """A match buffer smaller than the match count must not lose
+        matches: device engines recompute dense and flag ``overflowed``."""
+        profiles, docs, d = _workload(name)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(name, nfa, dictionary=d)
+        dense = eng.filter_batch(batch)
+        assert int(dense.matched.sum()) > 1, "workload must match"
+        sp = eng.filter_batch_sparse(batch, match_cap=1)
+        if eng.device_sharded:
+            assert sp.overflowed
+        _assert_same(sp.densify(), dense)
+
+    def test_match_cap_resolution(self):
+        profiles, _, d = _workload("streaming")
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d, match_cap=64)
+        assert eng.match_cap(8, 100) == 64          # engine option
+        assert eng.match_cap(8, 100, cap=7) == 7    # explicit wins
+        assert eng.match_cap(2, 3, cap=10**9) == 6  # clamped to dense
+        no_opt = engines.create("streaming", nfa, dictionary=d)
+        assert no_opt.match_cap(8, 10_000) == 4096  # floor default
+        assert no_opt.match_cap(8, 100) == 800      # dense clamp again
+
+    def test_kernel_lane_compaction_is_many_to_one(self):
+        """The megakernel sparse path compacts in accept-*class* space:
+        with duplicated subscriptions the device emits fewer rows than
+        the expanded per-subscriber match list."""
+        profiles, docs, d = _workload("streaming", n_queries=9)
+        profiles = profiles + profiles        # every class has ≥ 2 members
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d, minimize=True,
+                             kernel="pallas", kernel_interpret=True)
+        dense = eng.filter_batch(batch)
+        sp = eng.filter_batch_sparse(batch)
+        assert sp.meta["path"] == "kernel-lane-compact"
+        _assert_same(sp.densify(), dense)
+        if sp.n_matches:
+            assert sp.meta["device_rows"] < sp.n_matches
+
+    def test_kernel_lane_compaction_sharded(self):
+        profiles, docs, d = _workload("streaming")
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d, minimize=True,
+                             kernel="pallas", kernel_interpret=True)
+        sharded = eng.plan_sharded(3).remove_queries([2])
+        dense = eng.filter_batch_sharded(batch, sharded)
+        sp = eng.filter_batch_sharded_sparse(batch, sharded)
+        assert sp.meta["path"] == "kernel-lane-compact"
+        _assert_same(sp.densify(), dense)
+
+
+# ------------------------------------------------------ S1: live-mask math
+class TestLiveMaskAccounting:
+    def test_selectivity_excludes_tombstones(self):
+        matched = np.array([[True, False, True, False]])
+        first = np.where(matched, 3, NO_MATCH).astype(np.int32)
+        live = np.array([True, True, False, False])
+        res = FilterResult(matched, first, live=live)
+        assert res.n_live == 2
+        # dead column 2's stale True must not count anywhere
+        assert res.selectivity() == 0.5
+        assert list(res[0].matching_queries()) == [0]
+
+    def test_sparsify_round_trip_keeps_live_mask(self):
+        matched = np.array([[True, False, True]])
+        first = np.where(matched, 1, NO_MATCH).astype(np.int32)
+        res = FilterResult(matched, first,
+                           live=np.array([True, True, False]))
+        sp = res.sparsify()
+        assert sp.n_matches == 1 and sp.selectivity() == res.selectivity()
+        back = sp.densify()
+        assert back.matched[0, 0] and not back.matched[0, 2]
+
+
+# ------------------------------------------------------- shard rebalancing
+class TestRebalance:
+    def _skewed(self, engine="streaming", n_parts=4, seed=3):
+        """A 4-part plan churned until part 0 holds all the weight."""
+        profiles, docs, d = _workload(engine, seed=seed, n_queries=24)
+        batch = EventBatch.from_streams(docs, bucket=64)
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create(engine, nfa, dictionary=d, minimize=True)
+        sp = eng.plan_sharded(n_parts)
+        drop = [int(g) for g in sp.live_ids()
+                if int(sp.partition.part_of[g]) != 0]
+        if len(drop) == len(sp.live_ids()):  # keep at least one query
+            drop = drop[:-1]
+        return eng, sp.remove_queries(drop), d, batch
+
+    def test_rebalance_reduces_imbalance(self):
+        eng, sp, _, _ = self._skewed()
+        before = sp.imbalance()
+        assert before > 0.25, "setup must be skewed"
+        new, stats = sp.rebalance(tolerance=0.25)
+        assert stats["moves"] > 0 and stats["moved_queries"] > 0
+        assert stats["imbalance_after"] < stats["imbalance_before"]
+        assert new.imbalance() < before
+        w = new.part_weights()
+        assert w.max() > 0 and (w > 0).sum() > 1, "load must spread"
+
+    @pytest.mark.parametrize("engine", ("streaming", "oracle"))
+    def test_rebalance_preserves_verdicts_and_ids(self, engine):
+        eng, sp, d, batch = self._skewed(engine)
+        want = eng.filter_batch_sharded(batch, sp)
+        new, stats = sp.rebalance()
+        assert np.array_equal(new.live_ids(), sp.live_ids()), \
+            "rebalance must not change the subscriber set"
+        _assert_same(eng.filter_batch_sharded(batch, new), want)
+        # the old plan stays usable — the swap is atomic, not in-place
+        _assert_same(eng.filter_batch_sharded(batch, sp), want)
+        # sparse delivery agrees across the move too
+        _assert_same(eng.filter_batch_sharded_sparse(batch, new).densify(),
+                     want)
+
+    def test_rebalance_splits_monolithic_groups(self):
+        """When one trie group outweighs the inter-part gap the balancer
+        must split it at query granularity — prefix co-location is a
+        heuristic, not a correctness invariant."""
+        dtd = DTD.generate(n_tags=24, seed=0)
+        d = TagDictionary()
+        dtd.register(d)
+        tag = dtd.tag_names[0]
+        qs = [parse(f"/{tag}/{dtd.tag_names[1 + i % 6]}"
+                    + ("//" + dtd.tag_names[2 + i % 5] if i % 2 else ""))
+              for i in range(16)]     # ONE shared first step → one group
+        nfa = compile_queries(qs, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d)
+        sp = eng.plan_sharded(4)
+        new, stats = sp.rebalance(tolerance=0.25)
+        if sp.imbalance() > 0.25:
+            assert new.imbalance() < sp.imbalance()
+            assert stats["moved_queries"] > 0
+
+    def test_balanced_plan_is_a_noop(self):
+        profiles, docs, d = _workload("streaming")
+        nfa = compile_queries(profiles, d, shared=True)
+        eng = engines.create("streaming", nfa, dictionary=d)
+        sp = eng.plan_sharded(3)
+        new, stats = sp.rebalance(tolerance=10.0)
+        assert stats["moves"] == 0 and new is sp
+
+
+# ----------------------------------------- churn + rebalance, stage-level
+class TestStageChurnRebalance:
+    @pytest.mark.parametrize("engine", ("streaming", "oracle"))
+    def test_fifty_op_churn_with_auto_rebalance(self, engine):
+        """50 random subscribe/unsubscribe ops with auto-rebalance every
+        10 and sparse delivery on: verdicts stay equal to a from-scratch
+        dense compile of the surviving query set."""
+        dtd = DTD.generate(n_tags=24, seed=7)
+        d = TagDictionary()
+        dtd.register(d)
+        base_qs = gen_profiles(dtd, n=20, length=3, seed=7)
+        pool = gen_profiles(dtd, n=40, length=3, seed=99)
+        docs = gen_corpus(dtd, n_docs=4, nodes_per_doc=50, seed=7)
+        stage = FilterStage(list(base_qs), d, n_shards=2, engine=engine,
+                            query_shards=3, sparse=True, rebalance_every=10,
+                            engine_options={"minimize": True})
+        rng = np.random.default_rng(11)
+        live = list(stage.sharded_.live_ids())
+        for k in range(50):
+            if live and rng.random() < 0.5:
+                stage.unsubscribe(int(live.pop(rng.integers(len(live)))))
+            else:
+                live.append(stage.subscribe(pool[k % len(pool)]))
+        assert stage.stats["rebalances"] > 0
+        res = stage._filter_batch(docs)
+        assert isinstance(res, SparseResult)
+        final_qs = stage.sharded_.live_queries()
+        batch = EventBatch.from_streams(docs, bucket=stage.bucket)
+        _assert_same(res.densify(), _oracle_dense(final_qs, d, batch))
+        assert stage.stats["verdict_bytes"] > 0
+
+    def test_sparse_routing_matches_dense_routing(self):
+        """The router's fan-out is identical with sparse delivery on and
+        off, events and bytes paths alike."""
+        dtd = DTD.generate(n_tags=24, seed=4)
+        d = TagDictionary()
+        dtd.register(d)
+        qs = gen_profiles(dtd, n=16, length=3, seed=4)
+        docs = gen_corpus(dtd, n_docs=6, nodes_per_doc=50, seed=4)
+        payloads = [encode_bytes(doc) for doc in docs]
+
+        def destinations(**kw):
+            stage = FilterStage(list(qs), d, n_shards=3, engine="streaming",
+                                batch_size=3, **kw)
+            ev = [sorted((r.shard, r.doc_index) for batch in
+                         stage.route(iter(docs)) for r in batch)]
+            by = [sorted((r.shard, r.doc_index) for batch in
+                         stage.route_bytes(iter(payloads)) for r in batch)]
+            return ev, by
+
+        dense = destinations(query_shards=2)
+        sparse = destinations(query_shards=2, sparse=True,
+                              engine_options={"minimize": True})
+        assert dense == sparse
