@@ -221,6 +221,13 @@ def run_kernel_vs_scan(query_counts=(64, 256, 1024), batch_sizes=(4,),
       through the kernel and the achieved stream bandwidth as % of the
       single-chip HBM roofline (:func:`benchmarks.roofline.achieved_pct`;
       only compiled-backend rows approach it, interpret rows sit at ~0).
+    * sparse columns — every row also drives the sparse-verdict twin of
+      its dense call: ``verdict_path`` (which route actually ran —
+      ``kernel-fused`` on pallas rows means the in-kernel epilogue, the
+      accept bitmap never left VMEM), ``sparse_docs_per_s``,
+      ``verdict_bytes`` (O(matches), vs ``dense_verdict_bytes`` at
+      O(B·Q)) and ``sparse_exact`` (densified bit-identical to the
+      dense verdict of the same call).
     """
     from repro.core.events import pack_segments
     from repro.kernels import interpret_default
@@ -262,11 +269,17 @@ def run_kernel_vs_scan(query_counts=(64, 256, 1024), batch_sizes=(4,),
                             packed = packing == "packed"
                             if variant == "events":
                                 fn = lambda: eng.filter_batch(batch)  # noqa: E731
+                                fn_sparse = (  # noqa: E731
+                                    lambda: eng.filter_batch_sparse(
+                                        batch))
                                 slots = int(np.asarray(batch.kind).size)
                                 stream_bytes = None
                             elif packed:
                                 fn = lambda: eng.filter_bytes(  # noqa: E731
                                     bb, pack=True)
+                                fn_sparse = (  # noqa: E731
+                                    lambda: eng.filter_bytes_sparse(
+                                        bb, pack=True))
                                 tgt = int(eng.plan_.meta.get(
                                     "segment_target", 4096))
                                 slots = int(pack_segments(
@@ -275,10 +288,14 @@ def run_kernel_vs_scan(query_counts=(64, 256, 1024), batch_sizes=(4,),
                                 stream_bytes = slots
                             else:
                                 fn = lambda: eng.filter_bytes(bb)  # noqa: E731
+                                fn_sparse = (  # noqa: E731
+                                    lambda: eng.filter_bytes_sparse(bb))
                                 slots = int(np.asarray(bb.data).size)
                                 stream_bytes = slots
-                            fn()  # compile warmup
+                            dense = fn()  # compile warmup
                             t = _time(fn, repeat=repeat)
+                            sparse = fn_sparse()  # warmup + path sample
+                            t_sparse = _time(fn_sparse, repeat=repeat)
                             row = {"bench": "kernel_vs_scan",
                                    "variant": variant, "path": path,
                                    "scenario": scenario,
@@ -291,7 +308,18 @@ def run_kernel_vs_scan(query_counts=(64, 256, 1024), batch_sizes=(4,),
                                    "events_per_slot": round(
                                        ev_total / slots, 5),
                                    "docs_per_s": round(b / t, 2),
-                                   "mb_s": round(mb / t, 3)}
+                                   "mb_s": round(mb / t, 3),
+                                   "verdict_path": sparse.meta.get(
+                                       "path"),
+                                   "sparse_docs_per_s": round(
+                                       b / t_sparse, 2),
+                                   "matches": sparse.n_matches,
+                                   "verdict_bytes":
+                                       sparse.verdict_bytes,
+                                   "dense_verdict_bytes":
+                                       sparse.dense_bytes,
+                                   "sparse_exact": bool(
+                                       sparse.densify() == dense)}
                             if stream_bytes is not None:
                                 row["stream_bytes"] = stream_bytes
                                 row["roofline_pct"] = round(
@@ -393,6 +421,7 @@ def run_query_scaling(query_counts=None, shard_counts=(1, 2, 4),
                  "docs_per_s": round(n_docs / t, 2),
                  "mb_s": round(mb / t, 3),
                  "sparse_docs_per_s": round(n_docs / t_sparse, 2),
+                 "verdict_path": sparse.meta.get("path"),
                  "matches": sparse.n_matches,
                  "verdict_bytes": sparse.verdict_bytes,
                  "dense_verdict_bytes": sparse.dense_bytes,

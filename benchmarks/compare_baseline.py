@@ -59,6 +59,10 @@ NON_IDENTITY = frozenset(METRICS) | frozenset(COMPILED_ONLY_METRICS) | {
     # state compression and sparse-delivery outputs, not configuration
     "verdict_bytes", "dense_verdict_bytes", "matches", "sparse_docs_per_s",
     "states_per_query", "state_compression", "sparse_exact", "n_states",
+    # fused-sparse-epilogue measurement column: which delivery route ran
+    # (kernel-fused / lane-compact / base-fallback / dense-overflow) is
+    # backend-dependent output, not row configuration
+    "verdict_path",
 }
 
 

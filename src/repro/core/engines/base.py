@@ -914,14 +914,20 @@ class FilterEngine(abc.ABC):
                   cap: int | None = None) -> int:
         """Resolve the bounded match-buffer size for one sparse call.
 
-        Explicit argument wins, then the ``match_cap=`` engine option;
-        the default budgets 32 matches per document (floor 4096) — far
-        above realistic selectivity at 10⁵ profiles, while the dense
+        Explicit argument wins, then the ``match_cap=`` engine option,
+        then ``match_cap`` from the compiled plan's metadata (set via
+        :meth:`kernel_config` so autotune/persisted configs can carry
+        it); the default budgets 32 matches per document (floor 4096) —
+        far above realistic selectivity at 10⁵ profiles, while the dense
         fallback keeps rare hot batches exact.  Clamped to the dense
         size, past which overflow is impossible anyway.
         """
         if cap is None:
             cap = self.options.get("match_cap")
+        if cap is None:
+            plan = getattr(self, "plan_", None)
+            if plan is not None:
+                cap = plan.meta.get("match_cap")
         if cap is None:
             cap = max(4096, 32 * batch_size)
         return int(max(1, min(int(cap), batch_size * max(1, n_cols))))
@@ -937,13 +943,17 @@ class FilterEngine(abc.ABC):
         :func:`_compact_matches`; only the first ``count`` rows are
         real.  ``count > cap`` means the buffer overflowed — the
         verdicts are recomputed via ``dense_fallback()`` (exact, just
-        without the bandwidth win) and flagged ``overflowed``.
+        without the bandwidth win), flagged ``overflowed`` and named
+        ``path="dense-overflow"`` (the route that WOULD have run stays
+        visible as ``attempted_path``).
         """
         meta = dict(meta or (), match_cap=cap)
         if count > cap:
             sp = dense_fallback().sparsify(live_ids)
             sp.overflowed = True
-            sp.meta.update(meta, matches=count)
+            sp.meta.update(meta, matches=count,
+                           attempted_path=meta.get("path"),
+                           path="dense-overflow")
             return sp
         docs, cols, first = (np.asarray(b)[:count] for b in bufs)
         if sort:  # part-interleaved producers: restore (doc, id) order

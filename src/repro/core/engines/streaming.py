@@ -62,9 +62,21 @@ KERNEL_MODES = ("auto", "pallas", "scan")
 DEFAULT_BYTE_CHUNK = 512
 DEFAULT_SEGMENT_TARGET = 4096
 
+#: sublane tile of the fused sparse epilogue's emission window
+#: (:func:`repro.kernels.stream_filter._epilogue_window`) — autotunable
+#: and overridable via the ``ep_tile=`` engine option
+DEFAULT_EP_TILE = 8
+
+#: VMEM budget for the fused-epilogue match buffer: a ``(cap + win, 3)``
+#: int32 block pads to one 128-lane tile per row (512 B).  Past this the
+#: bounded buffer would crowd the block tables out of VMEM, so
+#: ``sparse_epilogue="auto"`` falls back to the two-launch lane
+#: compaction for that cap
+DEFAULT_EPILOGUE_VMEM = 4 * 1024 * 1024
+
 #: launch-shape knobs a measured-autotune cache entry may override
 TUNABLE_KEYS = ("blk", "chunk", "byte_chunk", "grid_order",
-                "segment_target")
+                "segment_target", "ep_tile")
 
 
 def _pack_words(bits: jax.Array) -> jax.Array:
@@ -236,6 +248,119 @@ def _run_parts_kernel_sparse(plan: base.FilterPlan, kind: jax.Array,
         mb.reshape(b, -1) != 0, fb.reshape(b, -1), lane_cls, cap)
 
 
+@functools.partial(jax.jit, static_argnames=("cap", "ep_tile", "interpret"))
+def _run_batch_kernel_fused(plan: base.FilterPlan, kind: jax.Array,
+                            tag: jax.Array, doc_ids: jax.Array,
+                            lane_cls: jax.Array, cap: int,
+                            ep_tile: int = DEFAULT_EP_TILE,
+                            interpret: bool | None = None):
+    """In-kernel sparse epilogue: the megakernel emits the bounded
+    ``(doc, class, first)`` match buffer itself — the ``(B, G, QB)``
+    accept bitmap never exists outside VMEM (the program's only outputs
+    are the buffer and the running counter)."""
+    meta = plan.meta
+    buf, cnt = sf.stream_filter_pallas_sparse(
+        sf.fuse_events(kind, tag), doc_ids,
+        plan["kb_tagmask"], plan["kb_pw"], plan["kb_pb"],
+        plan["kb_selfloop"], plan["kb_init"],
+        plan["kb_acc_word"], plan["kb_acc_bit"], lane_cls,
+        cap=cap, max_depth=meta["max_depth"], chunk=meta["chunk"],
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"),
+        ep_tile=ep_tile)
+    return buf[:cap], cnt
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "ep_tile", "interpret"))
+def _run_parts_kernel_fused(plan: base.FilterPlan, kind: jax.Array,
+                            tag: jax.Array, doc_ids: jax.Array,
+                            lane_cls: jax.Array, cap: int,
+                            ep_tile: int = DEFAULT_EP_TILE,
+                            interpret: bool | None = None):
+    """Sharded twin of :func:`_run_batch_kernel_fused`: parts fold into
+    the block grid (ONE launch) and ``lane_cls`` (P, G, QB) carries
+    globally-offset class ids, so the kernel's running counter compacts
+    every part's accept lanes into one buffer."""
+    meta = plan.meta
+
+    def fold(x):
+        return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+    buf, cnt = sf.stream_filter_pallas_sparse(
+        sf.fuse_events(kind, tag), doc_ids,
+        fold(plan["kb_tagmask"]), fold(plan["kb_pw"]), fold(plan["kb_pb"]),
+        fold(plan["kb_selfloop"]), fold(plan["kb_init"]),
+        fold(plan["kb_acc_word"]), fold(plan["kb_acc_bit"]),
+        lane_cls.reshape(-1, lane_cls.shape[-1]),
+        cap=cap, max_depth=meta["max_depth"], chunk=meta["chunk"],
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"),
+        ep_tile=ep_tile)
+    return buf[:cap], cnt
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "ep_tile", "interpret"))
+def _run_bytes_fused_sparse(plan: base.FilterPlan, data: jax.Array,
+                            starts: jax.Array, doc_map: jax.Array,
+                            lane_cls: jax.Array, cap: int,
+                            ep_tile: int = DEFAULT_EP_TILE,
+                            interpret: bool | None = None):
+    """ONE launch raw bytes → bounded match list: the fused bytes
+    datapath ending in the in-kernel sparse epilogue (no event tensor,
+    no accept bitmap, anywhere in the program)."""
+    meta = plan.meta
+    buf, cnt = sf.stream_filter_bytes_pallas_sparse(
+        data, starts, doc_map,
+        plan["kb_tagmask"], plan["kb_pw"], plan["kb_pb"],
+        plan["kb_selfloop"], plan["kb_init"],
+        plan["kb_acc_word"], plan["kb_acc_bit"], lane_cls,
+        cap=cap, max_depth=meta["max_depth"],
+        chunk=meta.get("byte_chunk", DEFAULT_BYTE_CHUNK),
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"),
+        ep_tile=ep_tile)
+    return buf[:cap], cnt
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "ep_tile", "interpret"))
+def _run_parts_bytes_fused_sparse(plan: base.FilterPlan, data: jax.Array,
+                                  starts: jax.Array, doc_map: jax.Array,
+                                  lane_cls: jax.Array, cap: int,
+                                  ep_tile: int = DEFAULT_EP_TILE,
+                                  interpret: bool | None = None):
+    """Stacked sharded plan through ONE bytes→match-list launch."""
+    meta = plan.meta
+
+    def fold(x):
+        return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+    buf, cnt = sf.stream_filter_bytes_pallas_sparse(
+        data, starts, doc_map,
+        fold(plan["kb_tagmask"]), fold(plan["kb_pw"]), fold(plan["kb_pb"]),
+        fold(plan["kb_selfloop"]), fold(plan["kb_init"]),
+        fold(plan["kb_acc_word"]), fold(plan["kb_acc_bit"]),
+        lane_cls.reshape(-1, lane_cls.shape[-1]),
+        cap=cap, max_depth=meta["max_depth"],
+        chunk=meta.get("byte_chunk", DEFAULT_BYTE_CHUNK),
+        interpret=interpret, grid_order=meta.get("grid_order", "bg"),
+        ep_tile=ep_tile)
+    return buf[:cap], cnt
+
+
+def _device_rows(buf, cnt, cap: int, ndev: int = 1
+                 ) -> tuple[tuple, int, bool]:
+    """Stacked per-device ``(cap, 3)`` match buffers + counts → host rows.
+
+    ``shard_map`` concatenates each device's bounded buffer along the
+    leading axis; only the first ``min(count_d, cap)`` rows of each are
+    real.  Returns ``((docs, cls, first), total_count, overflowed)``
+    where overflow means ANY device saturated its buffer.
+    """
+    buf = np.asarray(buf).reshape(ndev, -1, 3)
+    cnt = np.asarray(cnt).reshape(ndev)
+    rows = np.concatenate(
+        [buf[dv, :min(int(c), cap)] for dv, c in enumerate(cnt)])
+    return ((rows[:, 0], rows[:, 1], rows[:, 2]),
+            int(cnt.sum()), bool((cnt > int(cap)).any()))
+
+
 def _lane_classes(plan: base.FilterPlan) -> tuple[np.ndarray, np.ndarray]:
     """Accept-class tables of one kernel plan (host-side, on demand).
 
@@ -378,6 +503,12 @@ class StreamingEngine(base.FilterEngine):
       :func:`repro.core.events.pack_segments`) before the fused kernel.
     * ``byte_chunk=`` / ``grid_order=`` — bytes-per-DMA-chunk and grid
       iteration order of the fused kernel.
+    * ``sparse_epilogue=`` — ``"auto"`` (default: in-kernel bounded
+      match-list emission whenever the ``(match_cap, 3)`` buffer fits
+      the epilogue VMEM budget), ``"on"`` / ``"off"`` to force it.
+    * ``ep_tile=`` — sublane tile of the fused epilogue's emission
+      window (autotunable); ``match_cap=`` — bounded match-buffer size
+      for sparse calls (also threaded via plan meta).
     * ``vmem_budget=`` / ``smem_budget=`` — static autotune budgets
       (else the ``REPRO_PALLAS_*_BUDGET`` env vars, else defaults).
     * ``autotune="measured"`` — overlay the persisted measured-search
@@ -441,6 +572,7 @@ class StreamingEngine(base.FilterEngine):
         cfg.setdefault("byte_chunk", DEFAULT_BYTE_CHUNK)
         cfg.setdefault("grid_order", "bg")
         cfg.setdefault("segment_target", DEFAULT_SEGMENT_TARGET)
+        cfg.setdefault("ep_tile", DEFAULT_EP_TILE)
         if self.options.get("autotune") == "measured":
             from ...kernels import autotune as autotune_mod
 
@@ -460,6 +592,7 @@ class StreamingEngine(base.FilterEngine):
         cfg["chunk"] = max(32, int(cfg["chunk"]))
         cfg["byte_chunk"] = max(32, int(cfg["byte_chunk"]))
         cfg["segment_target"] = max(1, int(cfg["segment_target"]))
+        cfg["ep_tile"] = max(1, int(cfg["ep_tile"]))
         if cfg["grid_order"] not in sf.GRID_ORDERS:
             raise ValueError(
                 f"grid_order={cfg['grid_order']!r} is not one of "
@@ -512,7 +645,10 @@ class StreamingEngine(base.FilterEngine):
                         block_queries=mk.block_queries,
                         byte_chunk=cfg["byte_chunk"],
                         grid_order=cfg["grid_order"],
-                        segment_target=cfg["segment_target"])
+                        segment_target=cfg["segment_target"],
+                        ep_tile=cfg["ep_tile"])
+            if "match_cap" in self.options:
+                meta["match_cap"] = int(self.options["match_cap"])
         return base.FilterPlan("streaming", tables, meta)
 
     # ------------------------------------------------------- sharded hooks
@@ -659,7 +795,7 @@ class StreamingEngine(base.FilterEngine):
         return val
 
     def _plain_lane_tables(self, plan: base.FilterPlan):
-        """(flat lane→class names, class-member CSR) for one plan."""
+        """((G, QB) lane→class names, class-member CSR) for one plan."""
 
         def build():
             class_of, lane_cls = _lane_classes(plan)
@@ -669,7 +805,7 @@ class StreamingEngine(base.FilterEngine):
             n_cls = int(lane_cls.max(initial=-1)) + 1
             counts = np.bincount(class_of[valid], minlength=n_cls)
             offsets = np.concatenate(([0], np.cumsum(counts)))
-            return lane_cls.reshape(-1), offsets, members
+            return lane_cls, offsets, members
 
         return self._lane_memo(plan, build)
 
@@ -680,7 +816,8 @@ class StreamingEngine(base.FilterEngine):
         running offset) and the member CSR stores **global subscriber
         ids** directly (tombstoned columns dropped at build time), so
         one device compaction over the folded ``(P·G·QB,)`` lane axis
-        expands straight to (doc, gid) rows.
+        expands straight to (doc, gid) rows.  The lane table comes back
+        ``(P, G, QB)`` so mesh paths can shard it over the part axis.
         """
 
         def build():
@@ -706,28 +843,66 @@ class StreamingEngine(base.FilterEngine):
             offsets = np.concatenate(([0], np.cumsum(counts)))
             members = (np.concatenate(member_parts)
                        if member_parts else np.zeros(0, np.int32))
-            return np.stack(lanes).reshape(-1), offsets, members
+            return np.stack(lanes), offsets, members
 
         return self._lane_memo(sharded, build)
 
+    def _ep_tile(self, plan: base.FilterPlan) -> int:
+        return int(plan.meta.get("ep_tile", DEFAULT_EP_TILE))
+
+    def _fused_sparse_ok(self, cap: int,
+                         plan: base.FilterPlan | None = None) -> bool:
+        """Run the in-kernel sparse epilogue for this cap?
+
+        The ``sparse_epilogue=`` engine option forces it (``"on"`` /
+        ``"off"``); ``"auto"`` (default) accepts whenever the bounded
+        match buffer fits the epilogue VMEM budget — past that the
+        two-launch lane compaction is the better trade.
+        """
+        mode = self.options.get("sparse_epilogue", "auto")
+        if mode not in ("auto", "on", "off"):
+            raise ValueError(
+                f"sparse_epilogue={mode!r} is not one of "
+                f"('auto', 'on', 'off')")
+        if mode != "auto":
+            return mode == "on"
+        plan = self.plan_ if plan is None else plan
+        win = sf._epilogue_window(int(plan.meta["block_queries"]),
+                                  self._ep_tile(plan))
+        return (int(cap) + win) * 512 <= DEFAULT_EPILOGUE_VMEM
+
+    @staticmethod
+    def _mark_base_path(sp: SparseResult) -> SparseResult:
+        """Record that a sparse call left the kernel engine: the base
+        class compacted (or densified) instead of the megakernel."""
+        sp.meta["base_path"] = sp.meta.get("path")
+        sp.meta["path"] = ("dense-overflow" if sp.overflowed
+                           else "base-fallback")
+        return sp
+
     def _expand_class_hits(self, bufs, count: int, cap: int, offsets,
                            members, *, batch_size: int, n_queries: int,
-                           live_ids, meta: dict,
-                           dense_fallback) -> SparseResult:
+                           live_ids, meta: dict, dense_fallback,
+                           overflowed: bool | None = None) -> SparseResult:
         """Device class-hit buffer → per-subscriber :class:`SparseResult`.
 
         Each compacted row names an accept class; ``offsets``/``members``
         is the class→subscriber CSR, expanded with one ``np.repeat`` —
         a row with k subscribers becomes k (doc, id) rows.  Overflow
-        (``count > cap``) recomputes densely, exact but unbounded.
+        (``count > cap``, or the explicit flag from mesh paths whose
+        per-device buffers each bound ``cap``) recomputes densely,
+        exact but unbounded, and records ``path="dense-overflow"``.
         """
-        meta = dict(meta, match_cap=cap, device_rows=min(count, cap))
-        if count > cap:
+        over = (count > cap) if overflowed is None else bool(overflowed)
+        if over:
             sp = dense_fallback().sparsify(live_ids)
             sp.overflowed = True
-            sp.meta.update(meta, device_rows=count)
+            sp.meta.update(meta, match_cap=cap, device_rows=int(count),
+                           attempted_path=meta.get("path"),
+                           path="dense-overflow")
             return sp
         docs, cls, first = (np.asarray(b)[:count] for b in bufs)
+        meta = dict(meta, match_cap=cap, device_rows=int(docs.shape[0]))
         reps = (offsets[1:] - offsets[:-1])[cls]
         total = int(reps.sum())
         hit = np.repeat(np.arange(cls.shape[0]), reps)
@@ -744,23 +919,38 @@ class StreamingEngine(base.FilterEngine):
 
     def filter_batch_sparse(self, batch: EventBatch, *,
                             match_cap: int | None = None) -> SparseResult:
-        """Kernel engines compact the raw accept-lane bitmap (one device
-        row per document × accept class — the many-to-one minimized
-        form); scan engines fall back to the base dense-verdict
-        compaction.  Both transfer O(cap), not O(B·Q)."""
+        """Kernel engines emit the bounded match list straight from the
+        megakernel (``path="kernel-fused"``: the accept bitmap never
+        reaches HBM); caps past the epilogue VMEM budget keep the
+        two-launch lane compaction (``"lane-compact"``); scan engines
+        fall back to the base dense-verdict compaction
+        (``"base-fallback"``).  All transfer O(cap), not O(B·Q)."""
         if not self._kernel_on():
-            return super().filter_batch_sparse(batch, match_cap=match_cap)
+            return self._mark_base_path(super().filter_batch_sparse(
+                batch, match_cap=match_cap))
         kind, tag = self._prep(batch)
-        lane_flat, offsets, members = self._plain_lane_tables(self.plan_)
+        lane_cls, offsets, members = self._plain_lane_tables(self.plan_)
         b = batch.batch_size
         cap = self.match_cap(b, self.n_queries, match_cap)
-        *bufs, n = _run_batch_kernel_sparse(
-            self.plan_, kind, tag, jnp.asarray(lane_flat), cap,
-            interpret=self._kernel_interpret())
+        if self._fused_sparse_ok(cap):
+            doc_ids = jnp.arange(b, dtype=jnp.int32)[:, None]
+            buf, cnt = _run_batch_kernel_fused(
+                self.plan_, kind, tag, doc_ids, jnp.asarray(lane_cls),
+                cap, ep_tile=self._ep_tile(self.plan_),
+                interpret=self._kernel_interpret())
+            bufs, n, over = _device_rows(buf, cnt, cap)
+            path = "kernel-fused"
+        else:
+            *bufs, n = _run_batch_kernel_sparse(
+                self.plan_, kind, tag,
+                jnp.asarray(lane_cls.reshape(-1)), cap,
+                interpret=self._kernel_interpret())
+            n, over = int(n), None
+            path = "lane-compact"
         return self._expand_class_hits(
-            bufs, int(n), cap, offsets, members, batch_size=b,
+            bufs, n, cap, offsets, members, batch_size=b,
             n_queries=self.n_queries, live_ids=None,
-            meta={"path": "kernel-lane-compact"},
+            meta={"path": path}, overflowed=over,
             dense_fallback=lambda: self.filter_batch(batch))
 
     def filter_batch_sharded_sparse(self, batch: EventBatch, sharded, *,
@@ -769,25 +959,125 @@ class StreamingEngine(base.FilterEngine):
                                     ) -> SparseResult:
         """One megakernel launch (parts folded into the grid) straight
         into the bounded match buffer; classes expand to global
-        subscriber ids on the host.  The mesh path keeps the base
-        compaction over the stacked shard_map output."""
-        if not self._kernel_on() or mesh is not None:
-            return super().filter_batch_sharded_sparse(
-                batch, sharded, mesh=mesh, match_cap=match_cap)
+        subscriber ids on the host.  With a mesh the SAME fused program
+        runs under ``shard_map`` over ``"model"`` — each device compacts
+        its parts into its own bounded buffer (per-device cap), assembled
+        on the host — instead of silently dropping to the base
+        compaction; every route records ``meta["path"]``."""
+        if not self._kernel_on():
+            return self._mark_base_path(super().filter_batch_sharded_sparse(
+                batch, sharded, mesh=mesh, match_cap=match_cap))
         kind, tag = self._prep(batch)
-        lane_flat, offsets, members = self._sharded_lane_tables(sharded)
+        lane_cls, offsets, members = self._sharded_lane_tables(sharded)
         live_ids = sharded.live_ids()
         b = batch.batch_size
         cap = self.match_cap(b, len(live_ids), match_cap)
-        *bufs, n = _run_parts_kernel_sparse(
-            sharded.stacked(), kind, tag, jnp.asarray(lane_flat), cap,
-            interpret=self._kernel_interpret())
+        stacked = sharded.stacked()
+        interpret = self._kernel_interpret()
+
+        def dense_fallback():
+            return self.filter_batch_sharded(batch, sharded, mesh=mesh)
+
+        if not self._fused_sparse_ok(cap, stacked):
+            *bufs, n = _run_parts_kernel_sparse(
+                stacked, kind, tag, jnp.asarray(lane_cls.reshape(-1)),
+                cap, interpret=interpret)
+            return self._expand_class_hits(
+                bufs, int(n), cap, offsets, members, batch_size=b,
+                n_queries=len(live_ids), live_ids=live_ids,
+                meta={"path": "lane-compact"},
+                dense_fallback=dense_fallback)
+        ep = self._ep_tile(stacked)
+        doc_ids = jnp.arange(b, dtype=jnp.int32)[:, None]
+        if mesh is None:
+            buf, cnt = _run_parts_kernel_fused(
+                stacked, kind, tag, doc_ids, jnp.asarray(lane_cls), cap,
+                ep_tile=ep, interpret=interpret)
+            bufs, n, over = _device_rows(buf, cnt, cap)
+        else:
+            self._check_model_axis(sharded, mesh)
+
+            def build():
+                def body(plan, kind, tag, doc_ids, lane):
+                    return _run_parts_kernel_fused(
+                        plan, kind, tag, doc_ids, lane, cap,
+                        ep_tile=ep, interpret=interpret)
+
+                ps = jax.sharding.PartitionSpec
+                return jax.jit(_shard_map(
+                    body, mesh,
+                    in_specs=(ps("model"), ps(), ps(), ps(), ps("model")),
+                    out_specs=(ps("model"), ps("model"))))
+
+            buf, cnt = self._cached_exec(
+                ("1d-fused-sparse", mesh, cap, ep), build)(
+                stacked, kind, tag, doc_ids, jnp.asarray(lane_cls))
+            bufs, n, over = _device_rows(buf, cnt, cap,
+                                         mesh.shape["model"])
         return self._expand_class_hits(
-            bufs, int(n), cap, offsets, members, batch_size=b,
+            bufs, n, cap, offsets, members, batch_size=b,
             n_queries=len(live_ids), live_ids=live_ids,
-            meta={"path": "kernel-lane-compact"},
-            dense_fallback=lambda: self.filter_batch_sharded(
-                batch, sharded))
+            meta={"path": "kernel-fused"}, overflowed=over,
+            dense_fallback=dense_fallback)
+
+    def filter_batch_sharded2d_sparse(self, batch: EventBatch, sharded, *,
+                                      mesh,
+                                      match_cap: int | None = None
+                                      ) -> SparseResult:
+        """Sparse twin of the 2-D (data × model) dispatch: the fused
+        epilogue runs INSIDE the shard_map body, so each device turns
+        its "data" slice of documents × "model" slice of parts directly
+        into a bounded match buffer — the previous host-side sparsify of
+        the gathered dense result becomes the fallback route."""
+        live_ids = sharded.live_ids()
+        b0 = batch.batch_size
+        cap = self.match_cap(b0, len(live_ids), match_cap)
+        if not (self._kernel_on() and self._fused_sparse_ok(
+                cap, sharded.stacked())):
+            return self._mark_base_path(
+                super().filter_batch_sharded2d_sparse(
+                    batch, sharded, mesh=mesh, match_cap=match_cap))
+        data_ax, _ = self._mesh_axes2d(mesh)
+        self._check_model_axis(sharded, mesh)
+        padded = batch.pad_batch_to(base._round_up(b0, data_ax))
+        kind, tag = self._prep(padded)
+        # pad documents carry no events — name them -1 so the kernel
+        # drops them by construction rather than by accident
+        ids = np.arange(padded.batch_size, dtype=np.int32)
+        ids[b0:] = -1
+        lane_cls, offsets, members = self._sharded_lane_tables(sharded)
+        stacked = sharded.stacked()
+        ep = self._ep_tile(stacked)
+        interpret = self._kernel_interpret()
+
+        def build():
+            def body(plan, kind, tag, doc_ids, lane):
+                return _run_parts_kernel_fused(
+                    plan, kind, tag, doc_ids, lane, cap,
+                    ep_tile=ep, interpret=interpret)
+
+            ps = jax.sharding.PartitionSpec
+            # bounded buffers stack device-major on axis 0 (one (cap, 3)
+            # block per device of BOTH axes), unlike the dense 2-D path
+            # whose (parts, docs) axes shard independently
+            return jax.jit(_shard_map(
+                body, mesh,
+                in_specs=(ps("model"), ps("data"), ps("data"),
+                          ps("data"), ps("model")),
+                out_specs=(ps(("model", "data")), ps(("model", "data")))))
+
+        buf, cnt = self._cached_exec(
+            ("2d-fused-sparse", mesh, cap, ep), build)(
+            stacked, kind, tag, jnp.asarray(ids[:, None]),
+            jnp.asarray(lane_cls))
+        ndev = int(np.prod(list(mesh.shape.values())))
+        bufs, n, over = _device_rows(buf, cnt, cap, ndev)
+        return self._expand_class_hits(
+            bufs, n, cap, offsets, members, batch_size=b0,
+            n_queries=len(live_ids), live_ids=live_ids,
+            meta={"path": "kernel-fused"}, overflowed=over,
+            dense_fallback=lambda: self.filter_batch_sharded2d(
+                batch, sharded, mesh=mesh))
 
     # ---------------------------------------------------------- byte paths
     def _fused_bytes_on(self) -> bool:
@@ -949,6 +1239,100 @@ class StreamingEngine(base.FilterEngine):
                                 f[part_of, :, local_of].T[:b0])
 
         return materialize
+
+    def filter_bytes_sparse(self, bb: ByteBatch, *,
+                            bucket: int | None = None,
+                            match_cap: int | None = None,
+                            pack: bool | None = None) -> SparseResult:
+        """ONE launch raw bytes → bounded match list.
+
+        The fused bytes megakernel ends in the in-kernel sparse
+        epilogue: no event tensor AND no accept bitmap ever exist in
+        HBM — the program's outputs are the ``(match_cap, 3)`` buffer
+        and its counter (``path="kernel-fused"``, ``launch="bytes"``).
+        Segment-packed batches ride along: ``doc_ids`` name each packed
+        slot's original batch row (pads are ``-1``, dropped in-kernel).
+        Non-kernel engines and oversized caps parse then route through
+        :meth:`filter_batch_sparse`, which records its own path.
+        """
+        b = bb.batch_size
+        cap = self.match_cap(b, self.n_queries, match_cap)
+        if not (self._fused_bytes_on() and self._fused_sparse_ok(cap)):
+            return super().filter_bytes_sparse(bb, bucket=bucket,
+                                               match_cap=match_cap)
+        data, starts, spk = self._bytes_prep(bb, pack)
+        doc_map = (spk.doc_ids if spk is not None
+                   else np.arange(b, dtype=np.int32)[:, None])
+        lane_cls, offsets, members = self._plain_lane_tables(self.plan_)
+        buf, cnt = _run_bytes_fused_sparse(
+            self.plan_, data, starts, jnp.asarray(doc_map),
+            jnp.asarray(lane_cls), cap,
+            ep_tile=self._ep_tile(self.plan_),
+            interpret=self._kernel_interpret())
+        bufs, n, over = _device_rows(buf, cnt, cap)
+        return self._expand_class_hits(
+            bufs, n, cap, offsets, members, batch_size=b,
+            n_queries=self.n_queries, live_ids=None,
+            meta={"path": "kernel-fused", "launch": "bytes"},
+            overflowed=over,
+            dense_fallback=lambda: self.filter_bytes(bb, pack=pack))
+
+    def filter_bytes_sharded_sparse(self, bb: ByteBatch, sharded, *,
+                                    bucket: int | None = None, mesh=None,
+                                    match_cap: int | None = None
+                                    ) -> SparseResult:
+        """Sharded bytes → bounded match list, still ONE launch: parts
+        fold into the block grid (or shard over the mesh ``"model"``
+        axis, each device filling its own bounded buffer)."""
+        live_ids = sharded.live_ids()
+        b = bb.batch_size
+        cap = self.match_cap(b, len(live_ids), match_cap)
+        stacked = sharded.stacked()
+        if not (self._fused_bytes_on()
+                and self._fused_sparse_ok(cap, stacked)):
+            return super().filter_bytes_sharded_sparse(
+                bb, sharded, bucket=bucket, mesh=mesh,
+                match_cap=match_cap)
+        self._check_model_axis(sharded, mesh)
+        data, starts, spk = self._bytes_prep(bb)
+        doc_map = (spk.doc_ids if spk is not None
+                   else np.arange(b, dtype=np.int32)[:, None])
+        lane_cls, offsets, members = self._sharded_lane_tables(sharded)
+        ep = self._ep_tile(stacked)
+        interpret = self._kernel_interpret()
+        if mesh is None:
+            buf, cnt = _run_parts_bytes_fused_sparse(
+                stacked, data, starts, jnp.asarray(doc_map),
+                jnp.asarray(lane_cls), cap, ep_tile=ep,
+                interpret=interpret)
+            bufs, n, over = _device_rows(buf, cnt, cap)
+        else:
+            def build():
+                def body(plan, data, starts, doc_map, lane):
+                    return _run_parts_bytes_fused_sparse(
+                        plan, data, starts, doc_map, lane, cap,
+                        ep_tile=ep, interpret=interpret)
+
+                ps = jax.sharding.PartitionSpec
+                return jax.jit(_shard_map(
+                    body, mesh,
+                    in_specs=(ps("model"), ps(), ps(), ps(),
+                              ps("model")),
+                    out_specs=(ps("model"), ps("model"))))
+
+            buf, cnt = self._cached_exec(
+                ("bytes1d-fused-sparse", mesh, cap, ep), build)(
+                stacked, data, starts, jnp.asarray(doc_map),
+                jnp.asarray(lane_cls))
+            bufs, n, over = _device_rows(buf, cnt, cap,
+                                         mesh.shape["model"])
+        return self._expand_class_hits(
+            bufs, n, cap, offsets, members, batch_size=b,
+            n_queries=len(live_ids), live_ids=live_ids,
+            meta={"path": "kernel-fused", "launch": "bytes"},
+            overflowed=over,
+            dense_fallback=lambda: self.filter_bytes_sharded(
+                bb, sharded, mesh=mesh))
 
     def filter_documents_batched(self, kind: np.ndarray,
                                  tag: np.ndarray) -> FilterResult:

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # event kinds (match repro.core.events)
 OPEN, CLOSE, PAD = 0, 1, 2
@@ -143,3 +144,53 @@ def stream_filter_words(events: jax.Array, tagmask: jax.Array,
     (stack, depth, matched, first), _ = jax.lax.scan(
         step, carry0, (events, jnp.arange(n, dtype=jnp.int32)))
     return matched, first
+
+
+def sparse_epilogue(matched, first, lane_cls, doc_ids, cap: int, *,
+                    grid_order: str = "bg"
+                    ) -> tuple[np.ndarray, int]:
+    """Block-level oracle for the fused in-kernel sparse epilogue.
+
+    Ground truth for
+    :func:`repro.kernels.stream_filter.stream_filter_pallas_sparse` /
+    ``stream_filter_bytes_pallas_sparse``: walk the (document-slot ×
+    block) grid in the kernel's sequential emission order (doc-major for
+    ``"bg"``, block-major for ``"gb"``; within a bytes-kernel cell,
+    segment slots in order), compact each cell's accept lanes to
+    ``(doc_id, accept_class, first_event)`` rows, and append while the
+    running count is below ``cap`` — exactly the kernel's saturating
+    write discipline, so ``buf[:min(count, cap)]`` must equal the
+    returned rows bit-for-bit even mid-overflow.
+
+    ``matched``/``first`` are the dense kernel outputs — ``(B, G, QB)``
+    (event launch, ``doc_ids`` ``(B,)``) or ``(S, G, D, QB)`` (bytes
+    launch, ``doc_ids`` ``(S, D)``); ``lane_cls`` ``(G, QB)`` int32
+    accept-class names (``-1`` = inert).  Rows with ``doc_id < 0``
+    (segment pads) are dropped.  Returns ``(rows, count)`` where
+    ``count`` is the TRUE hit total (``count > cap`` ⇒ the device
+    buffer overflowed).
+    """
+    m = np.asarray(matched)
+    f = np.asarray(first)
+    lc = np.asarray(lane_cls)
+    di = np.asarray(doc_ids)
+    if m.ndim == 3:                       # event launch: one doc per slot
+        m, f, di = m[:, :, None, :], f[:, :, None, :], di[:, None]
+    s, g, _, _ = m.shape
+    cells = ([(ss, gg) for ss in range(s) for gg in range(g)]
+             if grid_order == "bg" else
+             [(ss, gg) for gg in range(g) for ss in range(s)])
+    rows: list[tuple[int, int, int]] = []
+    count = 0
+    for ss, gg in cells:
+        for dd in range(di.shape[1]):
+            doc = int(di[ss, dd])
+            hits = (m[ss, gg, dd] != 0) & (lc[gg] >= 0)
+            if doc < 0 or not hits.any():
+                continue
+            for q in np.flatnonzero(hits):
+                if count < cap:
+                    rows.append((doc, int(lc[gg, q]),
+                                 int(f[ss, gg, dd, q])))
+                count += 1
+    return np.asarray(rows, np.int32).reshape(-1, 3), count

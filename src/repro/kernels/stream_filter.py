@@ -32,6 +32,18 @@ Outputs per (document, block): the block's accept-lane verdict bits and
 first-match event indices; the caller maps lanes back to queries (the
 paper's priority encoder).
 
+* **fused sparse epilogue** (``stream_filter_pallas_sparse`` /
+  ``stream_filter_bytes_pallas_sparse``) — the sparse-delivery launch
+  shape: instead of the dense ``(B, G, QB)`` accept bitmap, each program
+  compacts its own accept lanes in VMEM at end-of-document and appends
+  ``(doc_id, accept_class, first_event)`` rows to ONE bounded
+  ``(match_cap + win, 3)`` output buffer.  Cross-program coordination is
+  a running SMEM counter in a constant-index-map output block: TPU grids
+  execute *sequentially*, so reading the counter is a race-free
+  exclusive scan over the grid — no atomics, and the only HBM traffic on
+  the verdict side is O(match_cap), the paper's match-tuples-not-bitmaps
+  delivery argument pushed all the way into the kernel.
+
 Host oracles: :func:`repro.kernels.ref.stream_filter_words` (pure-jnp
 scan of one word-block over the same packed tables — the unit-level
 ground truth, tests/test_kernels.py asserts exact agreement) and the
@@ -124,23 +136,24 @@ def _advance(ev, i, depth, matched, first, stack_ref, tb, *,
     return depth, matched, first
 
 
-def _kernel(ev_ref, tagmask_ref, pw_ref, pb_ref, self_ref, init_ref,
-            accw_ref, accb_ref, matched_ref, first_ref,
-            stack_ref, evbuf_ref, sem_ref, *, n_events: int,
-            max_depth: int, chunk: int, n_tags: int, doc_axis: int):
-    b = pl.program_id(doc_axis)
-    qb = accw_ref.shape[1]
+def _stream_events(ev_ref, evbuf_ref, sem_ref, stack_ref, tb, doc, *,
+                   n_events: int, max_depth: int, chunk: int, n_tags: int,
+                   qb: int):
+    """Double-buffered event loop of ONE (document, block) program.
+
+    Shared by the dense kernel (:func:`_kernel`) and the fused-sparse
+    kernel (:func:`_kernel_sparse`) so the two launch shapes can never
+    drift: DMA this document's fused event words HBM→SMEM chunk by
+    chunk (prefetching chunk *k+1* under chunk *k*'s event loop) and run
+    :func:`_advance` per event.  Returns (matched, first) for the
+    block's ``qb`` accept lanes.
+    """
     n_chunks = n_events // chunk
-    # fresh document: zero the VMEM stack, root context at depth 0
-    stack_ref[...] = jnp.zeros_like(stack_ref)
-    stack_ref[0, :] = init_ref[0, :]
-    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
-                       accb_ref)
 
     def event_dma(slot, ci):
         # one chunk of this document's fused event words: HBM → SMEM
         return pltpu.make_async_copy(
-            ev_ref.at[b, pl.ds(ci * chunk, chunk)],
+            ev_ref.at[doc, pl.ds(ci * chunk, chunk)],
             evbuf_ref.at[slot], sem_ref.at[slot])
 
     event_dma(0, 0).start()
@@ -167,8 +180,107 @@ def _kernel(ev_ref, tagmask_ref, pw_ref, pb_ref, self_ref, init_ref,
         0, n_chunks, chunk_body,
         (jnp.int32(0), jnp.zeros((qb,), bool),
          jnp.full((qb,), NO_MATCH, jnp.int32)))
+    return matched, first
+
+
+def _kernel(ev_ref, tagmask_ref, pw_ref, pb_ref, self_ref, init_ref,
+            accw_ref, accb_ref, matched_ref, first_ref,
+            stack_ref, evbuf_ref, sem_ref, *, n_events: int,
+            max_depth: int, chunk: int, n_tags: int, doc_axis: int):
+    b = pl.program_id(doc_axis)
+    qb = accw_ref.shape[1]
+    # fresh document: zero the VMEM stack, root context at depth 0
+    stack_ref[...] = jnp.zeros_like(stack_ref)
+    stack_ref[0, :] = init_ref[0, :]
+    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
+                       accb_ref)
+    matched, first = _stream_events(
+        ev_ref, evbuf_ref, sem_ref, stack_ref, tb, b, n_events=n_events,
+        max_depth=max_depth, chunk=chunk, n_tags=n_tags, qb=qb)
     matched_ref[0, 0, :] = matched.astype(jnp.int32)
     first_ref[0, 0, :] = first
+
+
+# ------------------------------------------------- fused sparse epilogue
+def _sparse_init(buf_ref, cnt_ref):
+    """First grid step: empty the shared match buffer and the counter.
+
+    Both live in constant-index-map output blocks, so they stay resident
+    on core across every grid step (TPU grids run *sequentially*) and
+    flush to HBM exactly once, after the last step — the property that
+    makes a running SMEM counter a race-free exclusive scan over the
+    whole grid, with no atomics.
+    """
+
+    @pl.when((pl.program_id(0) == 0) & (pl.program_id(1) == 0))
+    def _():
+        col = jax.lax.broadcasted_iota(jnp.int32, buf_ref.shape, 1)
+        buf_ref[...] = jnp.where(col == 2, NO_MATCH, -1)
+        cnt_ref[0, 0] = 0
+
+
+def _emit_rows(matched, first, cls_row, doc, buf_ref, cnt_ref, *,
+               cap: int, win: int):
+    """End-of-document epilogue of ONE program: compact this block's
+    accept lanes straight into the shared bounded match buffer.
+
+    ``matched``/``first``/``cls_row`` are the block's ``(QB,)`` lane
+    outputs and accept-class names (``-1`` = inert lane); ``doc`` the
+    global document id (``< 0`` = unused slot, dropped).  Hits rank by
+    an in-register cumsum and land via masked sums (Mosaic has no
+    scatter) as ``(doc, class, first)`` rows in a ``win``-row window at
+    the current counter — reading the counter IS this program's slice of
+    the cross-grid exclusive scan (see :func:`_sparse_init`).  Writes
+    saturate at ``cap`` (the buffer has ``win`` spare tail rows, so a
+    clamped window never corrupts valid rows) while the counter keeps
+    the TRUE total — ``count > cap`` is the caller's overflow signal.
+    """
+    qb = matched.shape[0]
+    hits = matched & (cls_row >= 0)
+    nv = jnp.sum(hits.astype(jnp.int32))
+
+    @pl.when((nv > 0) & (doc >= 0))
+    def _():
+        cnt = cnt_ref[0, 0]
+        incl = (jax.lax.broadcasted_iota(jnp.int32, (qb, qb), 1)
+                <= jax.lax.broadcasted_iota(jnp.int32, (qb, qb), 0))
+        rank = jnp.sum((incl & hits[None, :]).astype(jnp.int32),
+                       axis=1) - 1                                # (qb,)
+        out = jax.lax.broadcasted_iota(jnp.int32, (win, qb), 0)
+        mask = ((out == rank[None, :]) & hits[None, :]).astype(jnp.int32)
+        cls_c = jnp.sum(mask * cls_row[None, :], axis=1)          # (win,)
+        fst_c = jnp.sum(mask * first[None, :], axis=1)
+        col = jax.lax.broadcasted_iota(jnp.int32, (win, 3), 1)
+        rows = jnp.where(col == 0, doc,
+                         jnp.where(col == 1, cls_c[:, None],
+                                   fst_c[:, None]))
+        valid = jax.lax.broadcasted_iota(jnp.int32, (win, 3), 0) < nv
+        start = jnp.minimum(cnt, cap)     # saturating write offset
+        old = buf_ref[pl.ds(start, win), :]
+        buf_ref[pl.ds(start, win), :] = jnp.where(valid, rows, old)
+        cnt_ref[0, 0] = cnt + nv          # true count, never clamped
+
+
+def _kernel_sparse(ev_ref, docid_ref, tagmask_ref, pw_ref, pb_ref,
+                   self_ref, init_ref, accw_ref, accb_ref, lane_ref,
+                   buf_ref, cnt_ref, stack_ref, evbuf_ref, sem_ref, *,
+                   n_events: int, max_depth: int, chunk: int, n_tags: int,
+                   doc_axis: int, cap: int, win: int):
+    """Sparse twin of :func:`_kernel`: same streamed transition, but the
+    per-(document, block) accept lanes compact in VMEM at end-of-document
+    and only the bounded match buffer ever reaches HBM."""
+    b = pl.program_id(doc_axis)
+    qb = accw_ref.shape[1]
+    _sparse_init(buf_ref, cnt_ref)
+    stack_ref[...] = jnp.zeros_like(stack_ref)
+    stack_ref[0, :] = init_ref[0, :]
+    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
+                       accb_ref)
+    matched, first = _stream_events(
+        ev_ref, evbuf_ref, sem_ref, stack_ref, tb, b, n_events=n_events,
+        max_depth=max_depth, chunk=chunk, n_tags=n_tags, qb=qb)
+    _emit_rows(matched, first, lane_ref[0, :], docid_ref[0, 0],
+               buf_ref, cnt_ref, cap=cap, win=win)
 
 
 #: megakernel grid iteration orders — ``"bg"`` walks documents in the
@@ -269,6 +381,100 @@ def stream_filter_pallas(events: jax.Array, tagmask: jax.Array,
     return matched, first
 
 
+def _epilogue_window(qb: int, ep_tile: int) -> int:
+    """Emission-window rows per program: ``qb`` lanes can all hit, and
+    the read-modify-write window is sublane-tiled by ``ep_tile`` (the
+    autotunable epilogue knob — bigger tiles align the dynamic-offset
+    window write, smaller ones shrink the per-flush masked sums)."""
+    return _round_up(qb, max(8, int(ep_tile)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "max_depth", "chunk",
+                                    "interpret", "grid_order", "ep_tile"))
+def stream_filter_pallas_sparse(events: jax.Array, doc_ids: jax.Array,
+                                tagmask: jax.Array, pw: jax.Array,
+                                pb: jax.Array, selfloop_words: jax.Array,
+                                init_words: jax.Array, acc_word: jax.Array,
+                                acc_bit: jax.Array, lane_cls: jax.Array, *,
+                                cap: int, max_depth: int, chunk: int = 256,
+                                interpret: bool | None = None,
+                                grid_order: str = "bg", ep_tile: int = 8
+                                ) -> tuple[jax.Array, jax.Array]:
+    """One launch events → bounded match list: the fused sparse epilogue.
+
+    Same grid and tables as :func:`stream_filter_pallas`, but the
+    ``(B, G, QB)`` accept bitmap never leaves VMEM: each program
+    compacts its own accept lanes at end-of-document into a single
+    shared ``(cap + win, 3)`` int32 buffer of ``(doc_id, accept_class,
+    first_event)`` rows, coordinated by a running SMEM counter that the
+    sequential TPU grid turns into an exclusive scan (no atomics).
+    ``doc_ids`` (B, 1) int32 names each batch row globally (``< 0``
+    drops the row — segment pads); ``lane_cls`` (G, QB) int32 names
+    each lane's accept class (``-1`` = inert).  Returns ``(buf, count)``
+    where only ``buf[:min(count, cap)]`` rows are valid and
+    ``count > cap`` signals overflow (rows past ``cap`` are clamped
+    into the ``win``-row spare tail); row order is grid emission order,
+    not sorted.  ``ep_tile`` tiles the emission window
+    (:func:`_epilogue_window`).
+    """
+    from . import interpret_default
+
+    if interpret is None:
+        interpret = interpret_default()
+    bsz, n = events.shape
+    g, wb = selfloop_words.shape
+    qb = acc_word.shape[1]
+    n_tags = tagmask.shape[1] - 1
+    win = _epilogue_window(qb, ep_tile)
+    capp = int(cap) + win
+    chunk = max(32, min(int(chunk), _round_up(n, 32)))
+    npad = _round_up(n, chunk)
+    if npad != n:
+        events = jnp.pad(events, ((0, 0), (0, npad - n)),
+                         constant_values=ref.PAD << KIND_SHIFT)
+    grid, doc_axis, by_block, by_doc_block = _grid_maps(grid_order, bsz, g)
+    buf, cnt = pl.pallas_call(
+        functools.partial(_kernel_sparse, n_events=npad,
+                          max_depth=max_depth, chunk=chunk, n_tags=n_tags,
+                          doc_axis=doc_axis, cap=int(cap), win=win),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, 1), lambda *ids: (by_doc_block(*ids)[0], 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n_tags + 1, wb),
+                         lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+        ],
+        out_specs=[
+            # constant index maps: the match buffer and counter persist
+            # on core across the WHOLE grid and flush to HBM once
+            pl.BlockSpec((capp, 3), lambda *ids: (0, 0)),
+            pl.BlockSpec((1, 1), lambda *ids: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capp, 3), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((max_depth + 2, wb), jnp.uint32),
+            pltpu.SMEM((2, chunk), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(events, doc_ids, tagmask, pw, pb, selfloop_words, init_words,
+      acc_word, acc_bit, lane_cls)
+    return buf, cnt
+
+
 def _event_capacity(chunk: int) -> int:
     """Worst-case events per ``chunk`` bytes, rounded for VMEM layout.
 
@@ -280,16 +486,14 @@ def _event_capacity(chunk: int) -> int:
     return _round_up(chunk // 3 + 4, 8)
 
 
-def _bytes_kernel(data_ref, starts_ref, tagmask_ref, pw_ref, pb_ref,
-                  self_ref, init_ref, accw_ref, accb_ref,
-                  matched_ref, first_ref,
-                  stack_ref, mbuf_ref, fbuf_ref, bbuf_ref, evbuf_ref,
-                  sem_ref, *, n_bytes: int, max_depth: int, chunk: int,
-                  n_tags: int, n_docs: int, doc_axis: int):
-    """One-launch bytes→verdict: predecode + compact + filter, one grid cell.
+def _bytes_stream(data_ref, starts_ref, stack_ref, mbuf_ref, fbuf_ref,
+                  bbuf_ref, evbuf_ref, sem_ref, tb, init_row, seg, *,
+                  n_bytes: int, max_depth: int, chunk: int, n_tags: int,
+                  qb: int):
+    """Streaming body of the one-launch bytes kernel, one grid cell.
 
-    Each program owns one *segment* (a packed run of documents, see
-    ``repro.core.events.SegmentPack``) and one state-word block.  Per
+    Shared verbatim by the dense (:func:`_bytes_kernel`) and
+    fused-sparse (:func:`_bytes_kernel_sparse`) launch shapes.  Per
     chunk of raw bytes: DMA the int32-packed bytes HBM→VMEM
     (double-buffered, one lookahead word), classify every position with
     :func:`repro.kernels.parse.fused_predecode`, compact the hits into a
@@ -300,16 +504,13 @@ def _bytes_kernel(data_ref, starts_ref, tagmask_ref, pw_ref, pb_ref,
     drives per-document resets: crossing a boundary flushes the finished
     document's accept lanes to the (D, QB) result buffers and re-roots
     the stack — this is how short documents share a grid slot instead of
-    padding to the longest.
+    padding to the longest.  On return every document row of
+    ``mbuf_ref``/``fbuf_ref`` is final.
     """
-    s = pl.program_id(doc_axis)
-    qb = accw_ref.shape[1]
     n_words = chunk // 4
     n_chunks = n_bytes // chunk
     evcap = _event_capacity(chunk)
-    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
-                       accb_ref)
-    init_row = init_ref[0, :]
+    s = seg
 
     # result buffers for every document in this segment; empty doc slots
     # keep these initial values (flushed by the boundary loop unchanged)
@@ -402,12 +603,62 @@ def _bytes_kernel(data_ref, starts_ref, tagmask_ref, pw_ref, pb_ref,
         (jnp.int32(0), starts_ref[0, 1], jnp.int32(0), jnp.int32(0),
          jnp.int32(0), jnp.zeros((qb,), bool),
          jnp.full((qb,), NO_MATCH, jnp.int32)))
-    # epilogue: flush the document the stream ended inside, then drain
-    # any remaining (empty) doc slots so their initial rows are final
+    # flush the document the stream ended inside; remaining (empty) doc
+    # slots keep their initial rows
     mbuf_ref[pl.ds(d, 1), :] = matched.astype(jnp.int32)[None]
     fbuf_ref[pl.ds(d, 1), :] = first[None]
+
+
+def _bytes_kernel(data_ref, starts_ref, tagmask_ref, pw_ref, pb_ref,
+                  self_ref, init_ref, accw_ref, accb_ref,
+                  matched_ref, first_ref,
+                  stack_ref, mbuf_ref, fbuf_ref, bbuf_ref, evbuf_ref,
+                  sem_ref, *, n_bytes: int, max_depth: int, chunk: int,
+                  n_tags: int, doc_axis: int):
+    """One-launch bytes→verdict (dense): stream, then copy the per-doc
+    accept-lane rows out (see :func:`_bytes_stream`)."""
+    s = pl.program_id(doc_axis)
+    qb = accw_ref.shape[1]
+    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
+                       accb_ref)
+    _bytes_stream(data_ref, starts_ref, stack_ref, mbuf_ref, fbuf_ref,
+                  bbuf_ref, evbuf_ref, sem_ref, tb, init_ref[0, :], s,
+                  n_bytes=n_bytes, max_depth=max_depth, chunk=chunk,
+                  n_tags=n_tags, qb=qb)
     matched_ref[0, 0, :, :] = mbuf_ref[...]
     first_ref[0, 0, :, :] = fbuf_ref[...]
+
+
+def _bytes_kernel_sparse(data_ref, starts_ref, docmap_ref, tagmask_ref,
+                         pw_ref, pb_ref, self_ref, init_ref, accw_ref,
+                         accb_ref, lane_ref, buf_ref, cnt_ref,
+                         stack_ref, mbuf_ref, fbuf_ref, bbuf_ref,
+                         evbuf_ref, sem_ref, *, n_bytes: int,
+                         max_depth: int, chunk: int, n_tags: int,
+                         n_docs: int, doc_axis: int, cap: int, win: int):
+    """Sparse twin of :func:`_bytes_kernel`: after the stream, every
+    document row of the segment compacts straight into the shared
+    bounded match buffer (``docmap`` names each slot's global batch
+    row; ``-1`` pad slots emit nothing)."""
+    s = pl.program_id(doc_axis)
+    qb = accw_ref.shape[1]
+    _sparse_init(buf_ref, cnt_ref)
+    tb = _block_tables(tagmask_ref, pw_ref, pb_ref, self_ref, accw_ref,
+                       accb_ref)
+    _bytes_stream(data_ref, starts_ref, stack_ref, mbuf_ref, fbuf_ref,
+                  bbuf_ref, evbuf_ref, sem_ref, tb, init_ref[0, :], s,
+                  n_bytes=n_bytes, max_depth=max_depth, chunk=chunk,
+                  n_tags=n_tags, qb=qb)
+    cls_row = lane_ref[0, :]
+
+    def doc_body(dd, carry):
+        matched = mbuf_ref[pl.ds(dd, 1), :][0] != 0
+        first = fbuf_ref[pl.ds(dd, 1), :][0]
+        _emit_rows(matched, first, cls_row, docmap_ref[0, dd],
+                   buf_ref, cnt_ref, cap=cap, win=win)
+        return carry
+
+    jax.lax.fori_loop(0, n_docs, doc_body, jnp.int32(0))
 
 
 @functools.partial(jax.jit,
@@ -451,8 +702,7 @@ def stream_filter_bytes_pallas(data: jax.Array, starts: jax.Array,
     grid, doc_axis, by_block, by_doc_block = _grid_maps(grid_order, nseg, g)
     matched, first = pl.pallas_call(
         functools.partial(_bytes_kernel, n_bytes=npad, max_depth=max_depth,
-                          chunk=chunk, n_tags=n_tags, n_docs=n_docs,
-                          doc_axis=doc_axis),
+                          chunk=chunk, n_tags=n_tags, doc_axis=doc_axis),
         grid=grid,
         in_specs=[
             # raw bytes stay off-core; the kernel DMAs VMEM chunks itself
@@ -493,3 +743,97 @@ def stream_filter_bytes_pallas(data: jax.Array, starts: jax.Array,
     )(words, starts, tagmask, pw, pb, selfloop_words, init_words,
       acc_word, acc_bit)
     return matched, first
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "max_depth", "chunk",
+                                    "interpret", "grid_order", "ep_tile"))
+def stream_filter_bytes_pallas_sparse(data: jax.Array, starts: jax.Array,
+                                      doc_map: jax.Array,
+                                      tagmask: jax.Array, pw: jax.Array,
+                                      pb: jax.Array,
+                                      selfloop_words: jax.Array,
+                                      init_words: jax.Array,
+                                      acc_word: jax.Array,
+                                      acc_bit: jax.Array,
+                                      lane_cls: jax.Array, *, cap: int,
+                                      max_depth: int, chunk: int = 256,
+                                      interpret: bool | None = None,
+                                      grid_order: str = "bg",
+                                      ep_tile: int = 8
+                                      ) -> tuple[jax.Array, jax.Array]:
+    """One launch raw bytes → bounded match list.
+
+    The full fused datapath of :func:`stream_filter_bytes_pallas` plus
+    the in-kernel sparse epilogue of :func:`stream_filter_pallas_sparse`:
+    the ``(S, G, D, QB)`` accept bitmap never exists anywhere —
+    per-document accept lanes compact in VMEM into one shared
+    ``(cap + win, 3)`` buffer of ``(doc_id, accept_class, first_event)``
+    rows.  ``doc_map`` (S, D) int32 names each segment slot's global
+    batch row (``SegmentPack.doc_ids``; ``-1`` = unused slot, dropped);
+    ``lane_cls`` (G, QB) int32 accept-class names.  Returns
+    ``(buf, count)`` with the same validity/overflow contract as the
+    event-stream sparse wrapper.
+    """
+    from . import interpret_default
+
+    if interpret is None:
+        interpret = interpret_default()
+    nseg, length = data.shape
+    n_docs = starts.shape[1] - 1
+    g, wb = selfloop_words.shape
+    qb = acc_word.shape[1]
+    n_tags = tagmask.shape[1] - 1
+    win = _epilogue_window(qb, ep_tile)
+    capp = int(cap) + win
+    chunk = max(32, min(_round_up(int(chunk), 32), _round_up(length, 32)))
+    npad = _round_up(length, chunk)
+    data = jnp.pad(data, ((0, 0), (0, npad - length + 4)))
+    words = jax.lax.bitcast_convert_type(
+        data.reshape(nseg, npad // 4 + 1, 4), jnp.int32)[..., None]
+    grid, doc_axis, by_block, by_doc_block = _grid_maps(grid_order, nseg, g)
+    buf, cnt = pl.pallas_call(
+        functools.partial(_bytes_kernel_sparse, n_bytes=npad,
+                          max_depth=max_depth, chunk=chunk, n_tags=n_tags,
+                          n_docs=n_docs, doc_axis=doc_axis, cap=int(cap),
+                          win=win),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, n_docs + 1),
+                         lambda *ids: by_doc_block(*ids)[:1] + (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n_docs),
+                         lambda *ids: by_doc_block(*ids)[:1] + (0,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n_tags + 1, wb),
+                         lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb, 32), lambda *ids: by_block(*ids) + (0, 0)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, wb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+            pl.BlockSpec((1, qb), lambda *ids: by_block(*ids) + (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((capp, 3), lambda *ids: (0, 0)),
+            pl.BlockSpec((1, 1), lambda *ids: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capp, 3), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((max_depth + 2, wb), jnp.uint32),   # tag stack
+            pltpu.VMEM((n_docs, qb), jnp.int32),           # matched buf
+            pltpu.VMEM((n_docs, qb), jnp.int32),           # first buf
+            pltpu.VMEM((2, chunk // 4 + 1, 1), jnp.int32),
+            pltpu.VMEM((_event_capacity(chunk), 2), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(words, starts, doc_map, tagmask, pw, pb, selfloop_words, init_words,
+      acc_word, acc_bit, lane_cls)
+    return buf, cnt

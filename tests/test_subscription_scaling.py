@@ -224,10 +224,11 @@ class TestSparseVerdicts:
         assert no_opt.match_cap(8, 10_000) == 4096  # floor default
         assert no_opt.match_cap(8, 100) == 800      # dense clamp again
 
-    def test_kernel_lane_compaction_is_many_to_one(self):
+    def test_kernel_sparse_is_many_to_one(self):
         """The megakernel sparse path compacts in accept-*class* space:
         with duplicated subscriptions the device emits fewer rows than
-        the expanded per-subscriber match list."""
+        the expanded per-subscriber match list — on BOTH kernel routes
+        (fused in-kernel epilogue and two-launch lane compaction)."""
         profiles, docs, d = _workload("streaming", n_queries=9)
         profiles = profiles + profiles        # every class has ≥ 2 members
         batch = EventBatch.from_streams(docs, bucket=64)
@@ -236,12 +237,20 @@ class TestSparseVerdicts:
                              kernel="pallas", kernel_interpret=True)
         dense = eng.filter_batch(batch)
         sp = eng.filter_batch_sparse(batch)
-        assert sp.meta["path"] == "kernel-lane-compact"
+        assert sp.meta["path"] == "kernel-fused"
         _assert_same(sp.densify(), dense)
         if sp.n_matches:
             assert sp.meta["device_rows"] < sp.n_matches
+        lane = engines.create(
+            "streaming", nfa, dictionary=d, minimize=True,
+            kernel="pallas", kernel_interpret=True, sparse_epilogue="off")
+        sp2 = lane.filter_batch_sparse(batch)
+        assert sp2.meta["path"] == "lane-compact"
+        _assert_same(sp2.densify(), dense)
+        if sp2.n_matches:
+            assert sp2.meta["device_rows"] < sp2.n_matches
 
-    def test_kernel_lane_compaction_sharded(self):
+    def test_kernel_sparse_sharded(self):
         profiles, docs, d = _workload("streaming")
         batch = EventBatch.from_streams(docs, bucket=64)
         nfa = compile_queries(profiles, d, shared=True)
@@ -250,8 +259,14 @@ class TestSparseVerdicts:
         sharded = eng.plan_sharded(3).remove_queries([2])
         dense = eng.filter_batch_sharded(batch, sharded)
         sp = eng.filter_batch_sharded_sparse(batch, sharded)
-        assert sp.meta["path"] == "kernel-lane-compact"
+        assert sp.meta["path"] == "kernel-fused"
         _assert_same(sp.densify(), dense)
+        lane = engines.create(
+            "streaming", nfa, dictionary=d, minimize=True,
+            kernel="pallas", kernel_interpret=True, sparse_epilogue="off")
+        sp2 = lane.filter_batch_sharded_sparse(batch, sharded)
+        assert sp2.meta["path"] == "lane-compact"
+        _assert_same(sp2.densify(), dense)
 
 
 # ------------------------------------------------------ S1: live-mask math
