@@ -13,8 +13,12 @@ fails when any fresh value regresses more than ``--threshold`` (default
 25%) below the baseline.  ``speedup_vs_scan`` is additionally gated,
 but ONLY on ``backend="compiled"`` rows — kernel-beats-scan is a
 compiled-backend property, and interpret-only containers must not fail
-the gate on interpreter noise (their docs_per_s/mb_s stay gated).  Several fresh files may be given — the gate
-takes each row's best measurement across runs, so one noisy run on a
+the gate on interpreter noise (their docs_per_s/mb_s stay gated).  ``serve_latency`` rows are gated on
+their latency columns (``p50_ms``, ``p99_ms``) with the ratio inverted —
+lower is better — while ``p999_ms`` is reported but ungated (a single
+stray request on a shared runner defines it).  Several fresh files may be given — the gate
+takes each row's best measurement across runs (max throughput, min
+latency), so one noisy run on a
 shared CI machine cannot fail the gate alone (throughput noise is
 one-sided: a machine can only be spuriously *slow*).  Rows present on
 only one side (new benchmark sections, machine-dependent mesh shapes)
@@ -45,6 +49,13 @@ import sys
 #: measured throughput metrics the gate compares (higher is better)
 METRICS = ("docs_per_s", "mb_s")
 
+#: measured latency metrics the gate compares on serve_latency rows —
+#: LOWER is better, so the gated ratio is baseline/fresh (below 1 when
+#: fresh is slower) and best-of-several-runs takes the *minimum*.  p999
+#: is reported but ungated: a single stray request on a shared CI
+#: runner defines it, which is exactly the noise the gate must ignore.
+LATENCY_METRICS = ("p50_ms", "p99_ms")
+
 #: ratio metrics gated only on ``backend="compiled"`` rows: the
 #: kernel-beats-scan claim is a compiled-backend property, so on an
 #: interpret-only container the ratio is tracked but can never fail the
@@ -52,7 +63,8 @@ METRICS = ("docs_per_s", "mb_s")
 COMPILED_ONLY_METRICS = ("speedup_vs_scan",)
 
 #: measurement outputs and derived ratios — never part of a row's identity
-NON_IDENTITY = frozenset(METRICS) | frozenset(COMPILED_ONLY_METRICS) | {
+NON_IDENTITY = frozenset(METRICS) | frozenset(COMPILED_ONLY_METRICS) | \
+    frozenset(LATENCY_METRICS) | {
     "speedup_vs_yfilter", "vs_events", "speedup_vs_recompile",
     "seconds_per_op", "events_per_slot", "stream_bytes", "roofline_pct",
     # subscription-axis measurement columns (query_scaling rows):
@@ -63,14 +75,29 @@ NON_IDENTITY = frozenset(METRICS) | frozenset(COMPILED_ONLY_METRICS) | {
     # (kernel-fused / lane-compact / base-fallback / dense-overflow) is
     # backend-dependent output, not row configuration
     "verdict_path",
+    # serve_latency measurement columns: SLO percentiles, shed/occupancy
+    # counters and delivery accounting of the continuous serve loop —
+    # all outputs of the trace run, not its configuration
+    "p999_ms", "mean_ms", "shed_rate", "completed", "served_per_s",
+    "batch_fill", "size_closes", "deadline_closes", "flush_closes",
+    "backpressure_waits", "max_queue_depth", "deliveries",
 }
 
 
 def gated_metrics(row: dict) -> tuple[str, ...]:
     """Metrics the gate compares for this row (see COMPILED_ONLY_METRICS)."""
+    metrics = METRICS + LATENCY_METRICS
     if row.get("backend") == "compiled":
-        return METRICS + COMPILED_ONLY_METRICS
-    return METRICS
+        return metrics + COMPILED_ONLY_METRICS
+    return metrics
+
+
+def gate_ratio(metric: str, baseline: float, fresh: float) -> float:
+    """Fresh-vs-baseline ratio oriented so < 1 is always a regression:
+    fresh/baseline for throughput, baseline/fresh for latency."""
+    if metric in LATENCY_METRICS:
+        return baseline / fresh
+    return fresh / baseline
 
 
 def row_key(row: dict) -> str:
@@ -84,13 +111,14 @@ def load_rows(path: str) -> dict[str, dict]:
         rows = json.load(f)
     out: dict[str, dict] = {}
     for row in rows:
-        if any(m in row for m in METRICS):
+        if any(m in row for m in METRICS + LATENCY_METRICS):
             out[row_key(row)] = row
     return out
 
 
 def merge_best(runs: list[dict[str, dict]]) -> dict[str, dict]:
-    """Per-row best-of across fresh runs (max of each metric)."""
+    """Per-row best-of across fresh runs (max of each throughput
+    metric, min of each latency metric)."""
     out: dict[str, dict] = {}
     for run in runs:
         for key, row in run.items():
@@ -98,6 +126,9 @@ def merge_best(runs: list[dict[str, dict]]) -> dict[str, dict]:
             for metric in METRICS + COMPILED_ONLY_METRICS:
                 if metric in row and metric in best:
                     best[metric] = max(best[metric], row[metric])
+            for metric in LATENCY_METRICS:
+                if metric in row and metric in best:
+                    best[metric] = min(best[metric], row[metric])
     return out
 
 
@@ -115,9 +146,12 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict],
         for metric in gated_metrics(b):
             if metric not in b or metric not in f:
                 continue
-            if not b[metric]:
-                continue  # zero baseline: no ratio to gate on
-            ratio = f[metric] / b[metric]
+            if not b[metric] or not f[metric]:
+                continue  # zero on either side: no ratio to gate on
+            if metric in LATENCY_METRICS and (
+                    b[metric] != b[metric] or f[metric] != f[metric]):
+                continue  # NaN percentile (nothing completed): ungated
+            ratio = gate_ratio(metric, b[metric], f[metric])
             label = "{} {}".format(
                 b.get("bench", "?"),
                 " ".join(f"{k}={v}" for k, v in sorted(b.items())

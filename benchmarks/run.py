@@ -24,6 +24,12 @@ Sections:
            replication, §3.5 second axis)
   churn  — churn_latency: per-op subscribe/unsubscribe on a sharded
            plan vs a full recompile
+  serve  — serve_latency: p50/p99/p999 bytes→verdict latency + shed
+           rate of the CONTINUOUS serve loop under seeded Poisson and
+           bursty (ON/OFF) arrival traces — the service-level view of
+           the paper's "very high input ratios" claim (admission
+           control, adaptive batching, K-deep dispatch; see
+           repro.serve.loop)
   twig   — twig-pattern filtering cost structure (paper §5 extension)
   roofline — 3-term roofline per (arch × shape) from dry-run artifacts
              (only if launch/dryrun.py results exist; see EXPERIMENTS.md)
@@ -45,7 +51,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 ALL_SECTIONS = ("fig8", "fig9", "ingest", "kernel", "qscale", "docscale",
-                "churn", "twig", "roofline")
+                "churn", "serve", "twig", "roofline")
 
 
 def run_sections(sections, full: bool) -> list[dict]:
@@ -124,6 +130,10 @@ def run_sections(sections, full: bool) -> list[dict]:
         rows += bench_throughput.run_churn(
             n_queries=1024 if full else 256,
             n_ops=32 if full else 8)
+
+    if "serve" in sections:
+        from benchmarks import bench_serve
+        rows += bench_serve.run(full=full)
 
     if "twig" in sections:
         from benchmarks import bench_twig

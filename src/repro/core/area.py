@@ -26,7 +26,7 @@ from typing import Sequence
 
 from .dictionary import CLOSE_NBYTES, OPEN_NBYTES, TagDictionary
 from .nfa import K_LOOP, K_MATCH, NFA, WILD_TAG, compile_queries
-from .xpath import CHILD, Query
+from .xpath import Query
 
 # Virtex-4 LX200 logic capacity (paper's target device, §3.5):
 # 89,088 slices × 2 LUTs — used to express model cost as chip %.

@@ -25,7 +25,6 @@ import numpy as np
 
 from .dictionary import (
     CLOSE_NBYTES,
-    GT,
     LT,
     OPEN_NBYTES,
     SLASH,

@@ -31,7 +31,7 @@ import numpy as np
 from .dictionary import TagDictionary
 from .engines.result import NO_MATCH, FilterResult
 from .events import EventStream, to_trees, Node
-from .nfa import WILD_TAG, compile_queries
+from .nfa import compile_queries
 from .xpath import CHILD, DESC, Query, Step, WILDCARD, XPathSyntaxError
 
 

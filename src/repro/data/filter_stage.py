@@ -27,6 +27,7 @@ takes raw paper-format byte payloads and parses them *on device*
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator, Sequence
 
@@ -96,6 +97,11 @@ class FilterStage:
     byte_bucket: int = 1024
     query_shards: int = 1
     data_shards: int = 1
+    #: in-flight depth of :meth:`route_bytes_pipelined` — how many
+    #: dispatched-but-unmaterialized batches the loop keeps (2 = the
+    #: classic double buffer; the serve loop raises it via its own
+    #: ``max_inflight``)
+    pipeline_depth: int = 2
     mesh: Any = None
     shard_of_profile: np.ndarray = field(default=None)  # type: ignore
     stats: dict = field(default_factory=dict)
@@ -358,55 +364,74 @@ class FilterStage:
         self.stats["put_seconds"] += time.perf_counter() - t0
         return bufs, bb, placed, n_events
 
-    def route_bytes_pipelined(self, payloads: Iterable[bytes]
-                              ) -> Iterator[list[RoutedDocument]]:
-        """Async double-buffered twin of :meth:`route_bytes` for the 2-D
-        mesh: while the bytes→verdict program runs on batch *k*, batch
-        *k+1* is already packed and its H2D transfer in flight.
+    def _dispatch_byte_batch(self, bufs: list[bytes]):
+        """Stage one raw-byte batch (exactly once — ``put_seconds``
+        counts each batch's ``device_put`` dispatch a single time) and
+        launch the async 2-D bytes→verdict program.  Returns the
+        in-flight entry the K-deep loop materializes later."""
+        bufs, bb, placed, n_events = self._stage_in(bufs)
+        t0 = time.perf_counter()
+        materialize = self._eng.dispatch_bytes_sharded2d(
+            placed, self.sharded_, mesh=self.mesh, n_events=n_events)
+        return bufs, bb, materialize, t0
 
-        Per batch: (1) dispatch the 2-D filter program on the staged
-        device batch (:meth:`FilterEngine.dispatch_bytes_sharded2d` —
-        asynchronous, returns a materializer); (2) stage batch *k+1*
-        (pack + async ``ByteBatch.device_put``), overlapping its
-        transfer with the compute in flight; (3) block on batch *k*'s
-        verdicts and fan out.  Routed output is identical to
-        :meth:`route_bytes`; throughput and overlap accounting land in
-        ``stats`` (``put_seconds``, ``overlapped_batches``).  Falls back
-        to :meth:`route_bytes` when the stage has no mesh to overlap
-        against.
+    def _materialize_routed(self, entry, base: int) -> list[RoutedDocument]:
+        """Block on one in-flight batch's verdicts, account, fan out."""
+        bufs, bb, materialize, t0 = entry
+        res = materialize()
+        # slice off data-axis pad rows before accounting/fan-out
+        res = FilterResult(res.matched[:len(bufs)],
+                           res.first_event[:len(bufs)])
+        self._record(res, bb.batch_size, bb.nbytes_total(),
+                     time.perf_counter() - t0)
+        return self._fan_out(res, [len(b) for b in bufs], base)
+
+    def route_bytes_pipelined(self, payloads: Iterable[bytes], *,
+                              depth: int | None = None
+                              ) -> Iterator[list[RoutedDocument]]:
+        """K-deep pipelined twin of :meth:`route_bytes` for the 2-D
+        mesh: while the bytes→verdict program runs on batch *k*, up to
+        ``depth - 1`` successor batches are already packed, their H2D
+        transfers in flight and their filter programs dispatched.
+
+        Per batch: (1) stage (pack + async ``ByteBatch.device_put``) and
+        dispatch the 2-D filter program
+        (:meth:`FilterEngine.dispatch_bytes_sharded2d` — asynchronous,
+        returns a materializer); (2) once ``depth`` batches are in
+        flight, block on the *oldest* one's verdicts and fan out (FIFO —
+        routed order is identical to :meth:`route_bytes`).  ``depth``
+        defaults to :attr:`pipeline_depth` (2 = the classic double
+        buffer); the serve loop passes its own ``max_inflight``.  Each
+        batch is staged exactly once, so ``put_seconds`` accounts every
+        ``device_put`` dispatch a single time at any depth.  Throughput
+        and overlap accounting land in ``stats`` (``put_seconds``,
+        ``overlapped_batches``).  Falls back to :meth:`route_bytes`
+        when the stage has no mesh to overlap against.
         """
         if self.mesh is None or self.sharded_ is None:
             yield from self.route_bytes(payloads)
             return
+        k = max(1, self.pipeline_depth if depth is None else depth)
 
-        # streaming double buffer: only the in-flight batch and its
-        # staged successor are ever held — an unbounded payload stream
-        # yields verdicts batch by batch, exactly like route_bytes
-        it = self._chunks(payloads)
-        nxt = next(it, None)
-        if nxt is None:
-            return
+        # streaming K-deep window: only the k in-flight batches are
+        # ever held — an unbounded payload stream yields verdicts batch
+        # by batch, exactly like route_bytes
+        inflight: deque = deque()
         base = 0
-        staged = self._stage_in(nxt)
-        while staged is not None:
-            bufs, bb, placed, n_events = staged
-            t0 = time.perf_counter()
-            materialize = self._eng.dispatch_bytes_sharded2d(
-                placed, self.sharded_, mesh=self.mesh, n_events=n_events)
-            nxt = next(it, None)
-            if nxt is not None:
-                staged = self._stage_in(nxt)
+        for bufs in self._chunks(payloads):
+            if inflight:
+                # a predecessor's filter step is still in flight while
+                # this batch stages: the overlap the pipeline exists for
                 self.stats["overlapped_batches"] += 1
-            else:
-                staged = None
-            res = materialize()
-            # slice off data-axis pad rows before accounting/fan-out
-            res = FilterResult(res.matched[:len(bufs)],
-                               res.first_event[:len(bufs)])
-            self._record(res, bb.batch_size, bb.nbytes_total(),
-                         time.perf_counter() - t0)
-            yield self._fan_out(res, [len(b) for b in bufs], base)
-            base += len(bufs)
+            inflight.append(self._dispatch_byte_batch(bufs))
+            if len(inflight) >= k:
+                entry = inflight.popleft()
+                yield self._materialize_routed(entry, base)
+                base += len(entry[0])
+        while inflight:
+            entry = inflight.popleft()
+            yield self._materialize_routed(entry, base)
+            base += len(entry[0])
 
     def _route_batch(self, docs: list[EventStream],
                      base: int) -> list[RoutedDocument]:

@@ -17,17 +17,32 @@ events`` is the pre-parsed host path.
 ``--data-shards N`` turns on the second scaling axis: the stage builds
 a 2-D ``("data", "model")`` mesh, documents are fanned over the
 ``"data"`` axis while each device keeps its slice of the subscription
-set, and byte ingest runs the async double-buffered serve loop
-(``FilterStage.route_bytes_pipelined``: the ``device_put`` of batch
-k+1 overlaps the filter step on batch k).
+set, and byte ingest runs the async K-deep pipelined serve loop
+(``FilterStage.route_bytes_pipelined``: the ``device_put`` of the next
+batches overlaps the filter step on batch k).
+
+``--arrival {poisson,burst,replay}`` switches the routing step from the
+fixed-request-list driver to the *continuous* serve loop
+(:class:`repro.serve.loop.ServeLoop`): requests are submitted on a
+seeded arrival trace, admitted against a bounded queue
+(``--queue-cap``, ``--overload shed|block``), batched adaptively
+(``--batch`` size or ``--deadline-ms``, whichever fires first), run up
+to ``--max-inflight`` batches deep, and delivered in order — then the
+SLO summary (p50/p99/p999 bytes→verdict latency, shed rate, batch fill,
+backpressure waits) is printed and optionally written to
+``--latency-json`` with the full latency histogram.
 
 Usage::
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
       --requests 32 --replicas 2 --ingest bytes --query-shards 2 \
       --data-shards 2
+  PYTHONPATH=src python -m repro.launch.serve --requests 64 \
+      --arrival burst --rate 800 --deadline-ms 10 --max-inflight 4 \
+      --queue-cap 32 --latency-json serve_latency.json
 """
 import argparse
+import json
 import time
 
 import jax
@@ -41,6 +56,7 @@ from repro.data.filter_stage import TEXT_FILL, FilterStage
 from repro.data.generator import DTD, gen_corpus, gen_profiles
 from repro.models import transformer as T
 from repro.serve.engine import ServeEngine
+from repro.serve.loop import OVERLOAD_POLICIES, ServeLoop, make_arrivals, run_trace
 
 
 def build_stage(n_replicas: int, *, engine: str = "levelwise",
@@ -85,6 +101,43 @@ def route_requests(stage: FilterStage, payloads, *, ingest: str = "events",
     return queues
 
 
+def serve_continuous(stage: FilterStage, raw: list[bytes],
+                     args) -> tuple[list[list[int]], dict]:
+    """Drive the continuous serve loop over a seeded arrival trace.
+
+    Returns ``(queues, slo)`` — per-replica delivery queues (identical
+    to what the batch driver routes when nothing is shed, the loop's
+    semantics-vs-schedule contract) and the SLO summary dict.
+    """
+    deliveries: list = []
+    arrivals = make_arrivals(args.arrival, len(raw), rate_hz=args.rate,
+                             seed=args.seed)
+    loop = ServeLoop(stage, max_batch=args.batch,
+                     deadline_ms=args.deadline_ms,
+                     queue_cap=args.queue_cap,
+                     max_inflight=args.max_inflight,
+                     overload=args.overload,
+                     deliver=deliveries.append)
+    with loop:
+        run_trace(loop, raw, arrivals)
+    slo = loop.slo_summary()
+    queues: list[list[int]] = [[] for _ in range(stage.n_shards)]
+    for routed in deliveries:
+        for r in routed:
+            queues[r.shard].append(r.doc_index)
+    if args.latency_json:
+        payload = {"arrival": args.arrival, "rate_hz": args.rate,
+                   "deadline_ms": args.deadline_ms,
+                   "queue_cap": args.queue_cap,
+                   "max_inflight": args.max_inflight,
+                   "overload": args.overload, "slo": slo,
+                   "histogram": loop.latency_histogram(),
+                   "latencies_ms": loop.latencies_ms().tolist()}
+        with open(args.latency_json, "w") as f:
+            json.dump(payload, f, indent=1)
+    return queues, slo
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b", choices=list(ARCHS))
@@ -108,8 +161,35 @@ def main() -> None:
     ap.add_argument("--data-shards", type=int, default=1,
                     help="fan the document stream over this many mesh "
                          "'data' replicas (2-D data × model program with "
-                         "the async double-buffered byte-ingest loop; "
+                         "the async K-deep pipelined byte-ingest loop; "
                          "shrinks to what the host can place)")
+    ap.add_argument("--arrival", default=None,
+                    choices=("poisson", "burst", "replay"),
+                    help="serve CONTINUOUSLY: submit requests on this "
+                         "seeded arrival trace through the admission-"
+                         "controlled serve loop and print the SLO "
+                         "summary (default: the batch driver)")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="arrival rate in req/s (burst: the ON-window "
+                         "rate; mean is a quarter of it)")
+    ap.add_argument("--deadline-ms", type=float, default=10.0,
+                    help="adaptive batching: close a batch this long "
+                         "after it opens even if under --batch size")
+    ap.add_argument("--max-inflight", type=int, default=2,
+                    help="K-deep pipelining: dispatched-but-undelivered "
+                         "batches held in flight (2 = double buffer)")
+    ap.add_argument("--queue-cap", type=int, default=64,
+                    help="admission control: bound on the ingest queue; "
+                         "arrivals beyond it are shed or block")
+    ap.add_argument("--overload", default="shed",
+                    choices=OVERLOAD_POLICIES,
+                    help="overload policy at --queue-cap: shed the "
+                         "arrival or block the producer")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="arrival-trace seed (workload seeds are fixed)")
+    ap.add_argument("--latency-json", default=None, metavar="PATH",
+                    help="write the SLO summary + latency histogram "
+                         "JSON here (the CI serve job's artifact)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced).with_(vocab=256)
@@ -127,17 +207,37 @@ def main() -> None:
                           seed=1)
 
     # serialization is request *arrival* (real deployments receive bytes),
-    # so it happens outside the routing timer
+    # so it happens outside the routing timer; the continuous loop is
+    # always a bytes service — wire payloads are what arrives
     raw = ([encode_bytes(doc, text_fill=TEXT_FILL) for doc in payloads]
-           if args.ingest == "bytes" else None)
+           if args.ingest == "bytes" or args.arrival else None)
     t0 = time.perf_counter()
-    queues = route_requests(stage, payloads, ingest=args.ingest, raw=raw)
+    if args.arrival:
+        queues, slo = serve_continuous(stage, raw, args)
+        ingest_label = f"bytes, {args.arrival} arrivals"
+    else:
+        queues = route_requests(stage, payloads, ingest=args.ingest, raw=raw)
+        slo = None
+        ingest_label = f"{args.ingest} ingest"
     t_route = time.perf_counter() - t0
     tp = stage.throughput()
-    print(f"[serve] routed {args.requests} requests ({args.ingest} ingest) → "
+    print(f"[serve] routed {args.requests} requests ({ingest_label}) → "
           f"{[len(q) for q in queues]} per replica ({t_route*1e3:.1f} ms; "
           f"{tp['engine']}×{tp['query_shards']}: "
           f"{tp['docs_per_s']:.0f} docs/s, {tp['mb_per_s']:.2f} MB/s)")
+    if slo is not None:
+        print(f"[serve] SLO bytes→verdict: p50 {slo['p50_ms']:.2f} ms, "
+              f"p99 {slo['p99_ms']:.2f} ms, p999 {slo['p999_ms']:.2f} ms "
+              f"({slo['completed']}/{slo['arrived']} served at "
+              f"{slo['served_per_s']:.0f}/s, shed {slo['shed']} = "
+              f"{slo['shed_rate']:.1%})")
+        print(f"[serve] loop: {slo['batches']} batches "
+              f"(fill {slo['batch_fill']:.2f}; {slo['size_closes']} size / "
+              f"{slo['deadline_closes']} deadline / "
+              f"{slo['flush_closes']} flush closes), max queue depth "
+              f"{slo['max_queue_depth']}/{args.queue_cap}, "
+              f"{slo['backpressure_waits']} backpressure waits at "
+              f"K={args.max_inflight}")
     if args.data_shards > 1:
         print(f"[serve] 2-D mesh data×model = "
               f"{tp['mesh_data']}×{tp['mesh_model']}: "

@@ -17,8 +17,6 @@ Usage::
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.core.dictionary import TagDictionary

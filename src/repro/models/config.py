@@ -8,7 +8,7 @@ input shapes are global constants (per-arch applicability is resolved by
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -7,7 +7,6 @@ the activation dtype; matmuls use the config dtypes.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax

@@ -14,12 +14,10 @@ kept live — the remat policy the §Perf notes discuss).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..sharding import constrain
 from .config import ModelConfig

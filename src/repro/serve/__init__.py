@@ -1,2 +1,7 @@
-"""Serving: prefill/decode steps, batched engine, request routing."""
+"""Serving: prefill/decode steps, batched engine, request routing, and
+the continuous pub-sub serve loop (admission control, adaptive batching,
+K-deep pipelining, latency SLOs — see :mod:`repro.serve.loop`)."""
 from .engine import ServeEngine  # noqa: F401
+from .loop import (ServeLoop, ServeRequest, burst_arrivals,  # noqa: F401
+                   make_arrivals, poisson_arrivals, replay_arrivals,
+                   run_trace)

@@ -1,0 +1,465 @@
+"""Continuous pub-sub serve loop: bounded ingest, adaptive batching,
+K-deep in-flight dispatch, latency SLOs.
+
+This is the piece that turns the repo's batch drivers into a *service*:
+the paper's whole pitch is filtering under "very high input ratios"
+where per-document processing *time* — not just steady-state
+throughput — is what matters, and a fixed-request-list driver cannot
+measure that.  The loop is the software analogue of the
+admission-controlled reconfigurable stream processor in Diba (see
+PAPERS.md): documents arrive continuously, are admitted against a
+bounded queue, batched adaptively, filtered on device, and delivered to
+subscribers in order — with every stage's occupancy observable.
+
+Dataflow (one :class:`ServeLoop` instance)::
+
+      submit()                  batcher                workers (≤ K)
+    ───────────►  ingest queue ─────────►  adaptive  ─────────────►
+     admission    (≤ queue_cap)            batching    bytes→verdict
+     shed|block                         size OR deadline
+                                                            │ FIFO
+      deliver()  ◄───────────  completer  ◄─────────────────┘
+     subscribers    ordered     fan-out + latency timestamps
+
+* **Admission control** — the ingest queue is bounded at ``queue_cap``;
+  an arrival that finds it full is *shed* (counted, its ticket marked)
+  or *blocks* the producer (``overload="block"``) until the loop
+  drains.  Overload can never grow memory without bound.
+* **Adaptive batching** — a batch closes on *size* (``max_batch``
+  requests) or *deadline* (``deadline_ms`` after it opened), whichever
+  fires first: full batches under load, bounded waiting when idle.
+* **K-deep pipelining** — up to ``max_inflight`` closed batches may be
+  in flight at once (the generalization of the 2-deep double buffer in
+  :meth:`~repro.data.filter_stage.FilterStage.route_bytes_pipelined`);
+  the batcher blocks when all K slots are busy, which is the explicit
+  *backpressure* signal (counted in ``backpressure_waits``).
+* **Ordered delivery** — a single completer thread resolves batches in
+  dispatch order, so every subscriber sees its documents in admission
+  order regardless of K and regardless of which worker finished first.
+  Verdicts are bit-identical to the synchronous
+  :meth:`~repro.data.filter_stage.FilterStage.route_bytes` path —
+  batching and pipelining are schedule, not semantics.
+* **SLOs** — every request is timestamped at admission and at verdict
+  materialization; :meth:`ServeLoop.slo_summary` reports
+  p50/p99/p999 bytes→verdict latency, shed rate, batch fill,
+  close-reason counts, queue depth and backpressure occupancy.
+
+Arrival-trace helpers (:func:`poisson_arrivals`, :func:`burst_arrivals`,
+:func:`replay_arrivals`) generate the seeded workloads the latency
+benchmarks and the CI serve job drive through :func:`run_trace`.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from ..core.engines import FilterResult
+from ..data.filter_stage import FilterStage, RoutedDocument
+
+#: admission policies: drop the arrival (count it) vs stall the producer
+OVERLOAD_POLICIES = ("shed", "block")
+
+
+@dataclass
+class ServeRequest:
+    """One submitted payload's ticket through the loop.
+
+    ``seq`` is the admission sequence number — it doubles as the
+    document index in every :class:`RoutedDocument` the request fans out
+    to, so delivery order per subscriber is admission order.  Shed
+    requests never get a ``seq`` (they were never admitted).
+    """
+
+    payload: bytes
+    t_submit: float
+    seq: int = -1
+    shed: bool = False
+    t_verdict: float | None = None
+    routed: list[RoutedDocument] | None = None
+    done: threading.Event = field(default_factory=threading.Event,
+                                  repr=False)
+
+    @property
+    def latency_s(self) -> float | None:
+        """Enqueue→verdict seconds (``None`` until resolved / if shed)."""
+        if self.t_verdict is None:
+            return None
+        return self.t_verdict - self.t_submit
+
+
+class ServeLoop:
+    """Continuous serving front-end over a :class:`FilterStage`.
+
+    Use as a context manager: exiting flushes the queue, drains all
+    in-flight batches and joins the worker threads — a wedged device
+    call is therefore visible as a *hanging close*, which is exactly
+    what the CI serve job's timeout guards.
+
+    ``deliver`` (optional) is called by the completer with each batch's
+    routed documents, in order; a consumer that blocks inside it stalls
+    the completer, which fills the K in-flight slots, which blocks the
+    batcher, which fills the ingest queue, which sheds (or blocks) new
+    arrivals — end-to-end backpressure with no unbounded buffer
+    anywhere.
+    """
+
+    def __init__(self, stage: FilterStage, *, max_batch: int | None = None,
+                 deadline_ms: float = 10.0, queue_cap: int = 64,
+                 max_inflight: int = 2, overload: str = "shed",
+                 deliver: Callable[[list[RoutedDocument]], Any] | None = None,
+                 pad_batches: bool = True,
+                 clock: Callable[[], float] = time.monotonic):
+        if overload not in OVERLOAD_POLICIES:
+            raise ValueError(f"overload must be one of {OVERLOAD_POLICIES}, "
+                             f"got {overload!r}")
+        if queue_cap < 1 or max_inflight < 1:
+            raise ValueError("queue_cap and max_inflight must be >= 1")
+        self.stage = stage
+        self.max_batch = int(max_batch or stage.batch_size)
+        self.deadline_s = float(deadline_ms) / 1e3
+        self.queue_cap = int(queue_cap)
+        self.max_inflight = int(max_inflight)
+        self.overload = overload
+        self.deliver = deliver
+        # compiled-shape discipline: a deadline-closed undersized batch
+        # is padded back to max_batch (repeating its last payload; the
+        # pad rows' verdicts are sliced off) so the device program keeps
+        # ONE batch shape — otherwise every distinct deadline-close size
+        # triggers a fresh compile on the latency path.  Sparse stages
+        # skip it (their match lists carry real doc ids).
+        self.pad_batches = bool(pad_batches) and not stage.sparse
+        self._clock = clock
+
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._not_full = threading.Condition(self._lock)
+        self._queue: deque[ServeRequest] = deque()
+        self._closing = False
+        self._error: BaseException | None = None
+        # dispatched-but-undelivered batches are bounded at K: a slot is
+        # taken at dispatch and released only after delivery
+        self._slots = threading.Semaphore(self.max_inflight)
+        self._comp_cv = threading.Condition()
+        self._completion: deque = deque()
+        self._latencies: list[float] = []
+        self._batch_fills: list[float] = []
+        self.counters = {"admitted": 0, "shed": 0, "completed": 0,
+                         "batches": 0, "size_closes": 0,
+                         "deadline_closes": 0, "flush_closes": 0,
+                         "backpressure_waits": 0, "max_queue_depth": 0}
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+
+        self._pool = ThreadPoolExecutor(max_workers=self.max_inflight,
+                                        thread_name_prefix="serve-filter")
+        self._batcher_t = threading.Thread(target=self._batcher,
+                                           name="serve-batcher", daemon=True)
+        self._completer_t = threading.Thread(target=self._completer,
+                                             name="serve-completer",
+                                             daemon=True)
+        self._batcher_t.start()
+        self._completer_t.start()
+
+    # ------------------------------------------------------------- ingest
+    def submit(self, payload: bytes) -> ServeRequest:
+        """Admit one raw wire payload; returns its ticket immediately.
+
+        Under overload (queue at ``queue_cap``): ``overload="shed"``
+        marks the ticket shed and returns at once; ``"block"`` stalls
+        the caller until the loop drains a slot (producer-side
+        backpressure).  A loop that is closing sheds rather than
+        deadlocking a blocked producer.
+        """
+        req = ServeRequest(payload=payload, t_submit=self._clock())
+        with self._lock:
+            if self.overload == "shed":
+                if len(self._queue) >= self.queue_cap or self._closing:
+                    req.shed = True
+                    self.counters["shed"] += 1
+                    req.done.set()
+                    return req
+            else:
+                while len(self._queue) >= self.queue_cap \
+                        and not self._closing:
+                    self._not_full.wait()
+                if self._closing:
+                    req.shed = True
+                    self.counters["shed"] += 1
+                    req.done.set()
+                    return req
+            req.seq = self.counters["admitted"]
+            self.counters["admitted"] += 1
+            if self._t_first is None:
+                self._t_first = req.t_submit
+            self._queue.append(req)
+            depth = len(self._queue)
+            if depth > self.counters["max_queue_depth"]:
+                self.counters["max_queue_depth"] = depth
+            self._not_empty.notify()
+        return req
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # ----------------------------------------------------------- batching
+    def _batcher(self) -> None:
+        try:
+            while True:
+                with self._lock:
+                    while not self._queue and not self._closing:
+                        self._not_empty.wait()
+                    if not self._queue and self._closing:
+                        break
+                    # batch opens now; close on size or deadline,
+                    # whichever fires first (flush closes immediately)
+                    deadline = self._clock() + self.deadline_s
+                    while (len(self._queue) < self.max_batch
+                           and not self._closing):
+                        left = deadline - self._clock()
+                        if left <= 0:
+                            break
+                        self._not_empty.wait(timeout=left)
+                    n = min(self.max_batch, len(self._queue))
+                    reqs = [self._queue.popleft() for _ in range(n)]
+                    if n == self.max_batch:
+                        self.counters["size_closes"] += 1
+                    elif self._closing:
+                        self.counters["flush_closes"] += 1
+                    else:
+                        self.counters["deadline_closes"] += 1
+                    self.counters["batches"] += 1
+                    self._not_full.notify_all()
+                self._dispatch(reqs)
+        except BaseException as e:  # pragma: no cover - defensive
+            self._fail(e)
+        finally:
+            with self._comp_cv:
+                self._completion.append(None)
+                self._comp_cv.notify()
+
+    def _dispatch(self, reqs: list[ServeRequest]) -> None:
+        """Take an in-flight slot (counting the wait as backpressure)
+        and hand the batch to a worker; completion order is dispatch
+        order regardless of which worker finishes first."""
+        if not self._slots.acquire(blocking=False):
+            with self._lock:
+                self.counters["backpressure_waits"] += 1
+            self._slots.acquire()
+        future = self._pool.submit(self._run_batch,
+                                   [r.payload for r in reqs])
+        with self._comp_cv:
+            self._completion.append((reqs, future))
+            self._comp_cv.notify()
+
+    def _run_batch(self, payloads: list[bytes]):
+        """Worker-thread body: the stage's device bytes→verdict call.
+
+        ``record=False`` — stage stats are mutated only by the
+        single-threaded completer, so K concurrent workers never race
+        the accounting dict.
+        """
+        t0 = time.perf_counter()
+        n = len(payloads)
+        padded = payloads
+        if self.pad_batches and n < self.max_batch:
+            padded = payloads + [payloads[-1]] * (self.max_batch - n)
+        res = self.stage._filter_bytebatch(padded, record=False)
+        if len(padded) != n:
+            res = FilterResult(res.matched[:n], res.first_event[:n],
+                               res.live)
+        return res, [len(p) for p in payloads], time.perf_counter() - t0
+
+    # ----------------------------------------------------------- delivery
+    def _completer(self) -> None:
+        try:
+            while True:
+                with self._comp_cv:
+                    while not self._completion:
+                        self._comp_cv.wait()
+                    item = self._completion.popleft()
+                if item is None:
+                    break
+                reqs, future = item
+                try:
+                    res, nbytes, dt = future.result()
+                except BaseException as e:
+                    self._fail(e, reqs)
+                    self._slots.release()
+                    continue
+                t_done = self._clock()
+                routed = self.stage._fan_out(res, nbytes, base=reqs[0].seq)
+                self.stage._record(res, len(reqs), sum(nbytes), dt)
+                by_doc: dict[int, list[RoutedDocument]] = {}
+                for rd in routed:
+                    by_doc.setdefault(rd.doc_index, []).append(rd)
+                for r in reqs:
+                    r.t_verdict = t_done
+                    r.routed = by_doc.get(r.seq, [])
+                    self._latencies.append(t_done - r.t_submit)
+                    r.done.set()
+                self.counters["completed"] += len(reqs)
+                self._t_last = t_done
+                self._batch_fills.append(len(reqs) / self.max_batch)
+                if self.deliver is not None:
+                    # a stalled consumer stalls HERE, holding the slot:
+                    # that is the backpressure chain's first link
+                    self.deliver(routed)
+                self._slots.release()
+        except BaseException as e:  # pragma: no cover - defensive
+            self._fail(e)
+
+    def _fail(self, e: BaseException,
+              reqs: Sequence[ServeRequest] = ()) -> None:
+        with self._lock:
+            if self._error is None:
+                self._error = e
+            self._not_full.notify_all()
+        for r in reqs:
+            r.done.set()
+
+    # -------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Flush the queue, drain every in-flight batch, join threads.
+
+        Raises the first worker error, if any — a failed batch is never
+        silently swallowed.
+        """
+        with self._lock:
+            self._closing = True
+            self._not_empty.notify_all()
+            self._not_full.notify_all()
+        self._batcher_t.join()
+        self._completer_t.join()
+        self._pool.shutdown(wait=True)
+        if self._error is not None:
+            raise self._error
+
+    def __enter__(self) -> "ServeLoop":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # ------------------------------------------------------------ metrics
+    def slo_summary(self) -> dict:
+        """Latency percentiles + occupancy counters for everything
+        served so far (ms; ``nan`` percentiles until something
+        completes)."""
+        lat_ms = np.asarray(self._latencies) * 1e3
+        c = dict(self.counters)
+        arrived = c["admitted"] + c["shed"]
+        span = ((self._t_last - self._t_first)
+                if self._t_first is not None and self._t_last is not None
+                else 0.0)
+        return {
+            **c,
+            "arrived": arrived,
+            "shed_rate": c["shed"] / max(arrived, 1),
+            "p50_ms": _pct(lat_ms, 50.0),
+            "p99_ms": _pct(lat_ms, 99.0),
+            "p999_ms": _pct(lat_ms, 99.9),
+            "mean_ms": float(lat_ms.mean()) if lat_ms.size else float("nan"),
+            "batch_fill": (float(np.mean(self._batch_fills))
+                           if self._batch_fills else 0.0),
+            "served_per_s": c["completed"] / span if span > 0 else 0.0,
+        }
+
+    def latencies_ms(self) -> np.ndarray:
+        """Per-request enqueue→verdict latencies (ms), completion order."""
+        return np.asarray(self._latencies) * 1e3
+
+    def latency_histogram(self, n_bins: int = 32) -> dict:
+        """Log-spaced latency histogram — the CI artifact payload."""
+        lat = self.latencies_ms()
+        if lat.size == 0:
+            return {"edges_ms": [], "counts": []}
+        lo = max(float(lat.min()), 1e-3)
+        hi = max(float(lat.max()), lo * (1 + 1e-6))
+        edges = np.geomspace(lo, hi, n_bins + 1)
+        counts, _ = np.histogram(lat, bins=edges)
+        return {"edges_ms": edges.tolist(), "counts": counts.tolist()}
+
+
+def _pct(xs: np.ndarray, q: float) -> float:
+    return float(np.percentile(xs, q)) if xs.size else float("nan")
+
+
+# ------------------------------------------------------- arrival traces
+def poisson_arrivals(n: int, rate_hz: float, *, seed: int = 0) -> np.ndarray:
+    """``n`` absolute arrival offsets (s) of a Poisson process."""
+    if rate_hz <= 0:
+        raise ValueError("rate_hz must be > 0")
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+
+def burst_arrivals(n: int, rate_hz: float, *, on_s: float = 0.05,
+                   off_s: float = 0.15, seed: int = 0) -> np.ndarray:
+    """ON/OFF-modulated Poisson: bursts at ``rate_hz`` for ``on_s``,
+    silence for ``off_s`` — the bursty-input scenario the paper's
+    "very high input ratios" motivation describes.  Mean rate is
+    ``rate_hz * on_s / (on_s + off_s)``."""
+    if rate_hz <= 0:
+        raise ValueError("rate_hz must be > 0")
+    rng = np.random.default_rng(seed)
+    out: list[float] = []
+    t = 0.0
+    while len(out) < n:
+        window_end = t + on_s
+        while len(out) < n:
+            t += rng.exponential(1.0 / rate_hz)
+            if t >= window_end:
+                break
+            out.append(t)
+        t = window_end + off_s
+    return np.asarray(out[:n])
+
+def replay_arrivals(n: int, rate_hz: float | None = None) -> np.ndarray:
+    """Deterministic trace: back-to-back (``rate_hz=None``) or evenly
+    spaced at ``rate_hz`` — replaying a fixed request list through the
+    loop (the old batch driver's arrival pattern, as a trace)."""
+    if rate_hz is None or rate_hz <= 0:
+        return np.zeros(n)
+    return np.arange(n, dtype=np.float64) / rate_hz
+
+
+def make_arrivals(kind: str, n: int, *, rate_hz: float,
+                  on_s: float = 0.05, off_s: float = 0.15,
+                  seed: int = 0) -> np.ndarray:
+    """Trace dispatcher for the CLI/bench ``--arrival`` knob."""
+    if kind == "poisson":
+        return poisson_arrivals(n, rate_hz, seed=seed)
+    if kind == "burst":
+        return burst_arrivals(n, rate_hz, on_s=on_s, off_s=off_s, seed=seed)
+    if kind == "replay":
+        return replay_arrivals(n, rate_hz)
+    raise ValueError(f"unknown arrival trace {kind!r} "
+                     f"(poisson|burst|replay)")
+
+
+def run_trace(loop: ServeLoop, payloads: Sequence[bytes],
+              arrivals: np.ndarray, *,
+              clock: Callable[[], float] = time.monotonic,
+              sleep: Callable[[float], Any] = time.sleep
+              ) -> list[ServeRequest]:
+    """Submit ``payloads[i]`` at offset ``arrivals[i]`` (open-loop: the
+    trace does NOT slow down when the service falls behind, which is
+    what makes shed/backpressure measurable).  Returns the tickets."""
+    if len(payloads) != len(arrivals):
+        raise ValueError(f"{len(payloads)} payloads vs "
+                         f"{len(arrivals)} arrival offsets")
+    t0 = clock()
+    tickets = []
+    for payload, due in zip(payloads, arrivals):
+        lag = due - (clock() - t0)
+        if lag > 0:
+            sleep(lag)
+        tickets.append(loop.submit(payload))
+    return tickets

@@ -13,7 +13,6 @@ feedback) is applied — still exercising the numerics path end to end.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ import os
 import time
 from typing import Any, Callable
 
-import jax
 import numpy as np
 
 from ..checkpoint.store import CheckpointStore

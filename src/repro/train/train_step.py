@@ -10,7 +10,6 @@ the 100B+ configs (memory budget in DESIGN.md §5).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

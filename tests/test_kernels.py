@@ -1,5 +1,4 @@
 """Pallas kernels vs pure-jnp ref oracles (interpret=True on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -16,7 +15,6 @@ from repro.kernels.predecode import predecode_pallas
 from repro.kernels.stream_filter import fuse_events, stream_filter_pallas
 from repro.data.generator import DTD, gen_document, gen_profiles
 
-from test_engines import ev_from_nested, fresh_dict
 
 
 class TestPredecodeKernel:

@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.area import (SCENARIOS, area_report, engine_table_bytes,
-                             nfa_bit_cost)
+from repro.core.area import SCENARIOS, area_report, engine_table_bytes
 from repro.core.dictionary import TagDictionary
 from repro.core.engines.matscan import (MatscanEngine, MatscanUnsupported,
                                         exact_class)

@@ -7,7 +7,6 @@ sharded plans, depth-overflow documents, fused byte ingestion and the
 2-D mesh program.  Tests are parametrized over interpret mode (runs
 everywhere) and compiled mode (runs only on a real TPU backend).
 """
-import os
 
 import jax
 import numpy as np

@@ -22,7 +22,7 @@ from repro.core.dictionary import TagDictionary
 from repro.core.events import ByteBatch, EventBatch, encode_bytes
 from repro.core.nfa import compile_queries
 from repro.data.filter_stage import FilterStage
-from repro.data.generator import DTD, gen_corpus, gen_profiles
+from repro.data.generator import DTD, gen_profiles
 from repro.launch.mesh import make_filter_mesh
 
 from test_sharded import ALL_ENGINES, _workload

@@ -7,6 +7,8 @@ shard configuration the flags select, the replica queues printed by the
 CLI must equal what a plain (monolithic, event-ingest) ``FilterStage``
 routes for the same deterministic workload.
 """
+import json
+import math
 import re
 import sys
 
@@ -83,6 +85,57 @@ def test_cli_data_shards_prints_per_axis_stats(monkeypatch, capsys,
     assert "docs/s per data shard" in out
     assert "queries per model shard" in out
     assert "overlapped transfers" in out
+    assert _printed_queues(out) == reference_queues
+
+
+def test_cli_continuous_replay_routes_identically(monkeypatch, capsys,
+                                                  reference_queues):
+    """--arrival switches to the continuous serve loop; with nothing
+    shed its delivery queues must equal the batch driver's (the loop is
+    schedule, not semantics), and the SLO summary must be printed."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--arrival", "replay", "--rate", "2000"])
+    assert f"[serve] routed {REQUESTS} requests (bytes, replay arrivals)" \
+        in out
+    assert _printed_queues(out) == reference_queues
+    m = re.search(r"SLO bytes→verdict: p50 ([0-9.]+) ms, "
+                  r"p99 ([0-9.]+) ms, p999 ([0-9.]+) ms", out)
+    assert m, f"no SLO line in output:\n{out}"
+    assert all(math.isfinite(float(g)) and float(g) > 0 for g in m.groups())
+    assert f"{REQUESTS}/{REQUESTS} served" in out  # nothing shed
+    assert "backpressure waits at K=2" in out
+    # the rest of the driver still runs after loop mode
+    assert "[serve] live churn" in out
+    assert "generated" in out
+
+
+def test_cli_burst_writes_latency_json(monkeypatch, capsys, tmp_path,
+                                       reference_queues):
+    path = tmp_path / "serve_latency.json"
+    out = _run_main(monkeypatch, capsys,
+                    ["--arrival", "burst", "--rate", "800",
+                     "--deadline-ms", "20", "--max-inflight", "4",
+                     "--queue-cap", "32", "--latency-json", str(path)])
+    data = json.loads(path.read_text())
+    assert data["arrival"] == "burst" and data["max_inflight"] == 4
+    slo = data["slo"]
+    assert slo["admitted"] + slo["shed"] == REQUESTS
+    assert math.isfinite(slo["p99_ms"])
+    assert sum(data["histogram"]["counts"]) == slo["completed"]
+    assert len(data["latencies_ms"]) == slo["completed"]
+    # cap 32 over 8 requests: nothing sheds, so parity must hold
+    assert slo["shed"] == 0
+    assert _printed_queues(out) == reference_queues
+
+
+def test_cli_overload_block_never_sheds(monkeypatch, capsys,
+                                        reference_queues):
+    """A tiny queue cap under a hot trace with --overload block: the
+    producer stalls instead of shedding, every request is served."""
+    out = _run_main(monkeypatch, capsys,
+                    ["--arrival", "poisson", "--rate", "4000",
+                     "--queue-cap", "2", "--overload", "block"])
+    assert "shed 0 = 0.0%" in out
     assert _printed_queues(out) == reference_queues
 
 

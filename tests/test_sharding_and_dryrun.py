@@ -10,7 +10,6 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))

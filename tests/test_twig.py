@@ -1,6 +1,5 @@
 """Twig filtering (paper §5 extension): parser, decomposition,
 two-stage engine vs brute-force ground truth."""
-import numpy as np
 import pytest
 from _hypothesis_shim import given, settings, st
 

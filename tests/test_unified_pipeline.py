@@ -11,7 +11,7 @@ import pytest
 
 from repro.core import engines
 from repro.core.dictionary import TagDictionary
-from repro.core.engines import FilterPlan, FilterResult
+from repro.core.engines import FilterResult
 from repro.core.engines.matscan import exact_class
 from repro.core.engines.oracle import filter_document as oracle_filter
 from repro.core.events import (CLOSE, OPEN, PAD, EventBatch, EventStream,
