@@ -21,8 +21,14 @@ from os.path import dirname, join
 
 sys.path.insert(0, join(dirname(__file__), "..", "src"))
 
+import tempfile                                           # noqa: E402
+import time                                               # noqa: E402
+
+from repro.checkpoint import PlanCache                    # noqa: E402
+from repro.core import engines as _engines                # noqa: E402
 from repro.core.dictionary import TagDictionary           # noqa: E402
 from repro.core.events import encode_bytes                # noqa: E402
+from repro.core.nfa import compile_queries                # noqa: E402
 from repro.data.filter_stage import TEXT_FILL, FilterStage  # noqa: E402
 from repro.data.generator import DTD, gen_corpus, gen_profiles  # noqa: E402
 from repro.serve.loop import ServeLoop, make_arrivals, run_trace  # noqa: E402
@@ -105,11 +111,120 @@ def run_serve_latency(n_requests: int = 96, *, engine: str = "streaming",
     return rows
 
 
+def run_hot_swap(n_requests: int = 96, *, engine: str = "streaming",
+                 n_queries: int = 32, query_shards: int = 2,
+                 max_batch: int = 8, deadline_ms: float = 10.0,
+                 n_swaps: int = 6, seed: int = 0) -> list[dict]:
+    """serve_latency row measuring live traffic *through* hot swaps.
+
+    A Poisson trace runs while ``n_swaps`` subscription changes build on
+    the shadow builder and commit at batch boundaries — the row's p50/
+    p99 are the latency SLO *including* swap windows, and the
+    ``swap_*_ms`` columns split the cost into shadow build (off the hot
+    path) vs atomic commit (the only part a request can ever wait on).
+    """
+    profiles, d, raw = _workload(n_requests, n_queries)
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    churn = gen_profiles(dtd, n=n_swaps, length=3, seed=7)
+    stage = FilterStage(profiles, d, engine=engine, keep_unmatched=True,
+                        batch_size=max_batch, query_shards=query_shards)
+    # warm every compiled shape the trace will see, INCLUDING the
+    # post-swap ones: subscribing the churn set grows the pad buckets
+    # (they never shrink on unsubscribe), so the mid-trace re-adds fit
+    # the warmed shapes and the row measures swap cost, not jit compiles
+    warm_gids = [stage.subscribe(q) for q in churn]
+    list(stage.route_bytes(raw))
+    for g in warm_gids:
+        stage.unsubscribe(g)
+    list(stage.route_bytes(raw[:max_batch]))
+    stage.stats = {k: type(v)() for k, v in stage.stats.items()}
+    arrivals = make_arrivals("poisson", len(raw),
+                             rate_hz=POISSON_RATE_HZ, seed=seed)
+    loop = ServeLoop(stage, max_batch=max_batch, deadline_ms=deadline_ms,
+                     queue_cap=256)
+    every = max(1, n_requests // (n_swaps + 1))
+    swap_tickets = []
+    with loop:
+        t0 = time.monotonic()
+        for i, (p, due) in enumerate(zip(raw, arrivals)):
+            lag = due - (time.monotonic() - t0)
+            if lag > 0:
+                time.sleep(lag)
+            loop.submit(p)
+            if i % every == every - 1 and len(swap_tickets) < n_swaps:
+                swap_tickets.append(loop.subscribe(churn[len(swap_tickets)]))
+        for tk in swap_tickets:
+            tk.done.wait(timeout=120)
+    slo = loop.slo_summary()
+    sw = loop.swap_summary()
+    return [{
+        "bench": "serve_latency", "engine": engine, "arrival": "hotswap",
+        "n_requests": n_requests, "n_queries": n_queries,
+        "query_shards": query_shards, "max_batch": max_batch,
+        "deadline_ms": deadline_ms, "n_swaps": n_swaps, "seed": seed,
+        # measurements (all NON_IDENTITY in compare_baseline)
+        "p50_ms": slo["p50_ms"], "p99_ms": slo["p99_ms"],
+        "p999_ms": slo["p999_ms"], "mean_ms": slo["mean_ms"],
+        "completed": slo["completed"], "served_per_s": slo["served_per_s"],
+        "swaps": sw["swaps"], "swap_rollbacks": sw["swap_rollbacks"],
+        "swap_build_p50_ms": sw["build_p50_ms"],
+        "swap_build_p99_ms": sw["build_p99_ms"],
+        "swap_commit_p50_ms": sw["commit_p50_ms"],
+        "swap_commit_p99_ms": sw["commit_p99_ms"],
+    }]
+
+
+def run_plan_cache_cold_start(*, engine: str = "streaming",
+                              n_queries: int = 64, n_parts: int = 4,
+                              seed: int = 0) -> list[dict]:
+    """churn_latency rows: cold start with vs without a warm plan cache.
+
+    ``cold_start`` plans the sharded subscription set from scratch (the
+    crash-recovery / first-boot cost); ``cold_start_cached`` rebuilds
+    the same engine against a warm :class:`~repro.checkpoint.PlanCache`
+    — every part plan is a content-hash hit, so recompilation is
+    skipped and ``speedup_vs_recompile`` is the measured win.
+    """
+    dtd = DTD.generate(n_tags=24, seed=seed)
+    d = TagDictionary()
+    dtd.register(d)
+    profiles = d.rewrite_profile_tags(
+        gen_profiles(dtd, n=n_queries, length=3, seed=seed))
+    nfa = compile_queries(profiles, d, shared=True)
+    with tempfile.TemporaryDirectory() as tmp:
+        t0 = time.perf_counter()
+        eng = _engines.create(engine, nfa, dictionary=d,
+                              plan_cache=PlanCache(tmp))
+        eng.plan_sharded(n_parts)
+        cold_s = time.perf_counter() - t0
+
+        warm_cache = PlanCache(tmp)
+        t0 = time.perf_counter()
+        eng2 = _engines.create(engine, nfa, dictionary=d,
+                               plan_cache=warm_cache)
+        eng2.plan_sharded(n_parts)
+        warm_s = time.perf_counter() - t0
+        hits, misses = warm_cache.hits, warm_cache.misses
+    common = {"bench": "churn_latency", "engine": engine,
+              "n_queries": n_queries, "n_parts": n_parts, "n_ops": 1}
+    return [
+        {**common, "op": "cold_start", "seconds_per_op": round(cold_s, 6)},
+        {**common, "op": "cold_start_cached",
+         "seconds_per_op": round(warm_s, 6),
+         "speedup_vs_recompile": round(cold_s / max(warm_s, 1e-9), 2),
+         "cache_hits": hits, "cache_misses": misses},
+    ]
+
+
 def run(full: bool = False) -> list[dict]:
     if full:
         return (run_serve_latency(256)
-                + run_serve_latency(256, deadline_ms=50.0, max_inflight=4))
-    return run_serve_latency(96)
+                + run_serve_latency(256, deadline_ms=50.0, max_inflight=4)
+                + run_hot_swap(256)
+                + run_plan_cache_cold_start()
+                + run_plan_cache_cold_start(n_queries=128, n_parts=8))
+    return (run_serve_latency(96) + run_hot_swap()
+            + run_plan_cache_cold_start())
 
 
 if __name__ == "__main__":

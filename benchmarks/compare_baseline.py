@@ -81,6 +81,12 @@ NON_IDENTITY = frozenset(METRICS) | frozenset(COMPILED_ONLY_METRICS) | \
     "p999_ms", "mean_ms", "shed_rate", "completed", "served_per_s",
     "batch_fill", "size_closes", "deadline_closes", "flush_closes",
     "backpressure_waits", "max_queue_depth", "deliveries",
+    # fault-tolerance / hot-swap measurement columns: failure accounting
+    # and shadow-swap timing are trace outputs, not configuration
+    "failed", "quarantined", "rejected", "retries", "swaps",
+    "swap_rollbacks", "delivery_errors", "dead_letter_depth",
+    "swap_build_p50_ms", "swap_build_p99_ms", "swap_commit_p50_ms",
+    "swap_commit_p99_ms", "cache_hits", "cache_misses",
 }
 
 

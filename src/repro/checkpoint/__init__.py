@@ -1,2 +1,3 @@
-"""Sharded checkpointing with manifest, async writes, elastic restore."""
-from .store import CheckpointStore  # noqa: F401
+"""Sharded checkpointing with manifest, async writes, elastic restore,
+and the crash-safe compiled-plan cache."""
+from .store import CheckpointStore, PlanCache  # noqa: F401

@@ -37,6 +37,8 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import hashlib
+import json
 import os
 from functools import partial
 from typing import Any, ClassVar, Mapping, Sequence
@@ -661,10 +663,19 @@ class FilterEngine(abc.ABC):
         self.minimize_stats: MinimizeStats | None = None
         if self._minimize:
             nfa, self.minimize_stats = minimize_nfa(nfa)
+        # persistent compiled-plan cache (``plan_cache=`` engine option:
+        # a PlanCache instance or a directory path) — every compilation
+        # site routes through _plan_cached, so cold starts and shadow
+        # rebuilds skip recompilation on a content-hash hit
+        cache = options.pop("plan_cache", None)
+        if isinstance(cache, (str, os.PathLike)):
+            from ...checkpoint.store import PlanCache
+            cache = PlanCache(os.fspath(cache))
+        self.plan_cache = cache
         self.nfa = nfa
         self.options = options
         self.n_queries = nfa.n_queries
-        self.plan_: FilterPlan = self.plan(nfa)
+        self.plan_: FilterPlan = self._plan_cached(nfa)
 
     def _maybe_minimize(self, nfa: NFA) -> NFA:
         """Apply global minimization when the engine was built with it.
@@ -739,6 +750,16 @@ class FilterEngine(abc.ABC):
     def plan_part(self, nfa: NFA, pads: Mapping[str, int]) -> FilterPlan:
         """Compile one partition's NFA at the shared pad targets.
 
+        Routes through the persistent plan cache when one is configured
+        (see :meth:`_plan_cached`); the actual compile is
+        :meth:`_plan_part_uncached`.
+        """
+        return self._plan_cached(nfa, pads)
+
+    def _plan_part_uncached(self, nfa: NFA,
+                            pads: Mapping[str, int]) -> FilterPlan:
+        """The compile body of :meth:`plan_part`.
+
         The pad dict is exposed to :meth:`plan` as ``self._plan_pads``
         for the duration of the call — engines with derived plan tables
         whose shapes are not a pure function of ``(n_states, n_queries)``
@@ -757,6 +778,77 @@ class FilterEngine(abc.ABC):
         finally:
             self._plan_pads = None
         return self._pad_plan_queries(plan, pads["n_queries"])
+
+    # ------------------------------------------------ persistent plan cache
+    def plan_cache_key(self, nfa: NFA,
+                       pads: Mapping[str, int] | None = None) -> str:
+        """Content hash identifying one compiled plan: NFA tables × pad
+        targets × kernel config.
+
+        Everything the compiled tables are a deterministic function of
+        goes into the hash — the dense NFA table contents (so two
+        different profile sets can only collide if they compile
+        identically anyway), the query/tag space sizes, the engine name
+        and its remaining options (block sizes, autotune policy, sparse
+        knobs …), the state multiple, the uniform pad targets, and the
+        kernel-environment switches (interpret mode, VMEM/SMEM budgets)
+        that steer :meth:`kernel_config`.  A stale cache hit is
+        therefore structurally impossible: any input that could change
+        the tables changes the key.
+        """
+        from ...kernels import interpret_default
+
+        h = hashlib.sha256()
+        for part in (
+                "v1", self.name, str(self.state_multiple),
+                repr(sorted((k, repr(v)) for k, v in self.options.items())),
+                str(int(nfa.n_tags)), str(int(nfa.n_queries)),
+                "shared" if nfa.shared else "unshared",
+                repr(sorted((pads or {}).items())),
+                str(bool(interpret_default())),
+                os.environ.get("REPRO_PALLAS_VMEM_BUDGET", ""),
+                os.environ.get("REPRO_PALLAS_SMEM_BUDGET", "")):
+            h.update(part.encode())
+            h.update(b"\x00")
+        for arr in nfa.tables:
+            a = np.asarray(arr)
+            h.update(str(a.dtype).encode())
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()[:40]
+
+    def _plan_cached(self, nfa: NFA,
+                     pads: Mapping[str, int] | None = None) -> FilterPlan:
+        """Compile via the persistent plan cache when one is configured.
+
+        Only device engines cache (host plans hold python objects, and
+        there is no compile cost to skip); a hit rebuilds the
+        :class:`FilterPlan` from the stored numpy tables + JSON metadata
+        with no ``plan()`` call at all — the cold-start/crash-recovery
+        fast path.  A miss compiles and persists through the
+        crash-safe :meth:`repro.checkpoint.store.PlanCache.put`.
+        """
+        cache = self.plan_cache
+        if cache is None or not self.device_sharded:
+            return (self._plan_part_uncached(nfa, pads)
+                    if pads is not None else self.plan(nfa))
+        key = self.plan_cache_key(nfa, pads)
+        hit = cache.get(key)
+        if hit is not None:
+            tables, manifest = hit
+            return FilterPlan(manifest.get("engine", self.name),
+                              {k: jnp.asarray(v) for k, v in tables.items()},
+                              manifest.get("meta", {}))
+        plan = (self._plan_part_uncached(nfa, pads)
+                if pads is not None else self.plan(nfa))
+        # metadata must survive a JSON round-trip bit-exactly (it is jit
+        # aux data); a plan whose meta does not is simply not cached
+        meta = dict(plan.meta)
+        if json.loads(json.dumps(meta)) == meta:
+            cache.put(key, {k: np.asarray(v)
+                            for k, v in plan.tables.items()},
+                      {"engine": plan.engine, "meta": meta})
+        return plan
 
     def _pad_plan_queries(self, plan: FilterPlan,
                           n_queries: int) -> FilterPlan:

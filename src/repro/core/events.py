@@ -34,6 +34,50 @@ from .dictionary import (
 OPEN, CLOSE, PAD = 0, 1, 2
 
 
+# ------------------------------------------------------------ error taxonomy
+class DocumentError(ValueError):
+    """A *document* is bad — not the pipeline.
+
+    The typed error contract the fault-tolerant serve loop is built on
+    (:mod:`repro.serve.loop`): anything raised because of the *content*
+    of specific documents derives from this class and carries the batch
+    indices of the offending documents in ``doc_indices``, so a batch
+    failure can be attributed — and quarantined — per document instead
+    of poisoning the whole loop.  Subclassing :class:`ValueError` keeps
+    every pre-existing ``except ValueError`` / ``pytest.raises``
+    contract intact.
+    """
+
+    def __init__(self, message: str, doc_indices: Sequence[int] = ()):
+        super().__init__(message)
+        #: batch rows of the offending documents (empty when unknown —
+        #: e.g. a single-document host-side validation failure)
+        self.doc_indices: tuple[int, ...] = tuple(int(i) for i in doc_indices)
+
+
+class MalformedDocument(DocumentError):
+    """Bytes/events that do not form a balanced paper-format document
+    (mismatched or unclosed tags, undecodable tag markers)."""
+
+
+class DepthOverflow(DocumentError):
+    """Document nesting exceeds the engine/parser ``max_depth`` bound —
+    parent pointers past the bound would be silently wrong, so the
+    document is rejected instead."""
+
+
+class KernelFault(DocumentError):
+    """A device program failed while filtering specific documents and
+    bisection attributed the fault to them (the residual category: the
+    batch works without these documents, fails with them)."""
+
+
+#: parser/engine nesting-depth bound (the streaming engine's bounded
+#: stack and the parse kernel's parent-pointer scan share it —
+#: re-exported as :data:`repro.kernels.parse.DEFAULT_MAX_DEPTH`)
+DEFAULT_MAX_DEPTH = 64
+
+
 def _as_field(x, dtype):
     """Coerce a batch field without forcing device arrays to host.
 
@@ -97,11 +141,11 @@ class EventStream:
                 depth += 1
             elif k == CLOSE:
                 if not stack or stack[-1] != int(t):
-                    raise ValueError("unbalanced or mismatched close tag")
+                    raise MalformedDocument("unbalanced or mismatched close tag")
                 stack.pop()
                 depth -= 1
         if stack:
-            raise ValueError(f"{len(stack)} unclosed elements")
+            raise MalformedDocument(f"{len(stack)} unclosed elements")
 
     def max_depth(self) -> int:
         delta = np.where(self.kind == OPEN, 1, np.where(self.kind == CLOSE, -1, 0))
@@ -717,6 +761,75 @@ def decode_bytes(buf: bytes, sym_table: np.ndarray) -> EventStream:
     keep = (is_open | is_close) & ok
     kind = np.where(is_close[keep], CLOSE, OPEN).astype(np.int8)
     return EventStream(kind, tag[keep].astype(np.int32))
+
+
+_SYM_TABLE: np.ndarray | None = None
+
+
+def _sym_table() -> np.ndarray:
+    """The (256,) byte→symbol-value table (alphabet is fixed, §3.1)."""
+    global _SYM_TABLE
+    if _SYM_TABLE is None:
+        _SYM_TABLE = TagDictionary().symbol_value_table()
+    return _SYM_TABLE
+
+
+def validate_payload(buf: bytes, *, max_depth: int = DEFAULT_MAX_DEPTH,
+                     doc_index: int | None = None) -> None:
+    """Cheap host-side pre-admission check for one wire payload.
+
+    The serve loop's first failure domain (:meth:`repro.serve.loop.
+    ServeLoop.submit`): known-bad bytes are rejected with a typed
+    :class:`DocumentError` *before* they are batched with healthy
+    documents or reach a kernel.  Vectorized numpy only — a handful of
+    cumsums over the byte buffer, no per-event Python:
+
+    * a ``<`` / ``</`` marker whose symbol bytes are outside the
+      64-symbol alphabet (the kernel would silently drop it, skewing
+      structure) → :class:`MalformedDocument`;
+    * close-without-open or unclosed elements (depth scan goes negative
+      / ends above zero) → :class:`MalformedDocument`;
+    * nesting beyond ``max_depth`` (parent pointers past the parser's
+      bounded stack would be wrong) → :class:`DepthOverflow`.
+
+    An empty payload is *valid*: zero bytes decode to zero events, the
+    inert document every batch-padding path already relies on.  Checks
+    mirror kernel semantics exactly (cf. :func:`decode_bytes`): anything
+    this function admits, the device parser handles deterministically.
+    """
+    idx = () if doc_index is None else (doc_index,)
+    b = np.frombuffer(buf, dtype=np.uint8)
+    n = b.shape[0]
+    if n == 0:
+        return
+    sym = _sym_table()
+    is_lt = b == LT
+    nxt = np.concatenate([b[1:], np.zeros(1, np.uint8)])
+    is_close = is_lt & (nxt == SLASH)
+    is_open = is_lt & ~is_close
+    pos = np.arange(n)
+    s0 = np.where(is_close, pos + 2, pos + 1)
+    s1 = s0 + 1
+    v0 = np.where(s0 < n, sym[b[np.clip(s0, 0, n - 1)]], -1)
+    v1 = np.where(s1 < n, sym[b[np.clip(s1, 0, n - 1)]], -1)
+    ok = (v0 >= 0) & (v1 >= 0)
+    marker = is_open | is_close
+    bad = marker & ~ok
+    if bad.any():
+        where = int(np.flatnonzero(bad)[0])
+        raise MalformedDocument(
+            f"undecodable tag marker at byte {where}", idx)
+    delta = np.where(is_open & ok, 1, 0) - np.where(is_close & ok, 1, 0)
+    depth = np.cumsum(delta)
+    if depth.min(initial=0) < 0:
+        raise MalformedDocument("close tag without matching open", idx)
+    if depth.size and depth[-1] != 0:
+        raise MalformedDocument(f"{int(depth[-1])} unclosed elements", idx)
+    dmax = int(depth.max(initial=0))
+    if dmax > max_depth:
+        raise DepthOverflow(
+            f"document nesting depth {dmax} exceeds max_depth={max_depth}",
+            idx)
 
 
 def event_stream_nbytes(ev: EventStream, text_fill: int = 0) -> int:

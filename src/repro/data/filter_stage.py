@@ -26,6 +26,7 @@ takes raw paper-format byte payloads and parses them *on device*
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -50,6 +51,55 @@ class RoutedDocument:
     matched_profiles: np.ndarray       # (n_matched,) int32 profile indices
     shard: int                         # destination data shard
     nbytes: int
+
+
+class StalePlanError(RuntimeError):
+    """A prepared plan's base epoch no longer matches the live plan.
+
+    Raised by :meth:`FilterStage.commit` when another commit landed
+    between ``prepare_*`` and ``commit`` — the pending plan was built
+    against a subscription set that no longer exists.  The caller
+    re-prepares against the current plan (the synchronous churn methods
+    do this automatically; the serve loop's shadow builder records it as
+    a rollback)."""
+
+
+@dataclass
+class PlanEpoch:
+    """Immutable snapshot of the live plan, taken at dispatch time.
+
+    A batch dispatched against epoch *E* filters with *E*'s engine,
+    sharded plan and gid mapping even if churn commits a replacement
+    mid-flight — verdict columns and the gid axis always agree, which is
+    what makes the serve loop's shadow-plan hot swap safe with in-flight
+    batches (no queue drain)."""
+
+    epoch: int
+    eng: Any
+    sharded: Any                       # ShardedPlan | None
+    gids: np.ndarray
+
+
+@dataclass
+class PendingPlan:
+    """A fully built replacement plan awaiting an atomic commit.
+
+    Produced off the hot path by ``prepare_subscribe`` /
+    ``prepare_unsubscribe`` / ``prepare_rebalance`` — all the expensive
+    work (NFA compile, part re-plan, rebalance migration) happens during
+    *prepare*, against a snapshot, without mutating the stage; ``commit``
+    is a handful of reference assignments under the plan mutex."""
+
+    op: str                            # "subscribe" | "unsubscribe" | "rebalance"
+    base_epoch: int
+    gid: int | None = None
+    stats: dict | None = None          # rebalance stats
+    sharded: Any = None                # replacement ShardedPlan
+    eng: Any = None                    # replacement engine (unsharded path)
+    nfa: Any = None
+    live: dict | None = None
+    gids: np.ndarray | None = None
+    build_s: float = 0.0
 
 
 @dataclass
@@ -155,48 +205,164 @@ class FilterStage:
                       "seconds": 0.0, "pair_matches": 0, "pairs": 0,
                       "put_seconds": 0.0, "overlapped_batches": 0,
                       "verdict_bytes": 0, "rebalances": 0}
+        # plan epoch: bumped on every committed plan change; the mutex
+        # covers only snapshot/commit (reference assignments), never a
+        # compile — prepare_* does the expensive work outside it
+        self._plan_mtx = threading.Lock()
+        self._epoch = 0
 
     # --------------------------------------------------- subscription churn
+    def plan_epoch(self) -> PlanEpoch:
+        """Consistent (epoch, engine, plan, gids) snapshot for dispatch.
+
+        A batch filtered against this snapshot and fanned out with its
+        ``gids`` is correct even if a plan swap commits while the batch
+        is in flight."""
+        with self._plan_mtx:
+            return PlanEpoch(self._epoch, self._eng, self.sharded_,
+                             self._gids)
+
+    def prepare_subscribe(self, profile: Query | str) -> PendingPlan:
+        """Build (but do not install) the plan that adds ``profile``.
+
+        Pure with respect to the stage: sharded stages re-plan only the
+        least-loaded part (:meth:`ShardedPlan.add_queries`), unsharded
+        stages compile the full replacement engine — either way against
+        a snapshot, so a failed build (e.g. a rejected profile) leaves
+        the live plan untouched with nothing to roll back."""
+        q = parse(profile) if isinstance(profile, str) else profile
+        t0 = time.perf_counter()
+        with self._plan_mtx:
+            base = self._epoch
+            sharded = self.sharded_
+            live = dict(self._live)
+            gid = self._next_gid
+        if sharded is not None:
+            sp, new = sharded.add_queries([q])
+            gid = new[0]
+            live[gid] = q
+            return PendingPlan("subscribe", base, gid=gid, sharded=sp,
+                               live=live, gids=sp.live_ids(),
+                               build_s=time.perf_counter() - t0)
+        live[gid] = q
+        gids = sorted(live)
+        nfa = compile_queries([live[g] for g in gids], self.dictionary,
+                              shared=True)
+        eng = engines.create(self.engine, nfa, dictionary=self.dictionary,
+                             event_bucket=self.bucket, **self.engine_options)
+        return PendingPlan("subscribe", base, gid=gid, eng=eng, nfa=nfa,
+                           live=live, gids=np.asarray(gids, np.int32),
+                           build_s=time.perf_counter() - t0)
+
+    def prepare_unsubscribe(self, gid: int) -> PendingPlan:
+        """Build the plan that drops ``gid`` (tombstone when sharded)."""
+        if gid not in self._live:
+            raise KeyError(f"query id {gid} is not subscribed")
+        t0 = time.perf_counter()
+        with self._plan_mtx:
+            base = self._epoch
+            sharded = self.sharded_
+            live = dict(self._live)
+        del live[gid]
+        if sharded is not None:
+            sp = sharded.remove_queries([gid])
+            return PendingPlan("unsubscribe", base, gid=gid, sharded=sp,
+                               live=live, gids=sp.live_ids(),
+                               build_s=time.perf_counter() - t0)
+        gids = sorted(live)
+        nfa = compile_queries([live[g] for g in gids], self.dictionary,
+                              shared=True)
+        eng = engines.create(self.engine, nfa, dictionary=self.dictionary,
+                             event_bucket=self.bucket, **self.engine_options)
+        return PendingPlan("unsubscribe", base, gid=gid, eng=eng, nfa=nfa,
+                           live=live, gids=np.asarray(gids, np.int32),
+                           build_s=time.perf_counter() - t0)
+
+    def prepare_rebalance(self, *, tolerance: float | None = None
+                          ) -> PendingPlan | None:
+        """Build the rebalanced plan (sharded stages only, else None).
+
+        ``pending.sharded`` is ``None`` when no trie groups needed to
+        move — committing such a plan is a no-op that still returns the
+        stats."""
+        if self.sharded_ is None:
+            return None
+        tol = (self.rebalance_tolerance
+               if tolerance is None else tolerance)
+        t0 = time.perf_counter()
+        with self._plan_mtx:
+            base = self._epoch
+            sharded = self.sharded_
+        new, stats = sharded.rebalance(tolerance=tol)
+        moved = bool(stats["moves"])
+        return PendingPlan("rebalance", base, stats=stats,
+                           sharded=new if moved else None,
+                           gids=new.live_ids() if moved else None,
+                           build_s=time.perf_counter() - t0)
+
+    def commit(self, pending: PendingPlan, shard: int | None = None):
+        """Atomically install a prepared plan at the current epoch.
+
+        A handful of reference assignments under the plan mutex —
+        batches dispatched against the previous :meth:`plan_epoch`
+        snapshot keep filtering the old plan; the next snapshot sees the
+        new one.  Raises :class:`StalePlanError` (leaving the live plan
+        untouched) if another commit landed since ``prepare_*``.
+        Returns the gid for churn ops, the stats dict for rebalances."""
+        with self._plan_mtx:
+            if pending.base_epoch != self._epoch:
+                raise StalePlanError(
+                    f"plan prepared against epoch {pending.base_epoch}, "
+                    f"live plan is at {self._epoch}; re-prepare")
+            if pending.op == "rebalance":
+                if pending.sharded is not None:
+                    self.sharded_ = pending.sharded
+                    self._gids = pending.gids
+                    self.stats["rebalances"] += 1
+                    self._epoch += 1
+                return pending.stats
+            self._live = pending.live
+            if pending.sharded is not None:
+                self.sharded_ = pending.sharded
+            else:
+                self.nfa = pending.nfa
+                self._eng = pending.eng
+            self._gids = pending.gids
+            self._epoch += 1
+            if pending.op == "subscribe":
+                self._next_gid = max(self._next_gid, pending.gid + 1)
+                self._grow_shard_map(pending.gid, shard)
+            return pending.gid
+
     def subscribe(self, profile: Query | str, shard: int | None = None) -> int:
         """Add a standing profile live; returns its global query id.
 
         Sharded stages recompile only the least-loaded part
         (:meth:`ShardedPlan.add_queries`); unsharded stages pay the full
         recompile — the cost gap is the point of query sharding.
+        Prepare/commit under the hood: a failed build never touches the
+        live plan, and a concurrent commit just means one re-prepare.
         """
-        q = parse(profile) if isinstance(profile, str) else profile
-        if self.sharded_ is not None:
-            self.sharded_, new = self.sharded_.add_queries([q])
-            gid = new[0]
-            self._live[gid] = q
-            self._gids = self.sharded_.live_ids()
-        else:
-            gid = self._next_gid
-            self._live[gid] = q
+        while True:
+            pending = self.prepare_subscribe(profile)
             try:
-                self._recompile()
-            except Exception:
-                # a rejected profile (e.g. matscan's supported subset)
-                # must not poison the stage: restore the previous set
-                del self._live[gid]
-                self._recompile()
-                raise
-        self._next_gid = max(self._next_gid, gid + 1)
-        self._grow_shard_map(gid, shard)
+                gid = self.commit(pending, shard=shard)
+                break
+            except StalePlanError:
+                continue
         self._after_churn()
         return gid
 
     def unsubscribe(self, gid: int) -> None:
         """Remove a subscription by global id (live, no re-plan when
         sharded — the column is tombstoned)."""
-        if gid not in self._live:
-            raise KeyError(f"query id {gid} is not subscribed")
-        del self._live[gid]
-        if self.sharded_ is not None:
-            self.sharded_ = self.sharded_.remove_queries([gid])
-            self._gids = self.sharded_.live_ids()
-        else:
-            self._recompile()
+        while True:
+            pending = self.prepare_unsubscribe(gid)
+            try:
+                self.commit(pending)
+                break
+            except StalePlanError:
+                continue
         self._after_churn()
 
     def _after_churn(self) -> None:
@@ -218,27 +384,14 @@ class FilterStage:
         invariant).  Returns the rebalance stats, or ``None`` when the
         stage is unsharded.
         """
-        if self.sharded_ is None:
-            return None
-        tol = (self.rebalance_tolerance
-               if tolerance is None else tolerance)
-        new, stats = self.sharded_.rebalance(tolerance=tol)
-        if stats["moves"]:
-            self.sharded_ = new          # atomic swap
-            self._gids = new.live_ids()  # unchanged by invariant, cheap
-            self.stats["rebalances"] += 1
-        return stats
-
-    def _recompile(self) -> None:
-        """Unsharded churn path: from-scratch compile of the live set."""
-        gids = sorted(self._live)
-        self.nfa = compile_queries([self._live[g] for g in gids],
-                                   self.dictionary, shared=True)
-        self._eng = engines.create(self.engine, self.nfa,
-                                   dictionary=self.dictionary,
-                                   event_bucket=self.bucket,
-                                   **self.engine_options)
-        self._gids = np.asarray(gids, np.int32)
+        while True:
+            pending = self.prepare_rebalance(tolerance=tolerance)
+            if pending is None:
+                return None
+            try:
+                return self.commit(pending)
+            except StalePlanError:
+                continue
 
     def _grow_shard_map(self, gid: int, shard: int | None) -> None:
         if gid >= len(self.shard_of_profile):
@@ -293,28 +446,32 @@ class FilterStage:
             self.stats["pairs"] += res.matched.size
             self.stats["verdict_bytes"] += res.matched.size * 5
 
-    def _filter_bytebatch(self, bufs: list[bytes],
-                          record: bool = True) -> FilterResult:
+    def _filter_bytebatch(self, bufs: list[bytes], record: bool = True,
+                          epoch: PlanEpoch | None = None) -> FilterResult:
         """Device-ingest batched path: raw wire bytes in, ``(B, Q)``
         verdicts out, parsed on device by ``engine.filter_bytes`` — no
-        per-event host Python between payload and verdict."""
+        per-event host Python between payload and verdict.  ``epoch``
+        pins the batch to a :meth:`plan_epoch` snapshot so a concurrent
+        plan swap cannot tear engine/plan/gids mid-batch."""
+        eng = self._eng if epoch is None else epoch.eng
+        sharded = self.sharded_ if epoch is None else epoch.sharded
         bb = ByteBatch.from_buffers(bufs, bucket=self.byte_bucket)
         t0 = time.perf_counter()
         if self.data_shards > 1:
-            res = self._eng.filter_bytes_sharded2d(bb, self.sharded_,
-                                                   bucket=self.bucket,
-                                                   mesh=self.mesh)
+            res = eng.filter_bytes_sharded2d(bb, sharded,
+                                             bucket=self.bucket,
+                                             mesh=self.mesh)
             if self.sparse:
-                res = res.sparsify(self.sharded_.live_ids())
-        elif self.sharded_ is not None:
-            res = (self._eng.filter_bytes_sharded_sparse if self.sparse
-                   else self._eng.filter_bytes_sharded)(
-                       bb, self.sharded_, bucket=self.bucket,
+                res = res.sparsify(sharded.live_ids())
+        elif sharded is not None:
+            res = (eng.filter_bytes_sharded_sparse if self.sparse
+                   else eng.filter_bytes_sharded)(
+                       bb, sharded, bucket=self.bucket,
                        mesh=self.mesh)
         elif self.sparse:
-            res = self._eng.filter_bytes_sparse(bb, bucket=self.bucket)
+            res = eng.filter_bytes_sparse(bb, bucket=self.bucket)
         else:
-            res = self._eng.filter_bytes(bb, bucket=self.bucket)
+            res = eng.filter_bytes(bb, bucket=self.bucket)
         dt = time.perf_counter() - t0
         if record:
             self._record(res, bb.batch_size, bb.nbytes_total(), dt)
@@ -445,27 +602,37 @@ class FilterStage:
         return self._fan_out(results, [len(b) for b in bufs], base)
 
     def _fan_out(self, results: FilterResult | SparseResult,
-                 nbytes: list[int], base: int) -> list[RoutedDocument]:
+                 nbytes: list[int], base: int = 0, *,
+                 gids: np.ndarray | None = None,
+                 seqs: Sequence[int] | None = None) -> list[RoutedDocument]:
+        """Verdicts → routed documents.  ``gids`` pins the live-column →
+        global-id mapping to the epoch the batch was filtered under
+        (defaults to the current plan); ``seqs`` assigns explicit,
+        possibly non-contiguous document indices (the serve loop's
+        quarantine retries filter recovered subsets whose seqs are not
+        ``base + i``)."""
         sparse = isinstance(results, SparseResult)
+        live = self._gids if gids is None else gids
         out: list[RoutedDocument] = []
         for i, nb in enumerate(nbytes):
+            doc = base + i if seqs is None else int(seqs[i])
             # result columns are live-query columns; route by global id
             # through the partition index so churn/sharding never change
             # which data shard a profile delivers to.  Sparse producers
             # with live_ids already speak global ids.
             if sparse:
-                gids = results.matching_queries(i)
+                qids = results.matching_queries(i)
                 if results.live_ids is None:
-                    gids = self._gids[gids]
+                    qids = live[qids]
             else:
-                gids = self._gids[results[i].matching_queries()]
-            if len(gids) == 0:
+                qids = live[results[i].matching_queries()]
+            if len(qids) == 0:
                 if self.keep_unmatched:
-                    out.append(RoutedDocument(base + i, gids, 0, nb))
+                    out.append(RoutedDocument(doc, qids, 0, nb))
                 continue
-            for shard in np.unique(self.shard_of_profile[gids]):
-                mine = gids[self.shard_of_profile[gids] == shard]
-                out.append(RoutedDocument(base + i, mine, int(shard), nb))
+            for shard in np.unique(self.shard_of_profile[qids]):
+                mine = qids[self.shard_of_profile[qids] == shard]
+                out.append(RoutedDocument(doc, mine, int(shard), nb))
         return out
 
     # ------------------------------------------------------------- metrics

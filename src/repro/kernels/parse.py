@@ -34,16 +34,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.events import EventBatch, ByteBatch, bucket_length
+from ..core.events import (DEFAULT_MAX_DEPTH, DepthOverflow,  # noqa: F401
+                           EventBatch, ByteBatch, bucket_length)
 from . import ref
 from .predecode import predecode_pallas
 
-#: depth bound for the vectorized parent-pointer stacks (matches the
-#: streaming engine's default bounded stack).  ``parse_batch`` *raises*
-#: on deeper documents by default (``check_depth=True``) — pass a larger
-#: ``max_depth`` for deep corpora; only ``check_depth=False`` silently
-#: clips parents past the bound.
-DEFAULT_MAX_DEPTH = 64
+# DEFAULT_MAX_DEPTH (re-exported above): depth bound for the vectorized
+# parent-pointer stacks (matches the streaming engine's default bounded
+# stack).  ``parse_batch`` *raises* ``DepthOverflow`` on deeper documents
+# by default (``check_depth=True``) — pass a larger ``max_depth`` for
+# deep corpora; only ``check_depth=False`` silently clips parents past
+# the bound.
 
 
 def fused_predecode(b0: jax.Array, b1: jax.Array, b2: jax.Array,
@@ -203,10 +204,13 @@ def parse_batch(bb: ByteBatch, *, n_events: int | None = None,
         jnp.asarray(bb.data), n_events=n_events, max_depth=max_depth,
         use_kernel=use_kernel, interpret=interpret)
     if check_depth:
-        dmax = int(jax.device_get(depth.max()))
+        per_doc = jax.device_get(depth.max(axis=1))
+        dmax = int(per_doc.max(initial=0))
         if dmax > max_depth:
-            raise ValueError(
+            bad = [int(i) for i in (per_doc > max_depth).nonzero()[0]]
+            raise DepthOverflow(
                 f"document nesting depth {dmax} exceeds max_depth="
-                f"{max_depth}; re-parse with parse_batch(..., "
-                f"max_depth={dmax}) or larger")
+                f"{max_depth} (documents {bad}); re-parse with "
+                f"parse_batch(..., max_depth={dmax}) or larger",
+                doc_indices=bad)
     return EventBatch(kind, tag, depth, parent, valid, n_per_doc)

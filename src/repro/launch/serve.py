@@ -61,22 +61,27 @@ from repro.serve.loop import OVERLOAD_POLICIES, ServeLoop, make_arrivals, run_tr
 
 def build_stage(n_replicas: int, *, engine: str = "levelwise",
                 batch_size: int = 8, query_shards: int = 1,
-                data_shards: int = 1, seed: int = 0):
+                data_shards: int = 1, seed: int = 0,
+                plan_cache: str | None = None):
     """The serving driver's pub-sub routing layer, as a reusable piece.
 
     Deterministic for a given ``seed`` (the CLI smoke tests rebuild it
     to assert routed-output parity against ``main``'s printed queues).
     Returns ``(stage, dtd)`` — the workload generator is needed again
-    for payloads and churn profiles.
+    for payloads and churn profiles.  ``plan_cache`` points the engine
+    at a persistent :class:`~repro.checkpoint.PlanCache` directory so a
+    restart skips plan recompilation (cold-start recovery).
     """
     dtd = DTD.generate(n_tags=24, seed=seed)
     d = TagDictionary()
     dtd.register(d)
     profiles = gen_profiles(dtd, n=32, length=3, seed=seed)
+    opts = {"plan_cache": plan_cache} if plan_cache else {}
     # the stage builds its own ("data", "model") mesh when sharded
     stage = FilterStage(profiles, d, n_shards=n_replicas, engine=engine,
                         keep_unmatched=True, batch_size=batch_size,
-                        query_shards=query_shards, data_shards=data_shards)
+                        query_shards=query_shards, data_shards=data_shards,
+                        engine_options=opts)
     return stage, dtd
 
 
@@ -131,6 +136,11 @@ def serve_continuous(stage: FilterStage, raw: list[bytes],
                    "queue_cap": args.queue_cap,
                    "max_inflight": args.max_inflight,
                    "overload": args.overload, "slo": slo,
+                   "swaps": loop.swap_summary(),
+                   "dead_letter": [
+                       {"seq": r["seq"], "error": r["error"],
+                        "message": r["message"]}
+                       for r in loop.dead_letter],
                    "histogram": loop.latency_histogram(),
                    "latencies_ms": loop.latencies_ms().tolist()}
         with open(args.latency_json, "w") as f:
@@ -190,6 +200,10 @@ def main() -> None:
     ap.add_argument("--latency-json", default=None, metavar="PATH",
                     help="write the SLO summary + latency histogram "
                          "JSON here (the CI serve job's artifact)")
+    ap.add_argument("--plan-cache", default=None, metavar="DIR",
+                    help="persistent compiled-plan cache directory: "
+                         "restarts with the same subscription set skip "
+                         "plan recompilation (crash-recovery cold start)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced).with_(vocab=256)
@@ -202,7 +216,8 @@ def main() -> None:
     stage, dtd = build_stage(args.replicas, engine=args.filter_engine,
                              batch_size=args.batch,
                              query_shards=args.query_shards,
-                             data_shards=args.data_shards)
+                             data_shards=args.data_shards,
+                             plan_cache=args.plan_cache)
     payloads = gen_corpus(dtd, n_docs=args.requests, nodes_per_doc=60,
                           seed=1)
 
@@ -231,6 +246,11 @@ def main() -> None:
               f"({slo['completed']}/{slo['arrived']} served at "
               f"{slo['served_per_s']:.0f}/s, shed {slo['shed']} = "
               f"{slo['shed_rate']:.1%})")
+        if slo.get("quarantined") or slo.get("failed"):
+            print(f"[serve] faults: {slo['quarantined']} quarantined "
+                  f"({slo['rejected']} pre-admission), "
+                  f"{slo['failed']} failed, {slo['retries']} retries, "
+                  f"dead-letter depth {slo['dead_letter_depth']}")
         print(f"[serve] loop: {slo['batches']} batches "
               f"(fill {slo['batch_fill']:.2f}; {slo['size_closes']} size / "
               f"{slo['deadline_closes']} deadline / "

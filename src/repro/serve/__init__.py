@@ -2,6 +2,6 @@
 the continuous pub-sub serve loop (admission control, adaptive batching,
 K-deep pipelining, latency SLOs — see :mod:`repro.serve.loop`)."""
 from .engine import ServeEngine  # noqa: F401
-from .loop import (ServeLoop, ServeRequest, burst_arrivals,  # noqa: F401
-                   make_arrivals, poisson_arrivals, replay_arrivals,
-                   run_trace)
+from .loop import (ReconfigTicket, ServeLoop, ServeRequest,  # noqa: F401
+                   burst_arrivals, make_arrivals, poisson_arrivals,
+                   replay_arrivals, run_trace)

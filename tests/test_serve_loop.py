@@ -19,7 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core.dictionary import TagDictionary
-from repro.core.events import encode_bytes
+from repro.core.events import KernelFault, encode_bytes
 from repro.data.filter_stage import TEXT_FILL, FilterStage
 from repro.data.generator import DTD, gen_corpus, gen_profiles
 from repro.serve.loop import (ServeLoop, burst_arrivals, make_arrivals,
@@ -283,11 +283,14 @@ class TestParity:
         assert sum(hist["counts"]) == len(raw)
         assert len(hist["edges_ms"]) == len(hist["counts"]) + 1
 
-    def test_worker_error_propagates_on_close(self):
+    def test_persistent_worker_error_quarantines_not_crashes(self):
+        """A fault that survives retry + bisection quarantines the
+        affected requests as typed ``KernelFault``s — the loop keeps
+        serving and close() does NOT raise (containment, not crash)."""
         profiles, d, raw = _workload(n_docs=2)
         stage = _stage(profiles, d)
 
-        def boom(payloads, record=True):
+        def boom(payloads, record=True, epoch=None):
             raise RuntimeError("device fell over")
 
         stage._filter_bytebatch = boom
@@ -296,8 +299,34 @@ class TestParity:
         tickets = [loop.submit(p) for p in raw]
         for t in tickets:
             assert t.done.wait(timeout=60)
+        loop.close()  # must not raise: the fault was contained
+        for t in tickets:
+            assert t.failed and isinstance(t.error, KernelFault)
+            assert "device fell over" in str(t.error)
+        s = loop.slo_summary()
+        assert s["quarantined"] == len(raw) and s["failed"] == 0
+        assert len(loop.dead_letter) == len(raw)
+
+    def test_worker_error_propagates_on_close_without_recovery(self):
+        """``recover=False`` restores the strict contract: a worker
+        error fails the affected requests and re-raises at close()."""
+        profiles, d, raw = _workload(n_docs=2)
+        stage = _stage(profiles, d)
+
+        def boom(payloads, record=True, epoch=None):
+            raise RuntimeError("device fell over")
+
+        stage._filter_bytebatch = boom
+        loop = ServeLoop(stage, max_batch=BATCH, deadline_ms=5,
+                         queue_cap=8, recover=False)
+        tickets = [loop.submit(p) for p in raw]
+        for t in tickets:
+            assert t.done.wait(timeout=60)
         with pytest.raises(RuntimeError, match="device fell over"):
             loop.close()
+        assert all(t.failed for t in tickets)
+        s = loop.slo_summary()
+        assert s["failed"] == len(raw) and s["quarantined"] == 0
 
 
 # ------------------------------------------------------------ arrival traces
